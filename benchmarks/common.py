@@ -1,0 +1,185 @@
+"""Shared simulation harness for the paper-figure benchmarks.
+
+Every scheme is driven against the SAME StragglerModel (the paper ran all
+EC2 experiments simultaneously for the same reason).  Results are
+(wall_clock_seconds, normalized_error) curves + a time-to-target summary,
+printed as CSV rows `name,us_per_call,derived`.
+
+Scaled-down dims (CPU, single core): the paper's 500k x 1000 matrix is run
+as 50k x 100 by default; every structural parameter (N=10 workers, S, T
+ratios, scheme definitions) matches the paper.  Pass --full for paper dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AnytimeConfig, anytime_round
+from repro.core.assignment import block_slices, worker_sample_ids
+from repro.core.baselines import (
+    fnb_epoch_time,
+    fnb_round,
+    gc_epoch_time,
+    gc_round,
+    make_cyclic_code,
+    sync_epoch_time,
+    sync_round,
+)
+from repro.core.generalized import broadcast_to_workers, finalize, generalized_round
+from repro.core.straggler import StragglerModel
+from repro.data.linreg import LinRegData, make_linreg
+from repro.optim import sgd
+
+
+def linreg_loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+@dataclasses.dataclass
+class SimSetup:
+    data: LinRegData
+    n_workers: int = 10
+    s: int = 0
+    qmax: int = 24  # steps a no-straggle worker fits into T
+    local_batch: int = 32
+    lr: float = 5e-3
+    epochs: int = 30
+    straggler: StragglerModel = dataclasses.field(
+        default_factory=lambda: StragglerModel(kind="shifted_exp", rate=1.0)
+    )
+    budget_t: float = 12.0  # seconds per anytime epoch (base_iter_time = 1)
+    seed: int = 0
+
+    @property
+    def speeds(self):
+        """Fixed per-machine speed multipliers (EC2-style heterogeneity),
+        drawn once per experiment — the same machines are always slower."""
+        return self.straggler.worker_speed(np.random.default_rng(self.seed + 999), self.n_workers)
+
+    def pools(self, s: Optional[int] = None):
+        s = self.s if s is None else s
+        return [worker_sample_ids(v, self.data.m, self.n_workers, s) for v in range(self.n_workers)]
+
+    def batch(self, rng, pools, qmax=None):
+        qmax = qmax or self.qmax
+        idx = np.stack([rng.choice(pools[v], size=(qmax, self.local_batch)) for v in range(self.n_workers)])
+        return (jnp.asarray(self.data.A[idx], jnp.float32), jnp.asarray(self.data.y[idx], jnp.float32))
+
+
+def run_anytime(setup: SimSetup, weighting: str = "anytime", fixed_q: Optional[np.ndarray] = None):
+    """Error-vs-wall-clock for Anytime-Gradients (or its uniform ablation)."""
+    cfg = AnytimeConfig(setup.n_workers, setup.qmax, setup.s, weighting=weighting)
+    rnd = jax.jit(anytime_round(linreg_loss, sgd(setup.lr), cfg))
+    pools = setup.pools()
+    r = np.random.default_rng(setup.seed)
+    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
+    wall, curve = 0.0, []
+    for ep in range(setup.epochs):
+        q = fixed_q if fixed_q is not None else setup.straggler.realize_steps(
+            r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds)
+        params, _, _ = rnd(params, (), setup.batch(r, pools), jnp.asarray(q, jnp.int32))
+        wall += setup.budget_t
+        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
+    return curve
+
+
+def run_generalized(setup: SimSetup, comm_frac: float = 0.5):
+    """Sec.-V generalized scheme; comm window = comm_frac * T."""
+    qc = max(int(setup.qmax * comm_frac), 1)
+    cfg = AnytimeConfig(setup.n_workers, setup.qmax, setup.s)
+    rnd = jax.jit(generalized_round(linreg_loss, sgd(setup.lr), cfg, qc))
+    pools = setup.pools()
+    r = np.random.default_rng(setup.seed)
+    wp = broadcast_to_workers({"x": jnp.zeros(setup.data.d, jnp.float32)}, setup.n_workers)
+    wall, curve = 0.0, []
+    q = None
+    for ep in range(setup.epochs):
+        q = setup.straggler.realize_steps(r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds)
+        qb = setup.straggler.realize_steps(r, setup.n_workers, setup.budget_t * comm_frac, qc, setup.speeds)
+        wp, _, _ = rnd(wp, (), setup.batch(r, pools), setup.batch(r, pools, qc),
+                       jnp.asarray(q, jnp.int32), jnp.asarray(qb, jnp.int32))
+        wall += setup.budget_t * (1.0 + comm_frac)
+        x = finalize(wp, jnp.asarray(q, jnp.int32))
+        curve.append((wall, setup.data.normalized_error(np.asarray(x["x"], np.float64))))
+    return curve
+
+
+def run_sync(setup: SimSetup):
+    rnd = jax.jit(sync_round(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax))
+    pools = setup.pools(0)  # classical sync: no replication
+    r = np.random.default_rng(setup.seed)
+    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
+    wall, curve = 0.0, []
+    for ep in range(setup.epochs):
+        wall += sync_epoch_time(setup.straggler, r, setup.n_workers, setup.qmax, setup.speeds)
+        params, _, _ = rnd(params, (), setup.batch(r, pools))
+        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
+    return curve
+
+
+def run_fnb(setup: SimSetup, n_drop: int):
+    rnd = jax.jit(fnb_round(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax))
+    pools = setup.pools(0)  # FNB has no replication
+    r = np.random.default_rng(setup.seed)
+    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
+    wall, curve = 0.0, []
+    for ep in range(setup.epochs):
+        dt, mask = fnb_epoch_time(setup.straggler, r, setup.n_workers, setup.qmax, n_drop, setup.speeds)
+        wall += dt
+        params, _, _ = rnd(params, (), setup.batch(r, pools), jnp.asarray(mask))
+        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
+    return curve
+
+
+def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1):
+    """GC: one exact full-batch GD step per epoch, fastest N-S wait."""
+    code = make_cyclic_code(setup.n_workers, setup.s, seed=setup.seed)
+    sls = block_slices(setup.data.m, setup.n_workers)
+    A, y = setup.data.A, setup.data.y
+
+    def block_grad(params, j):
+        a, yy = A[sls[j]], y[sls[j]]
+        x = np.asarray(params["x"], np.float64)
+        return {"x": jnp.asarray(2.0 * a.T @ (a @ x - yy) / len(yy), jnp.float32)}
+
+    # full-batch GD needs its own stable lr
+    gd_lr = setup.lr
+    rnd = gc_round(block_grad, code, gd_lr)
+    r = np.random.default_rng(setup.seed)
+    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
+    wall, curve = 0.0, []
+    # one GC "epoch" costs each worker S+1 block passes; in straggler-model
+    # units a block pass ~ (m/N)/local_batch iteration-equivalents
+    steps_per_block = max(setup.data.m // setup.n_workers // setup.local_batch, 1)
+    for ep in range(setup.epochs * epochs_scale):
+        dt, rec = gc_epoch_time(setup.straggler, r, setup.n_workers, setup.s, steps_per_block, setup.speeds)
+        wall += dt
+        params, _ = rnd(params, rec)
+        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
+    return curve
+
+
+def time_to_target(curve, target: float) -> float:
+    for t, e in curve:
+        if e <= target:
+            return t
+    return float("inf")
+
+
+def emit_csv(rows: list[tuple]):
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,30 @@
+"""Paper Fig. 6: Generalized Anytime-Gradients vs vanilla, per EPOCH.
+
+Setup (Sec. V): 10 workers, 500k x 1000 (scaled), T=50s; the generalized
+scheme keeps stepping during the communication window (Eq. 13 mixing) and
+must converge faster per epoch.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SimSetup, make_linreg, run_anytime, run_generalized
+
+
+def run(scale: float = 0.1, epochs: int = 50):
+    m, d = int(500_000 * scale), max(int(1000 * scale), 50)
+    setup = SimSetup(data=make_linreg(m, d, seed=0), n_workers=10, s=0,
+                     qmax=24, epochs=epochs, budget_t=12.0, lr=5e-3)
+    c_van = run_anytime(setup)
+    c_gen = run_generalized(setup, comm_frac=1.0)
+    # compare at equal epoch index (the paper's Fig 6 is error vs epoch)
+    rows = [
+        ("fig6_vanilla_anytime", f"{c_van[-1][1]:.4e}", f"err@{epochs}ep"),
+        ("fig6_generalized", f"{c_gen[-1][1]:.4e}", f"err@{epochs}ep"),
+    ]
+    assert c_gen[-1][1] < c_van[-1][1], "generalized must converge faster per epoch (Fig 6)"
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: XLA reference path timings on CPU (us/call) +
+analytic TPU roofline estimates for the Pallas kernels.
+
+CPU wall-times of interpret-mode Pallas are NOT meaningful TPU numbers, so
+for each kernel we report (a) the jitted XLA-oracle CPU time as a sanity
+signal and (b) the TPU roofline time bound from bytes/flops (what the
+kernel is designed to approach).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # weighted combine: W=16 workers x 8M params (bf16)
+    w, n = 16, 8_000_000
+    x = jnp.asarray(rng.standard_normal((w, n)).astype(np.float32))
+    lam = jnp.asarray(rng.random(w).astype(np.float32))
+    f = jax.jit(ref.weighted_combine_ref)
+    us = _time(f, x, lam)
+    bytes_moved = (w * n + n) * 4
+    rows.append(("kernel_weighted_combine_cpu_oracle", f"{us:.0f}",
+                 f"tpu_roofline_us={bytes_moved/HBM_BW*1e6:.0f}"))
+
+    # flash attention: 1x8 heads x 2048 x 128
+    b, h, s, d = 1, 8, 2048, 128
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    us = _time(f, q, q, q)
+    flops = 4 * b * h * s * s * d / 2  # causal half
+    rows.append(("kernel_flash_attention_cpu_oracle", f"{us:.0f}",
+                 f"tpu_roofline_us={flops/PEAK*1e6:.0f}"))
+
+    # decode attention: 32 x 32k cache x 8 heads x 128
+    b, c, h, d = 32, 32768, 8, 128
+    k = jnp.asarray(rng.standard_normal((b, c, h, d)), jnp.bfloat16)
+    qq = jnp.asarray(rng.standard_normal((b, h, d)), jnp.bfloat16)
+    valid = jnp.ones((c,), bool)
+    f = jax.jit(lambda q, k, v, m: ref.decode_attention_ref(q, k, v, m))
+    us = _time(f, qq, k, k, valid)
+    bytes_moved = 2 * b * c * h * d * 2
+    rows.append(("kernel_decode_attention_cpu_oracle", f"{us:.0f}",
+                 f"tpu_roofline_us={bytes_moved/HBM_BW*1e6:.0f}"))
+
+    # ssm scan: 4 x 2048 x Di 512, N 16
+    b, s, di, n = 4, 2048, 512, 16
+    xx = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, di)) * 0.1, jnp.float32)
+    a = -jnp.asarray(rng.random((di, n)) + 0.2, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    dd = jnp.zeros(di, jnp.float32)
+    f = jax.jit(ref.ssm_scan_ref)
+    us = _time(f, xx, dt, a, bb, cc, dd)
+    bytes_moved = (3 * b * s * di + 2 * b * s * n) * 4
+    rows.append(("kernel_ssm_scan_cpu_oracle", f"{us:.0f}",
+                 f"tpu_roofline_us={bytes_moved/HBM_BW*1e6:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

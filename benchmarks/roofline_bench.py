@@ -1,0 +1,72 @@
+"""Roofline report: aggregate the dry-run sweep into the §Roofline table.
+
+Reads results/dryrun/*.json (produced by `python -m repro.launch.dryrun
+--all --both-meshes`), emits one CSV row per (arch, shape, mesh) with the
+three roofline terms, the bottleneck, and the useful-compute ratio, plus a
+markdown table at results/roofline.md for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load(outdir="results/dryrun"):
+    rows = []
+    for f in sorted(pathlib.Path(outdir).glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            rows.append({"tag": f.stem, "status": d.get("status"), "reason": d.get("reason", d.get("error", ""))})
+            continue
+        r = d["roofline"]
+        h = d.get("hlo_diagnostics", {})
+        rows.append({
+            "tag": f.stem,
+            "status": "ok",
+            "arch": d["arch"],
+            "shape": d["shape"],
+            "mesh": d["mesh"],
+            "t_compute": r["t_compute_s"],
+            "t_memory": r["t_memory_s"],
+            "t_collective": r["t_collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful": d.get("useful_compute_ratio", 0.0),
+            "n_params": d.get("n_params", 0),
+            "hlo_coll_bytes": h.get("coll_bytes", 0.0),
+        })
+    return rows
+
+
+def run(outdir="results/dryrun", write_md: bool = True):
+    rows = []
+    data = load(outdir)
+    ok = [d for d in data if d["status"] == "ok"]
+    for d in ok:
+        dom = max(d["t_compute"], d["t_memory"], d["t_collective"])
+        rows.append((
+            f"roofline_{d['tag']}",
+            f"{dom*1e6:.1f}",
+            f"bottleneck={d['bottleneck']};useful={d['useful']:.3f}",
+        ))
+    if write_md:
+        md = ["| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | useful |",
+              "|---|---|---|---|---|---|---|---|"]
+        for d in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+            md.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                f"{d['t_compute']*1e3:.3f} | {d['t_memory']*1e3:.3f} | "
+                f"{d['t_collective']*1e3:.3f} | **{d['bottleneck']}** | {d['useful']:.3f} |"
+            )
+        skipped = [d for d in data if d["status"] == "skipped"]
+        for d in skipped:
+            md.append(f"| {d['tag'].split('__')[0]} | {d['tag'].split('__')[1]} | {d['tag'].split('__')[2]} | — | — | — | skipped | — |")
+        pathlib.Path("results/roofline.md").write_text("\n".join(md) + "\n")
+    n_fail = sum(1 for d in data if d["status"] not in ("ok", "skipped"))
+    rows.append(("roofline_sweep_status", f"{len(ok)}", f"ok={len(ok)};skipped={len(data)-len(ok)-n_fail};fail={n_fail}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

@@ -1,0 +1,71 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  fig1  heavy-tailed finishing-time histogram stats    [paper Fig 1]
+  fig2  weighting ablation (Thm 3 vs uniform)          [paper Fig 2b]
+  fig3  anytime vs wait-for-all Sync-SGD, wall-clock   [paper Fig 3]
+  fig4  anytime (S=2) vs FNB(B=8) vs Gradient Coding   [paper Fig 4]
+  fig5  real-data-shaped regression, S=1               [paper Fig 5]
+  fig6  generalized anytime, per-epoch                 [paper Fig 6]
+  cor4  variance ~ 1/Q decay                           [paper Cor 4]
+  lm    Thm-3 weighting on NON-CONVEX LM training       [beyond-paper ablation]
+  kernels  Pallas-kernel oracle timings + TPU roofline bounds
+  roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
+figure's headline number where a wall-time makes no sense).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset (fig2,fig3,...)")
+    ap.add_argument("--scale", type=float, default=None, help="data-size scale override")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1_tail,
+        fig2_weighting,
+        fig3_vs_sync,
+        fig4_vs_fnb_gc,
+        fig5_realdata,
+        fig6_generalized,
+        kernel_bench,
+        lm_ablation,
+        roofline_bench,
+        variance_decay,
+    )
+
+    suites = {
+        "fig1": fig1_tail.run,
+        "fig2": lambda: fig2_weighting.run(**({"scale": args.scale} if args.scale else {})),
+        "fig3": lambda: fig3_vs_sync.run(**({"scale": args.scale} if args.scale else {})),
+        "fig4": lambda: fig4_vs_fnb_gc.run(**({"scale": args.scale} if args.scale else {})),
+        "fig5": lambda: fig5_realdata.run(**({"scale": args.scale} if args.scale else {})),
+        "fig6": lambda: fig6_generalized.run(**({"scale": args.scale} if args.scale else {})),
+        "cor4": variance_decay.run,
+        "lm": lm_ablation.run,
+        "kernels": kernel_bench.run,
+        "roofline": roofline_bench.run,
+    }
+    chosen = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in chosen:
+        try:
+            for row in suites[name]():
+                print(",".join(str(c) for c in row), flush=True)
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

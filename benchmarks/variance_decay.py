@@ -1,0 +1,50 @@
+"""Corollary 4: run-to-run variance of F(x)-F(x*) decays ~ 1/Q.
+
+Not a paper figure but the paper's central analytical claim; we measure the
+empirical variance of the one-round optimality gap at growing worker counts
+(fixed per-worker q, so Q = W*q) and report the fitted decay exponent
+(ideal: -1.0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SimSetup, linreg_loss, make_linreg
+from repro.core import AnytimeConfig, anytime_round
+from repro.optim import sgd
+
+
+def run(n_seeds: int = 16):
+    lin = make_linreg(20_000, 20, seed=0)
+    fstar = float(np.mean((lin.A @ lin.x_star - lin.y) ** 2))
+    qmax = 8
+    variances = {}
+    for w in (2, 4, 8, 16):
+        cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+        rnd = jax.jit(anytime_round(linreg_loss, sgd(0.01), cfg))
+        gaps = []
+        for seed in range(n_seeds):
+            r = np.random.default_rng(seed)
+            idx = r.integers(0, lin.m, size=(w, qmax, 8))
+            batch = (jnp.asarray(lin.A[idx], jnp.float32), jnp.asarray(lin.y[idx], jnp.float32))
+            p, _, _ = rnd({"x": jnp.zeros(20, jnp.float32)}, (),
+                          batch, jnp.full((w,), qmax, jnp.int32))
+            x = np.asarray(p["x"], np.float64)
+            gaps.append(float(np.mean((lin.A @ x - lin.y) ** 2)) - fstar)
+        variances[w * qmax] = float(np.var(gaps))
+    qs = np.array(sorted(variances))
+    vs = np.array([variances[q] for q in qs])
+    slope = np.polyfit(np.log(qs), np.log(vs), 1)[0]
+    rows = [("cor4_variance_decay_exponent", f"{slope:.3f}", "ideal=-1.0 (Cor 4)")]
+    for q, v in variances.items():
+        rows.append((f"cor4_var_Q{q}", f"{v:.4e}", "one-round gap variance"))
+    assert slope < -0.5, f"variance must decay with Q (got exponent {slope})"
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

@@ -1,0 +1,36 @@
+"""The paper's experiments end-to-end (Figs 2-6, scaled for one CPU).
+
+Runs every scheme against the same simulated EC2-like cluster and prints
+the error-vs-wall-clock summaries.  This is the thin CLI over
+benchmarks/fig*.py; use --scale 1.0 for the paper's full 500k x 1000 dims
+(needs ~8 GB RAM and patience).
+
+    PYTHONPATH=src python examples/linreg_paper.py [--scale 0.1]
+"""
+import argparse
+
+from benchmarks import fig2_weighting, fig3_vs_sync, fig4_vs_fnb_gc, fig5_realdata, fig6_generalized
+from benchmarks.common import emit_csv
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--epochs", type=int, default=40)
+    args = ap.parse_args()
+    rows = []
+    print("# Fig 2(b): Theorem-3 weighting vs uniform averaging")
+    rows += fig2_weighting.run(scale=min(args.scale, 0.2))
+    print("# Fig 3: Anytime vs wait-for-all Sync-SGD")
+    rows += fig3_vs_sync.run(scale=args.scale, epochs=args.epochs)
+    print("# Fig 4: Anytime(S=2) vs FNB(B=8) vs Gradient Coding")
+    rows += fig4_vs_fnb_gc.run(scale=args.scale, epochs=args.epochs)
+    print("# Fig 5: real-shaped data, S=1")
+    rows += fig5_realdata.run(epochs=args.epochs)
+    print("# Fig 6: Generalized Anytime-Gradients")
+    rows += fig6_generalized.run(scale=args.scale)
+    emit_csv(rows)
+
+
+if __name__ == "__main__":
+    main()

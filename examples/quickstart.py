@@ -1,0 +1,46 @@
+"""Quickstart: Anytime-Gradients in ~40 lines.
+
+Distributed linear regression (the paper's own workload) with 8 simulated
+workers, a heavy-tailed straggler model, 1 persistent straggler, and S=1
+data replication.  Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AnytimeConfig, anytime_round
+from repro.core.straggler import StragglerModel
+from repro.data import AnytimeBatcher, make_linreg
+from repro.optim import sgd
+
+W, QMAX, S, T = 8, 12, 1, 6.0  # workers, step cap, replication, epoch budget
+
+data = make_linreg(20_000, 50, seed=0)
+batcher = AnytimeBatcher({"A": data.A, "y": data.y}, W, S, QMAX, local_batch=32)
+straggler = StragglerModel(kind="pareto", alpha=1.5, persistent_frac=1 / W)
+
+
+def loss_fn(params, mb):
+    r = mb["A"] @ params["x"] - mb["y"]
+    return jnp.mean(r * r)
+
+
+cfg = AnytimeConfig(n_workers=W, max_local_steps=QMAX, s_redundancy=S)
+round_fn = jax.jit(anytime_round(loss_fn, sgd(0.02), cfg))
+
+params = {"x": jnp.zeros(data.d, jnp.float32)}
+state, rng = (), np.random.default_rng(0)
+for epoch in range(25):
+    q = straggler.realize_steps(rng, W, budget_t=T, max_steps=QMAX)  # fixed T!
+    batch = {k: jnp.asarray(v, jnp.float32) for k, v in batcher.round_batch().items()}
+    params, state, m = round_fn(params, state, batch, jnp.asarray(q, jnp.int32))
+    err = data.normalized_error(np.asarray(params["x"], np.float64))
+    print(f"epoch {epoch:2d}  q={q.tolist()}  lambda={np.round(np.asarray(m['lambdas']), 2).tolist()}"
+          f"  err={err:.4f}")
+
+assert err < 0.1, "should converge despite the dead worker"
+print(f"\nconverged to {err:.4f} normalized error — worker {W-1} was a persistent "
+      f"straggler the whole time (lambda=0 every round, its data survived on "
+      f"S+1 replicas).")

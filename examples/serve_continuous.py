@@ -1,0 +1,43 @@
+"""Continuous-batching serving example.
+
+Three requests with different prompt lengths and budgets share TWO decode
+slots: the scheduler prefills each prompt with one flash-path forward,
+splices it into a free slot, decodes all active slots in lockstep with
+per-slot positions, and retires/admits without ever changing tensor shapes
+(so the jitted step never recompiles).
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.scheduler import DecodeScheduler, Request
+from repro.models import model as M
+
+
+def main():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    sched = DecodeScheduler(cfg, params, n_slots=2, max_len=32)
+    for rid, (plen, gen) in enumerate([(6, 5), (10, 8), (4, 6)]):
+        sched.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                             max_new=gen))
+    t0 = time.time()
+    out = sched.run_to_completion()
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"[continuous] 3 requests over 2 slots: {total} tokens in {dt:.1f}s")
+    for rid, toks in sorted(out.items()):
+        print(f"  request {rid}: {toks}")
+    assert set(out) == {0, 1, 2}
+    print("[continuous] all requests served (slots were reused mid-flight)")
+
+
+if __name__ == "__main__":
+    main()

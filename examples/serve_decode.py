@@ -1,0 +1,47 @@
+"""Batched serving example: prefill + greedy decode with each cache family.
+
+Exercises the ring KV cache (sliding-window Mistral backbone), the
+compressed MLA cache (MiniCPM3) and the recurrent xLSTM state — the three
+decode-state families the framework ships — at CPU scale.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.kvcache import init_cache
+
+
+def demo(arch: str, batch=2, prompt=16, gen=12):
+    cfg = get_config(arch).reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt)), jnp.int32)
+    cache = init_cache(cfg, batch, prompt + gen)
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+
+    t0 = time.time()
+    for t in range(prompt):  # prefill (reference path: token-by-token)
+        logits, cache = step(params, cache, prompts[:, t][:, None], jnp.int32(t))
+    tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1)[:, None].astype(jnp.int32)
+    out = []
+    for g in range(gen):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, tok, jnp.int32(prompt + g))
+        tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1)[:, None].astype(jnp.int32)
+    dt = time.time() - t0
+    kind = {"vlm": "ring KV (sliding)", "dense": "MLA compressed", "ssm": "recurrent state"}.get(
+        cfg.family, cfg.family)
+    print(f"{arch:24s} [{kind:18s}] {batch}x({prompt}+{gen}) tokens in {dt:5.1f}s  "
+          f"sample={np.stack(out,1)[0][:6].tolist()}")
+
+
+if __name__ == "__main__":
+    for arch in ("llava-next-mistral-7b", "minicpm3-4b", "xlstm-350m"):
+        demo(arch)
+    print("all three cache families decoded OK")

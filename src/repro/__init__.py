@@ -1,0 +1,20 @@
+"""repro: Anytime Stochastic Gradient Descent (Ferdinand & Draper, 2018) in JAX.
+
+A production-grade, multi-pod JAX training/inference framework whose
+synchronization layer is the paper's Anytime-Gradients technique:
+fixed-time local SGD with variance-optimal weighted combining
+(lambda_v = q_v / sum_u q_u, Theorem 3) and S+1 replicated data placement
+(Table I).
+
+Subpackages:
+  repro.core       the paper's contribution + baselines
+  repro.models     assigned architecture families
+  repro.data       pipelines (Table-I replicated block sampling)
+  repro.optim      optimizers + the paper's step-size schedule
+  repro.kernels    Pallas TPU kernels (+ pure-jnp oracles)
+  repro.sharding   logical-axis partition rules
+  repro.configs    assigned architectures x input shapes
+  repro.launch     mesh / dry-run / train / serve / roofline
+"""
+
+__version__ = "1.0.0"

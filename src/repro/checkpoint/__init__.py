@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import load_pytree, save_pytree, CheckpointManager  # noqa: F401

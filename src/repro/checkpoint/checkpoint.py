@@ -1,0 +1,101 @@
+"""Pytree checkpointing (msgpack + raw numpy buffers, no orbax offline).
+
+Format: a single .ckpt file — msgpack map {treedef: str, leaves: [...]}
+where each leaf is {dtype, shape, data(bytes)}.  bfloat16 round-trips via a
+uint16 view.  Atomic writes (tmp + rename); a step-indexed manager keeps
+the last k checkpoints, mirroring production trainer expectations.
+"""
+from __future__ import annotations
+
+
+import os
+import pathlib
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    return np.asarray(leaf)
+
+
+def _pack_leaf(arr: np.ndarray) -> dict:
+    if arr.dtype == jax.numpy.bfloat16:
+        return {
+            "dtype": "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        return np.frombuffer(d["data"], dtype=np.uint16).reshape(shape).view(jax.numpy.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(shape)
+
+
+def save_pytree(path: str | pathlib.Path, tree: PyTree) -> None:
+    path = pathlib.Path(path)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),  # structural fingerprint (restore uses `like`)
+        "paths": [jax.tree_util.keystr(p) for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]],
+        "leaves": [_pack_leaf(_to_numpy(l)) for l in leaves],
+    }
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str | pathlib.Path, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree.flatten(like)
+    stored = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(stored) != len(leaves_like):
+        raise ValueError(f"checkpoint has {len(stored)} leaves, expected {len(leaves_like)}")
+    for i, (s, l) in enumerate(zip(stored, leaves_like)):
+        lshape = tuple(np.shape(l))
+        if tuple(s.shape) != lshape:
+            raise ValueError(f"leaf {payload['paths'][i]}: shape {s.shape} != {lshape}")
+    return jax.tree.unflatten(treedef, stored)
+
+
+class CheckpointManager:
+    """Step-indexed directory of checkpoints, keeping the newest `keep`."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _path(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:08d}.ckpt"
+
+    def save(self, step: int, tree: PyTree) -> pathlib.Path:
+        p = self._path(step)
+        save_pytree(p, tree)
+        for old in self.all_steps()[: -self.keep] if self.keep else []:
+            self._path(old).unlink(missing_ok=True)
+        return p
+
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.stem.split("_")[1]) for p in self.dir.glob("step_*.ckpt"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: PyTree, step: Optional[int] = None) -> tuple[PyTree, int]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(self._path(step), like), step

@@ -1,0 +1,49 @@
+"""Assigned architecture configs + input shapes.
+
+Each <id>.py defines CONFIG (exact published dims, source cited).  Use
+`get_config(name)` / `ARCH_IDS` for programmatic access; `--arch <id>` in
+the launchers resolves through here.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, MLAConfig, MoEConfig, SSMConfig, XLSTMConfig, input_specs  # noqa: F401
+
+ARCH_IDS = [
+    "llava_next_mistral_7b",
+    "hymba_1_5b",
+    "qwen1_5_32b",
+    "xlstm_350m",
+    "deepseek_v2_lite_16b",
+    "seamless_m4t_medium",
+    "qwen2_0_5b",
+    "minicpm3_4b",
+    "starcoder2_7b",
+    "phi3_5_moe_42b",
+    # the paper's own workload (linear regression) is configured in
+    # repro/configs/anytime_linreg.py, not part of the 10-arch pool
+]
+
+_ALIASES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "hymba-1.5b": "hymba_1_5b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "minicpm3-4b": "minicpm3_4b",
+    "starcoder2-7b": "starcoder2_7b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,32 @@
+"""The paper's own workload: distributed linear regression (Sec. IV).
+
+Fig. 3/6 setup: A in R^{500000 x 1000}, N=10 workers, S=0.
+Fig. 4 setup:   S=2 (each block on 3 workers), T=100s.
+Fig. 5 setup:   YearPredictionMSD-shaped real data (515345 x 90), S=1.
+
+These dataclasses drive benchmarks/fig*.py; the synthetic generator lives
+in repro.data.linreg.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LinRegConfig:
+    n_samples: int = 500_000
+    n_features: int = 1_000
+    noise_std: float = 0.0316  # sqrt(1e-3), paper Sec. IV
+    n_workers: int = 10
+    s_redundancy: int = 0
+    budget_t: float = 200.0  # seconds per epoch (Fig. 3)
+    n_epochs: int = 20
+    lr: float = 1e-4
+    local_batch: int = 64
+    seed: int = 0
+
+
+FIG3 = LinRegConfig()
+FIG4 = LinRegConfig(s_redundancy=2, budget_t=100.0)
+FIG5 = LinRegConfig(n_samples=515_345, n_features=90, s_redundancy=1, budget_t=20.0)
+FIG6 = LinRegConfig(budget_t=50.0)

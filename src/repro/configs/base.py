@@ -1,0 +1,291 @@
+"""Model / run configuration schema.
+
+One `ModelConfig` per assigned architecture lives in repro/configs/<id>.py
+with the exact published dimensions; `reduced()` derives the CPU smoke
+variant (<=2 layers, d_model<=512, <=4 experts) of the SAME family.
+
+`InputShape` enumerates the four assigned workload shapes; `input_specs`
+produces jax.ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Input shapes (assigned)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------------------------
+# Architecture config
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int  # routed experts
+    top_k: int
+    n_shared: int = 0  # always-on shared experts
+    d_ff_expert: int = 0  # per-expert FFN width (0 -> use model d_ff)
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    first_dense_layers: int = 0  # DeepSeek-V2: layer 0 is a dense FFN
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3)."""
+
+    kv_lora_rank: int
+    q_lora_rank: int = 0  # 0 -> full-rank Q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (hymba) parameters."""
+
+    state_dim: int = 16
+    conv_kernel: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model/16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block stack: repeating [m]*m_per_s + [s] superblocks."""
+
+    m_per_s: int = 2  # mLSTM layers per sLSTM layer in a superblock
+    proj_factor_m: float = 2.0  # mLSTM up-projection
+    proj_factor_s: float = 1.333  # sLSTM FFN factor
+    conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    source: str = ""  # citation bracket from the assignment
+
+    # trunk dims
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 32_000
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention
+    attn: str = "full"  # full | sliding | mla | none
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 4_096
+    # long_500k policy: 'native' (ssm/hybrid), 'sliding' (run as explicitly
+    # flagged sliding-window variant), 'skip'
+    long_context: str = "sliding"
+    # apply the sliding-window mask regardless of attention type (the
+    # long_500k variant switch for MLA archs, where attn stays 'mla')
+    force_sliding: bool = False
+    # quantize the decode KV ring to int8 (per-position-per-head absmax
+    # scales) — halves cache bytes, the §Perf memory lever for MHA decode
+    kv_quant: bool = False
+
+    # family extras
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # enc-dec (seamless)
+    n_encoder_layers: int = 0
+    cross_attention: bool = False
+
+    # multimodal stub frontend
+    n_prefix_embeddings: int = 0  # patch/frame embeddings prepended to text
+    prefix_source_dim: int = 0  # raw frontend dim before the projector
+
+    # norm / misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: str = "none"  # none | full | dots  (activation ckpt policy)
+    # compute-path selection: 'xla' pure-jnp, 'pallas' TPU kernels,
+    # 'pallas_interpret' kernels executed in interpret mode (CPU validation)
+    kernel_impl: str = "xla"
+    # width of the `model` mesh axis the params will be sharded over;
+    # drives head/vocab padding (1 = no padding, the smoke-test default)
+    model_parallel: int = 1
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dtype_(self):
+        return jnp.dtype(self.dtype)
+
+    def padded_vocab(self, multiple: int = 128) -> int:
+        return math.ceil(self.vocab / multiple) * multiple
+
+    def padded_heads(self, model_parallel: int) -> int:
+        """q heads padded up so `model_parallel` divides them (MaxText-style;
+        extra heads have zeroed o-proj rows — mathematically inert)."""
+        return math.ceil(self.n_heads / model_parallel) * model_parallel
+
+    def padded_kv_heads(self, model_parallel: int) -> int:
+        return math.ceil(self.n_kv_heads / model_parallel) * model_parallel
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        hd = self.head_dim_
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.attn == "mla" and self.mla is not None:
+            m = self.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            q_in = m.q_lora_rank or d
+            per_layer += (d * m.q_lora_rank if m.q_lora_rank else 0)
+            per_layer += q_in * self.n_heads * qk
+            per_layer += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            per_layer += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            per_layer += self.n_heads * m.v_head_dim * d
+        elif self.attn != "none":
+            per_layer += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+            per_layer += self.n_heads * hd * d
+        if self.moe is not None:
+            fe = self.moe.d_ff_expert or f
+            per_layer += d * self.moe.n_experts  # router
+            per_layer += self.moe.n_experts * 3 * d * fe
+            per_layer += self.moe.n_shared * 3 * d * fe
+        elif f > 0:
+            per_layer += 3 * d * f  # SwiGLU
+        if self.ssm is not None:
+            s = self.ssm
+            di = s.expand * d
+            dtr = s.dt_rank or math.ceil(d / 16)
+            per_layer += d * 2 * di + di * s.conv_kernel + di * (dtr + 2 * s.state_dim)
+            per_layer += dtr * di + di * s.state_dim + di + di * d
+        if self.xlstm is not None:
+            # mLSTM-dominated estimate: qkv + gates + in/out proj
+            di = int(self.xlstm.proj_factor_m * d)
+            per_layer = 2 * d * di + 3 * di * di // max(self.n_heads, 1) // max(self.n_heads, 1)
+            per_layer = 2 * d * di + 3 * di + di * d  # projections + gates
+        total = emb + L * per_layer
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * per_layer
+            if self.cross_attention:
+                total += L * (2 * d * self.n_kv_heads * hd + d * self.n_heads * hd + self.n_heads * hd * d)
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        fe = self.moe.d_ff_expert or self.d_ff
+        dense = self.n_params() - L * self.moe.n_experts * 3 * d * fe
+        active = L * (self.moe.top_k) * 3 * d * fe
+        return dense + active
+
+    # ---- reduced smoke variant ----
+    def reduced(self) -> "ModelConfig":
+        """Same family, tiny dims: <=2 layers, d_model<=512, <=4 experts."""
+        changes: dict = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            head_dim=64 if (self.head_dim or self.attn == "mla") else 0,
+            sliding_window=min(self.sliding_window, 64),
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            n_prefix_embeddings=min(self.n_prefix_embeddings, 16) if self.n_prefix_embeddings else 0,
+            prefix_source_dim=min(self.prefix_source_dim, 128) if self.prefix_source_dim else 0,
+        )
+        if self.moe:
+            changes["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared=min(self.moe.n_shared, 1),
+                d_ff_expert=min(self.moe.d_ff_expert, 256) if self.moe.d_ff_expert else 0,
+                first_dense_layers=min(self.moe.first_dense_layers, 1),
+            )
+        if self.mla:
+            changes["mla"] = dataclasses.replace(
+                self.mla,
+                kv_lora_rank=min(self.mla.kv_lora_rank, 64),
+                q_lora_rank=min(self.mla.q_lora_rank, 96) if self.mla.q_lora_rank else 0,
+                qk_nope_head_dim=32,
+                qk_rope_head_dim=16,
+                v_head_dim=32,
+            )
+        if self.ssm:
+            changes["ssm"] = dataclasses.replace(self.ssm, state_dim=min(self.ssm.state_dim, 8))
+        if self.xlstm:
+            changes["xlstm"] = self.xlstm
+        if self.xlstm:
+            changes["n_layers"] = self.xlstm.m_per_s + 1  # one full superblock
+        return dataclasses.replace(self, **changes)
+
+
+# --------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct only — never allocates)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for every model input of (cfg, shape).
+
+    train:   tokens/labels [global_batch, seq]  (+ prefix embeds for vlm/audio)
+    prefill: tokens [global_batch, seq]
+    decode:  token [global_batch, 1] + position scalar; the KV cache spec is
+             produced separately by models.kvcache.cache_specs.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a cache of length s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["position"] = jax.ShapeDtypeStruct((), i32)
+    if cfg.n_prefix_embeddings and shape.kind != "decode":
+        # STUB modality frontend output: precomputed patch/frame embeddings
+        specs["prefix_embeddings"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_prefix_embeddings, cfg.prefix_source_dim or cfg.d_model), cfg.dtype_
+        )
+    if cfg.n_encoder_layers and shape.kind != "train":
+        # enc-dec serving: encoder memory is consumed by cross-attention
+        specs.setdefault(
+            "prefix_embeddings",
+            jax.ShapeDtypeStruct((b, cfg.n_prefix_embeddings or 1024, cfg.prefix_source_dim or cfg.d_model), cfg.dtype_),
+        )
+    return specs

@@ -1,0 +1,29 @@
+"""hymba-1.5b [hybrid] — parallel attention + Mamba heads per block.
+
+[arXiv:2411.13676]
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+
+Hymba's hybrid head design: every block runs attention heads and Mamba
+(SSM) heads IN PARALLEL on the same input and fuses their (per-branch
+normalized) outputs.  Hymba's meta tokens and cross-layer KV sharing are
+out of scope (DESIGN.md §4); its sliding-window-attention-for-most-layers
+design is kept (window 1024 per the paper), which is what makes the arch
+natively long_500k capable together with the O(1) SSM state.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32_001,
+    attn="sliding",
+    sliding_window=1024,
+    long_context="native",
+    ssm=SSMConfig(state_dim=16, conv_kernel=4, expand=2),
+)

@@ -1,0 +1,31 @@
+"""llava-next-mistral-7b [vlm] — LLaVA-NeXT on a Mistral-7B backbone.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000 — anyres tiling.
+
+The vision tower (CLIP ViT-L/14, anyres tiling to up to 2880 patches) is a
+STUB per the assignment: input_specs provides precomputed patch embeddings
+[B, n_patches, 1024]; the in-scope projector (2-layer GELU MLP, as in the
+model card) + Mistral backbone are implemented.  Mistral natively uses
+sliding-window attention (4096), which also makes this arch long_500k
+capable as a sliding variant.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32_000,
+    attn="sliding",
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    long_context="sliding",
+    n_prefix_embeddings=2880,  # anyres: up to 5 tiles x 576 patches
+    prefix_source_dim=1024,  # CLIP ViT-L/14 hidden
+)

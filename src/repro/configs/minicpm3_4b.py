@@ -1,0 +1,29 @@
+"""minicpm3-4b [dense] — MiniCPM3 with Multi-head Latent Attention.
+
+[hf:openbmb/MiniCPM3-4B]
+62L d_model=2560 40H d_ff=6400 vocab=73448 — MLA.
+MLA dims from the model card: q_lora_rank=768, kv_lora_rank=256,
+qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64.
+"""
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    source="hf:openbmb/MiniCPM3-4B",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab=73_448,
+    attn="mla",
+    long_context="sliding",
+    mla=MLAConfig(
+        kv_lora_rank=256,
+        q_lora_rank=768,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+)

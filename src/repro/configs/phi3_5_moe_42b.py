@@ -1,0 +1,22 @@
+"""phi3.5-moe-42b-a6.6b [moe] — Phi-3.5-MoE: 16 experts, top-2.
+
+[hf:microsoft/Phi-3.5-MoE-instruct]
+32L d_model=4096 32H (GQA kv=8) d_ff=6400(expert) vocab=32064, 16e top-2.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab=32_064,
+    attn="full",
+    long_context="sliding",
+    sliding_window=4096,
+    moe=MoEConfig(n_experts=16, top_k=2, n_shared=0, d_ff_expert=6400),
+)

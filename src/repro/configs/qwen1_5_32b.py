@@ -1,0 +1,24 @@
+"""qwen1.5-32b [dense] — Qwen1.5 32B: MHA with QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B (family card; dims per assignment)]
+64L d_model=5120 40H (GQA kv=40 = MHA) d_ff=27392 vocab=152064 — QKV bias.
+
+long_500k runs only as the explicitly-flagged sliding-window variant
+(full attention at 524288 positions is out of policy, DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen1.5-0.5B",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab=152_064,
+    qkv_bias=True,
+    attn="full",
+    long_context="sliding",
+)

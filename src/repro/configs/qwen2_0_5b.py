@@ -1,0 +1,23 @@
+"""qwen2-0.5b [dense] — Qwen2 0.5B: aggressive GQA, QKV bias, tied embeddings.
+
+[arXiv:2407.10671]
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936 — GQA, QKV bias.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    source="arXiv:2407.10671",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    attn="full",
+    rope_theta=1_000_000.0,
+    long_context="sliding",
+)

@@ -1,0 +1,24 @@
+"""starcoder2-7b [dense] — StarCoder2 7B code model.
+
+[arXiv:2402.19173]
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152 — GQA, RoPE.
+StarCoder2 trains with sliding-window attention (4096); we default to full
+attention for the assigned shapes and use the native window for long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    source="arXiv:2402.19173",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab=49_152,
+    attn="full",
+    sliding_window=4096,
+    long_context="sliding",
+    rope_theta=100_000.0,
+)

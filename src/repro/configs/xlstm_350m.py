@@ -1,0 +1,27 @@
+"""xlstm-350m [ssm] — xLSTM with sLSTM + mLSTM blocks.
+
+[arXiv:2405.04517]
+24L d_model=1024 4H (GQA kv=4) d_ff=0 vocab=50304 — sLSTM + mLSTM blocks.
+
+d_ff=0 per the assignment: xLSTM blocks carry their own up/down projections
+(mLSTM proj factor 2, sLSTM FFN factor 4/3).  The 24 layers are realized as
+8 scanned superblocks of [mLSTM, mLSTM, sLSTM] — the paper's ~[7:1] ratio
+adapted to a homogeneous scan structure (DESIGN.md §4).  Recurrent O(1)
+state makes this the canonical native long_500k architecture.
+"""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    source="arXiv:2405.04517",
+    n_layers=24,  # = 8 superblocks x (2 mLSTM + 1 sLSTM)
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50_304,
+    attn="none",
+    long_context="native",
+    xlstm=XLSTMConfig(m_per_s=2, proj_factor_m=2.0, proj_factor_s=1.333, conv_kernel=4),
+)

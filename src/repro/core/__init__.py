@@ -1,0 +1,29 @@
+"""The paper's primary contribution: Anytime-Gradients (Ferdinand & Draper 2018).
+
+  anytime.py     fixed-time local SGD with masked variable step counts
+                 (Algorithms 1 & 2) — reference AND production form
+  combine.py     Theorem-3 combining weights + weighted all-reduce
+  generalized.py Sec.-V generalized scheme (compute during communication)
+  straggler.py   persistent / non-persistent straggler models (Fig. 1)
+  assignment.py  Table-I S+1 circular replicated data placement
+  theory.py      Thm 1/2/5, Cor 4/6 bound evaluators
+  baselines/     Sync-SGD, fastest-(N-B), Gradient Coding comparators
+"""
+
+from repro.core.anytime import AnytimeConfig, anytime_round, local_sgd, reshape_global_batch  # noqa: F401
+from repro.core.combine import (  # noqa: F401
+    anytime_lambdas,
+    combine_mean_axis,
+    combine_pytrees,
+    generalized_mixing_lambda,
+    uniform_lambdas,
+)
+from repro.core.generalized import broadcast_to_workers, finalize, generalized_round  # noqa: F401
+from repro.core.straggler import StragglerModel, order_statistic_time  # noqa: F401
+from repro.core.assignment import (  # noqa: F401
+    assignment_matrix,
+    block_slices,
+    coverage_after_failures,
+    worker_block_ids,
+    worker_sample_ids,
+)

@@ -1,0 +1,182 @@
+"""Anytime-Gradients (paper Sec. II, Algorithms 1 & 2).
+
+The paper's contract: each worker runs local SGD for a FIXED TIME T and
+completes a VARIABLE number of steps q_v; the master combines the worker
+parameter vectors with the variance-optimal weights lambda_v = q_v / sum q
+(Theorem 3).
+
+SPMD adaptation (see DESIGN.md §3): TPU programs need uniform control flow,
+so one "round" (= paper epoch) is a `lax.scan` over `max_local_steps`
+microbatch steps in which worker v MASKS OUT steps t >= q_v.  The realized
+q_v comes from the straggler model (measured on a real fleet, simulated
+here).  All paper quantities — q_v, Q, lambda_v — are preserved exactly.
+
+The same function is both the single-host reference implementation and the
+production step: the worker axis is the leading array axis, vmapped; under
+pjit that axis is sharded over the ("pod","data") mesh axes and the combine
+lowers to a weighted all-reduce (see launch/train.py, launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combine import anytime_lambdas, combine_pytrees, uniform_lambdas
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+LossFn = Callable[[PyTree, PyTree], jax.Array]  # (params, microbatch) -> scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class AnytimeConfig:
+    """Configuration of the Anytime-Gradients synchronization layer.
+
+    n_workers        N in the paper (= product of worker mesh axes).
+    max_local_steps  the SPMD envelope for the time budget T: scan length.
+                     q_v <= max_local_steps always (the data pipeline sizes
+                     microbatches so a no-straggle worker uses all of them).
+    s_redundancy     S: each data block is placed on S+1 workers (Table I).
+    iterate_mode     'last'    — Algorithm 2 returns the final iterate x_{v,q_v}
+                     'average' — Sec. III-B analysis form x_v = (1/q_v) sum_t x_vt
+    weighting        'anytime' — Theorem 3 lambda_v = q_v / sum q (default)
+                     'uniform' — classical Sync-SGD averaging (ablation, Fig 2b)
+    combine_opt_state whether the lambda-weighted combine also fuses
+                     optimizer moments (beyond-paper; the paper's local
+                     optimizer is plain SGD with no state).
+    """
+
+    n_workers: int
+    max_local_steps: int
+    s_redundancy: int = 0
+    iterate_mode: str = "last"
+    weighting: str = "anytime"
+    combine_opt_state: bool = True
+
+    def __post_init__(self):
+        if self.iterate_mode not in ("last", "average"):
+            raise ValueError(f"bad iterate_mode {self.iterate_mode!r}")
+        if self.weighting not in ("anytime", "uniform"):
+            raise ValueError(f"bad weighting {self.weighting!r}")
+        if self.max_local_steps < 1:
+            raise ValueError("max_local_steps >= 1 required")
+        if not 0 <= self.s_redundancy < self.n_workers:
+            raise ValueError("need 0 <= S < N")
+
+
+def local_sgd(
+    loss_fn: LossFn,
+    opt: Optimizer,
+    params: PyTree,
+    opt_state: PyTree,
+    microbatches: PyTree,
+    q_v: jax.Array,
+    step0: jax.Array,
+    iterate_mode: str = "last",
+) -> tuple[PyTree, PyTree, PyTree, jax.Array]:
+    """WorkerSGD (Algorithm 2) for ONE worker, masked to q_v active steps.
+
+    microbatches: pytree with leading axis max_local_steps (one slice per
+    local step, pre-sampled from bar{A}_v by the pipeline = Alg 2 l.6).
+    Returns (x_v, opt_state_v, iterate, mean_loss) where `iterate` is the
+    quantity the master combines (last or running-average iterate).
+    """
+
+    def body(carry, xs):
+        p, s, acc = carry
+        mb, t = xs
+        active = (t < q_v).astype(jnp.float32)
+        loss, grads = jax.value_and_grad(loss_fn)(p, mb)
+        updates, s_new = opt.update(grads, s, p, step0 + t)
+        # Masked update: steps beyond q_v are identity (the worker "ran out
+        # of time"); optimizer state advances only on active steps.
+        p = jax.tree.map(lambda a, u: a + active.astype(u.dtype) * u, p, updates)
+        s = jax.tree.map(
+            lambda old, new: jnp.where(active > 0, new, old) if old.shape == new.shape else new,
+            s,
+            s_new,
+        )
+        acc = jax.tree.map(lambda ac, pv: ac + active.astype(pv.dtype) * pv, acc, p)
+        return (p, s, acc), loss * active
+
+    n_steps = jax.tree.leaves(microbatches)[0].shape[0]
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    (p_fin, s_fin, acc), losses = jax.lax.scan(
+        body, (params, opt_state, zeros), (microbatches, jnp.arange(n_steps))
+    )
+    qf = jnp.maximum(q_v.astype(jnp.float32), 1.0)
+    if iterate_mode == "average":
+        iterate = jax.tree.map(lambda a: (a / qf.astype(a.dtype)), acc)
+        # workers with q_v == 0 never accumulated; fall back to the input
+        iterate = jax.tree.map(
+            lambda it, p0: jnp.where(q_v > 0, it, p0), iterate, params
+        )
+    else:
+        iterate = p_fin
+    mean_loss = jnp.sum(losses) / qf
+    return p_fin, s_fin, iterate, mean_loss
+
+
+def anytime_round(
+    loss_fn: LossFn,
+    opt: Optimizer,
+    cfg: AnytimeConfig,
+) -> Callable[..., tuple[PyTree, PyTree, dict]]:
+    """Build one Anytime-Gradients round (Algorithm 1, lines 6-15).
+
+    Returned callable:
+        params', opt_state', metrics = round(params, opt_state, batch, q, step)
+    where batch leaves have shape [n_workers, max_local_steps, ...] and
+    q: int[n_workers] are the realized step counts (q_v = 0 for workers
+    outside chi, per Alg 1 l.12-14 — covers persistent stragglers AND
+    T_c timeouts with the same masking path).
+    """
+
+    def round_fn(params, opt_state, batch, q, step=jnp.zeros((), jnp.int32)):
+        worker_fn = lambda mb, qv: local_sgd(
+            loss_fn, opt, params, opt_state, mb, qv, step, cfg.iterate_mode
+        )
+        _, s_stack, x_stack, losses = jax.vmap(worker_fn)(batch, q)
+
+        if cfg.weighting == "anytime":
+            lam = anytime_lambdas(q)  # Theorem 3
+        else:
+            lam = uniform_lambdas(q > 0)
+        new_params = combine_pytrees(x_stack, lam)  # Alg 1 l.15
+        if cfg.combine_opt_state:
+            new_opt_state = combine_pytrees(s_stack, lam)
+        else:
+            # keep worker-0 state (paper-faithful: plain SGD has no state)
+            new_opt_state = jax.tree.map(lambda s: s[0], s_stack)
+        metrics = {
+            "loss": jnp.sum(lam * losses),
+            "lambdas": lam,
+            "q_total": jnp.sum(q),
+            "worker_loss": losses,
+        }
+        return new_params, new_opt_state, metrics
+
+    return round_fn
+
+
+def reshape_global_batch(batch: PyTree, n_workers: int, max_local_steps: int) -> PyTree:
+    """[global_batch, ...] -> [W, q_max, global_batch/(W*q_max), ...].
+
+    The launcher feeds a flat global batch (the dry-run input spec);
+    this carves it into per-worker microbatch streams.
+    """
+
+    def _one(x: jax.Array) -> jax.Array:
+        gb = x.shape[0]
+        per = gb // (n_workers * max_local_steps)
+        if per * n_workers * max_local_steps != gb:
+            raise ValueError(
+                f"global batch {gb} not divisible by W*q_max = "
+                f"{n_workers}*{max_local_steps}"
+            )
+        return x.reshape((n_workers, max_local_steps, per) + x.shape[1:])
+
+    return jax.tree.map(_one, batch)

@@ -1,0 +1,65 @@
+"""Data partition and allocation (paper Sec. II-B, Table I).
+
+The dataset A is split into N equal blocks A_1..A_N.  Each worker receives
+S+1 blocks via circular shift so that EVERY block lives on exactly S+1
+workers; up to S persistent stragglers therefore lose no data.  Worker v's
+local dataset is
+
+    bar{A}_v = (A_v, A_{v+1}, ..., A_{v+S})   (indices mod N)
+
+Algorithm 2 l.6 then samples uniformly from bar{A}_v, i.e. from the
+m(S+1)/N samples the worker holds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def worker_block_ids(v: int, n_workers: int, s: int) -> list[int]:
+    """Blocks assigned to worker v (0-indexed), Table I circular shift."""
+    if not 0 <= s < n_workers:
+        raise ValueError(f"need 0 <= S < N, got S={s}, N={n_workers}")
+    return [(v + j) % n_workers for j in range(s + 1)]
+
+
+def assignment_matrix(n_workers: int, s: int) -> np.ndarray:
+    """Boolean [N_workers, N_blocks] matrix; row v marks bar{A}_v (Table I)."""
+    mat = np.zeros((n_workers, n_workers), dtype=bool)
+    for v in range(n_workers):
+        mat[v, worker_block_ids(v, n_workers, s)] = True
+    return mat
+
+
+def block_slices(m: int, n_blocks: int) -> list[slice]:
+    """Split m samples into n_blocks near-equal contiguous slices.
+
+    The paper assumes N | m; we support ragged m by distributing the
+    remainder over the first blocks (sizes differ by at most 1).
+    """
+    base, rem = divmod(m, n_blocks)
+    slices, start = [], 0
+    for b in range(n_blocks):
+        size = base + (1 if b < rem else 0)
+        slices.append(slice(start, start + size))
+        start += size
+    return slices
+
+
+def worker_sample_ids(v: int, m: int, n_workers: int, s: int) -> np.ndarray:
+    """Global sample indices making up bar{A}_v (concatenated blocks)."""
+    sl = block_slices(m, n_workers)
+    ids = [np.arange(sl[b].start, sl[b].stop) for b in worker_block_ids(v, n_workers, s)]
+    return np.concatenate(ids)
+
+
+def coverage_after_failures(n_workers: int, s: int, failed: set[int]) -> bool:
+    """True iff every block survives on >= 1 non-failed worker.
+
+    Guaranteed whenever |failed| <= S (the paper's robustness claim);
+    used by tests and by the launcher's failure-injection path.
+    """
+    mat = assignment_matrix(n_workers, s)
+    alive = np.ones(n_workers, dtype=bool)
+    for f in failed:
+        alive[f] = False
+    return bool(np.all(mat[alive].any(axis=0)))

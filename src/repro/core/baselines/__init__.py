@@ -1,0 +1,22 @@
+"""Baseline straggler-mitigation schemes the paper compares against.
+
+  sync_sgd        classical wait-for-all synchronous SGD [Zinkevich et al.]
+  fnb             fastest (N-B): drop the B slowest workers [Pan et al. 2017]
+  gradient_coding coded redundant gradients, exact decode from any N-S
+                  workers [Tandon et al. 2017]
+
+All are simulated against the SAME StragglerModel as Anytime-Gradients so
+benchmarks compare error-vs-wall-clock fairly (paper Sec. IV ran all
+schemes simultaneously on EC2 for the same reason).
+"""
+
+from repro.core.baselines.sync_sgd import sync_round, sync_epoch_time  # noqa: F401
+from repro.core.baselines.fnb import fnb_round, fnb_epoch_time  # noqa: F401
+from repro.core.baselines.gradient_coding import (  # noqa: F401
+    GradientCode,
+    make_cyclic_code,
+    gc_decode_weights,
+    gc_round,
+    gc_epoch_time,
+)
+from repro.core.baselines.async_sgd import async_run, async_wall_clock  # noqa: F401

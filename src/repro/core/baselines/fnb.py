@@ -1,0 +1,65 @@
+"""Fastest (N-B) synchronous SGD [Pan et al., ICLR-W 2017] ("FNB").
+
+The master waits only for the first N-B workers, averaging them uniformly;
+the partial work of the B slowest is DISCARDED (the paper's key criticism:
+with persistent stragglers this permanently loses a slice of the data and
+biases the solution — [Tandon et al.] Fig. 7).
+
+We reuse the anytime machinery: drop-out is q_v = 0 + uniform weighting on
+the survivors.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.anytime import AnytimeConfig, anytime_round
+from repro.core.straggler import StragglerModel, order_statistic_time
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def fastest_mask(finish: np.ndarray, n_drop: int) -> np.ndarray:
+    """Boolean mask of the N - n_drop fastest workers this epoch."""
+    n = finish.shape[0]
+    keep = n - n_drop
+    order = np.argsort(finish, kind="stable")
+    mask = np.zeros(n, dtype=bool)
+    mask[order[:keep]] = True
+    # a persistent straggler (inf) can never be kept even if n_drop is small
+    mask &= np.isfinite(finish)
+    return mask
+
+
+def fnb_round(loss_fn: Callable, opt: Optimizer, n_workers: int, k_steps: int):
+    """One FNB epoch. Caller passes the finisher mask for this epoch."""
+    cfg = AnytimeConfig(
+        n_workers=n_workers,
+        max_local_steps=k_steps,
+        weighting="uniform",
+        iterate_mode="last",
+    )
+    inner = anytime_round(loss_fn, opt, cfg)
+
+    def round_fn(params, opt_state, batch, finisher_mask, step=0):
+        q = jnp.where(finisher_mask, k_steps, 0).astype(jnp.int32)
+        return inner(params, opt_state, batch, q, step)
+
+    return round_fn
+
+
+def fnb_epoch_time(
+    model: StragglerModel,
+    rng: np.random.Generator,
+    n_workers: int,
+    k_steps: int,
+    n_drop: int,
+    worker_speed: np.ndarray | None = None,
+) -> tuple[float, np.ndarray]:
+    """Wall-clock = (N-B)-th order statistic; also returns the finisher mask."""
+    finish = model.finishing_times(rng, n_workers, k_steps, worker_speed)
+    t = order_statistic_time(finish, n_workers - n_drop)
+    return t, fastest_mask(finish, n_drop)

@@ -1,0 +1,187 @@
+"""Gradient Coding [Tandon, Lei, Dimakis, Karampatziakis, ICML 2017].
+
+Data is split into N blocks; worker v is assigned the S+1 blocks
+{v, v+1, ..., v+S} (cyclic, same support as the paper's Table I) and sends
+ONE coded vector
+
+    c_v = sum_j B[v, j] * g_j        (g_j = gradient over block j)
+
+The code matrix B (cyclic support, S+1 nonzeros per row) is built so that
+for ANY set chi of N-S received workers there exist decode weights a with
+
+    a^T B[chi, :] = 1^T   =>   sum_v a_v c_v = sum_j g_j = full gradient.
+
+Construction (Tandon et al., Algorithm 2): draw H in R^{S x N} random with
+H @ 1 = 0; every row of B is placed in null(H) — an (N-S)-dim subspace that
+contains the all-ones vector — by solving an S x S system on the row's
+support.  Any N-S rows then (generically) span null(H) and hence 1.  We
+verify decodability over all / sampled subsets at construction and resample
+on the measure-zero failure event.
+
+Cost model: each worker computes S+1 block gradients per epoch (the
+redundancy the paper calls "wasteful" — it buys robustness but no speed),
+and the master waits for the fastest N-S workers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assignment import worker_block_ids
+from repro.core.straggler import StragglerModel, order_statistic_time
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientCode:
+    n_workers: int
+    s: int
+    B: np.ndarray  # [N, N] code matrix, cyclic support, width S+1
+
+    @property
+    def n_wait(self) -> int:
+        return self.n_workers - self.s
+
+
+def _decode_exists(B: np.ndarray, rows: tuple[int, ...]) -> tuple[bool, np.ndarray]:
+    """Least-squares solve a^T B[rows] = 1^T; exact iff residual ~ 0."""
+    sub = B[list(rows)]  # [n-s, n]
+    ones = np.ones(B.shape[1])
+    a, *_ = np.linalg.lstsq(sub.T, ones, rcond=None)
+    ok = bool(np.allclose(sub.T @ a, ones, atol=1e-8))
+    return ok, a
+
+
+def make_cyclic_code(n_workers: int, s: int, seed: int = 0, max_tries: int = 16) -> GradientCode:
+    """Random cyclic-support code with verified any-(N-S)-subset decodability.
+
+    Verification enumerates all C(N, N-S) subsets for small N (the paper's
+    experiments use N=10, S<=2) and falls back to sampling 200 subsets when
+    the count explodes.
+    """
+    if not 0 <= s < n_workers:
+        raise ValueError("need 0 <= S < N")
+    rng = np.random.default_rng(seed)
+    n = n_workers
+    for _ in range(max_tries):
+        if s == 0:
+            # no redundancy: B = I, every worker must report (N-0 = N)
+            B = np.eye(n)
+        else:
+            # H in R^{s x n} with H @ 1 = 0; rows of B live in null(H)
+            H = rng.standard_normal((s, n))
+            H[:, -1] = -H[:, :-1].sum(axis=1)
+            B = np.zeros((n, n))
+            for v in range(n):
+                cols = worker_block_ids(v, n, s)
+                # first support coefficient fixed to 1; solve the rest so
+                # that H @ B[v] = 0  (S equations, S unknowns)
+                rest = cols[1:]
+                sol = np.linalg.solve(H[:, rest], -H[:, cols[0]])
+                B[v, cols[0]] = 1.0
+                B[v, rest] = sol
+        # verify
+        from math import comb
+
+        total = comb(n, n - s)
+        if total <= 512:
+            subsets = itertools.combinations(range(n), n - s)
+        else:
+            subsets = (
+                tuple(sorted(rng.choice(n, size=n - s, replace=False))) for _ in range(200)
+            )
+        if all(_decode_exists(B, rows)[0] for rows in subsets):
+            return GradientCode(n, s, B)
+    raise RuntimeError("failed to construct a decodable cyclic gradient code")
+
+
+def gc_decode_weights(code: GradientCode, received: np.ndarray) -> np.ndarray:
+    """Decode vector a (padded with zeros on non-received workers).
+
+    received: boolean [N]; requires >= N-S received (use the fastest N-S).
+    """
+    rows = tuple(np.flatnonzero(received)[: code.n_wait])
+    if len(rows) < code.n_wait:
+        raise ValueError(
+            f"gradient coding needs {code.n_wait} workers, got {int(received.sum())}"
+        )
+    ok, a_sub = _decode_exists(code.B, rows)
+    if not ok:
+        raise RuntimeError("undecodable received set (measure-zero event)")
+    a = np.zeros(code.n_workers)
+    a[list(rows)] = a_sub
+    return a
+
+
+def gc_round(
+    block_grad_fn: Callable[[PyTree, int], PyTree],
+    code: GradientCode,
+    lr: float,
+):
+    """One gradient-coding epoch = ONE exact full-batch gradient step.
+
+    block_grad_fn(params, j) -> gradient pytree over data block j.
+    The jitted path stacks per-block gradients; coding/decoding are linear
+    maps so we fuse them: sum_v a_v sum_j B[v,j] g_j = sum_j (a^T B)_j g_j,
+    with (a^T B) == 1 on a decodable set — but we keep the two-stage form to
+    faithfully model what each worker transmits.
+    """
+
+    def round_fn(params, received: np.ndarray, step=0):
+        a = gc_decode_weights(code, received)  # host-side decode (master)
+        # worker encodes: c_v = sum_j B[v,j] g_j over its S+1 blocks
+        coded = []
+        for v in range(code.n_workers):
+            if not received[v]:
+                continue
+            gv = None
+            for j in worker_block_ids(v, code.n_workers, code.s):
+                g = block_grad_fn(params, j)
+                scale = code.B[v, j]
+                gv = (
+                    jax.tree.map(lambda x: scale * x, g)
+                    if gv is None
+                    else jax.tree.map(lambda acc, x: acc + scale * x, gv, g)
+                )
+            coded.append((v, gv))
+        # master decodes: g = sum_v a_v c_v
+        full = None
+        for v, cv in coded:
+            full = (
+                jax.tree.map(lambda x: a[v] * x, cv)
+                if full is None
+                else jax.tree.map(lambda acc, x: acc + a[v] * x, full, cv)
+            )
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, full)
+        return new_params, full
+
+    return round_fn
+
+
+def gc_epoch_time(
+    model: StragglerModel,
+    rng: np.random.Generator,
+    n_workers: int,
+    s: int,
+    steps_per_block: int,
+    worker_speed: np.ndarray | None = None,
+) -> tuple[float, np.ndarray]:
+    """Wall-clock: each worker computes S+1 block-gradients; wait for N-S.
+
+    Returns (epoch_time, received_mask). steps_per_block converts "one block
+    gradient" into iteration units of the shared straggler model.
+    """
+    k = steps_per_block * (s + 1)
+    finish = model.finishing_times(rng, n_workers, k, worker_speed)
+    t = order_statistic_time(finish, n_workers - s)
+    order = np.argsort(finish, kind="stable")
+    received = np.zeros(n_workers, dtype=bool)
+    received[order[: n_workers - s]] = True
+    received &= np.isfinite(finish)
+    return t, received

@@ -1,0 +1,50 @@
+"""Classical synchronous SGD: wait for ALL workers, uniform averaging.
+
+Each worker runs a FIXED number k of local SGD steps over its shard, the
+master waits for every worker (Fig. 3's "wait-for-all" comparator) and
+averages uniformly, lambda_v = 1/N.  Wall-clock per epoch is the MAX of the
+worker finishing times — the straggler pays the bill.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.anytime import AnytimeConfig, anytime_round
+from repro.core.straggler import StragglerModel, order_statistic_time
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def sync_round(loss_fn: Callable, opt: Optimizer, n_workers: int, k_steps: int):
+    """One Sync-SGD epoch = anytime round with q_v = k for all, uniform weights."""
+    cfg = AnytimeConfig(
+        n_workers=n_workers,
+        max_local_steps=k_steps,
+        weighting="uniform",
+        iterate_mode="last",
+    )
+    inner = anytime_round(loss_fn, opt, cfg)
+
+    def round_fn(params, opt_state, batch, step=0):
+        import jax.numpy as jnp
+
+        q = jnp.full((n_workers,), k_steps, dtype=jnp.int32)
+        return inner(params, opt_state, batch, q, step)
+
+    return round_fn
+
+
+def sync_epoch_time(
+    model: StragglerModel,
+    rng: np.random.Generator,
+    n_workers: int,
+    k_steps: int,
+    worker_speed: np.ndarray | None = None,
+) -> float:
+    """Wall-clock: N-th order statistic (== max). inf if any persistent straggler."""
+    finish = model.finishing_times(rng, n_workers, k_steps, worker_speed)
+    return order_statistic_time(finish, n_workers)

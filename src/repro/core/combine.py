@@ -1,0 +1,91 @@
+"""Combining operation at the master node (Algorithm 1, step 15).
+
+The paper's central analytical result (Theorem 3): given per-worker step
+counts q_v, the combining weights
+
+    lambda_v = q_v / sum_u q_u
+
+minimize the variance bound on F(x) - F(x*) (Theorem 2 / Eq. 7), subject to
+sum_v lambda_v = 1, lambda_v >= 0.  Workers whose update never arrived
+(v not in chi, Algorithm 1 l.12-14) are handled by q_v = 0 => lambda_v = 0.
+
+On the TPU mesh there is no physical master: the combine is a weighted
+all-reduce, x <- psum(q_v * x_v) / psum(q_v) over the worker mesh axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def anytime_lambdas(q: jax.Array) -> jax.Array:
+    """Theorem 3 weights: lambda_v = q_v / sum(q).
+
+    q: [W] number of gradient steps completed per worker (int or float).
+       q_v = 0 encodes "not received / persistent straggler" (Alg 1 l.13).
+    Returns float32 [W] summing to 1 (uniform fallback if all q are zero,
+    which only happens when every worker stalled; the combine is then a
+    no-op average of identical inputs).
+    """
+    q = q.astype(jnp.float32)
+    total = jnp.sum(q)
+    n = q.shape[0]
+    safe = jnp.where(total > 0, q / jnp.maximum(total, 1.0), jnp.ones_like(q) / n)
+    return safe
+
+
+def uniform_lambdas(mask: jax.Array) -> jax.Array:
+    """Classical Sync-SGD weights: 1/|chi| on received workers (mask==True)."""
+    m = mask.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    return m / cnt
+
+
+def generalized_mixing_lambda(q_total: jax.Array, q_bar_v: jax.Array) -> jax.Array:
+    """Eq. (13): lambda_vt = sum_u q_u / (q_bar_v + sum_u q_u).
+
+    q_total: scalar, total steps across workers in the epoch (sum q_v).
+    q_bar_v: [W] or scalar, steps worker v completed during the
+             worker->master->worker communication window.
+    """
+    q_total = q_total.astype(jnp.float32)
+    q_bar_v = q_bar_v.astype(jnp.float32)
+    return q_total / jnp.maximum(q_bar_v + q_total, 1e-9)
+
+
+def combine_pytrees(worker_params: PyTree, lam: jax.Array) -> PyTree:
+    """x = sum_v lambda_v x_v for a pytree whose leaves have leading axis W.
+
+    This is the reference (pure jnp) path; the Pallas `weighted_combine`
+    kernel in repro.kernels implements the same contraction with explicit
+    VMEM tiling for the TPU hot path (see repro.kernels.ops.combine).
+    """
+
+    def _one(leaf: jax.Array) -> jax.Array:
+        w = lam.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(w * leaf, axis=0)
+
+    return jax.tree.map(_one, worker_params)
+
+
+def combine_mean_axis(worker_params: PyTree, q: jax.Array, axis_name: str | tuple[str, ...]) -> PyTree:
+    """Distributed combine inside shard_map: weighted psum over mesh axes.
+
+    Each caller holds its own worker replica `worker_params` (no stacked
+    axis) and its scalar step count q_v; the result is the combined
+    parameter vector, identical on all workers:
+
+        x = psum(q_v * x_v) / psum(q_v)
+    """
+    qf = q.astype(jnp.float32)
+    total = jax.lax.psum(qf, axis_name)
+
+    def _one(leaf: jax.Array) -> jax.Array:
+        num = jax.lax.psum((qf.astype(leaf.dtype)) * leaf, axis_name)
+        return num / jnp.maximum(total, 1.0).astype(leaf.dtype)
+
+    return jax.tree.map(_one, worker_params)

@@ -1,0 +1,91 @@
+"""Generalized Anytime-Gradients (paper Sec. V).
+
+In vanilla Anytime-Gradients workers idle while the master combines and
+broadcasts.  The generalized scheme keeps them stepping: during the
+worker->master->worker communication window worker v completes q_bar_v
+extra steps from its own iterate, producing bar{x}_vt; on receiving the
+combined x^t it self-mixes
+
+    x_v^{t+1} = lambda_vt * x^t + (1 - lambda_vt) * bar{x}_vt,
+    lambda_vt = sum_u q_u / (q_bar_v + sum_u q_u)          (Eq. 13)
+
+and continues.  With lambda_vt = 1 (q_bar_v = 0) this reduces exactly to
+vanilla Anytime-Gradients.  Workers are no longer synchronized at round
+start, so the training state carries a PER-WORKER parameter stack.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.anytime import AnytimeConfig, local_sgd
+from repro.core.combine import anytime_lambdas, combine_pytrees, generalized_mixing_lambda
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def generalized_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    opt: Optimizer,
+    cfg: AnytimeConfig,
+    max_comm_steps: int,
+):
+    """Build one generalized round.
+
+    Returned callable:
+      wparams', wopt', metrics = round(wparams, wopt, batch, comm_batch, q, q_bar, step)
+    - wparams/wopt: pytrees with leading worker axis [W, ...] (unsynchronized).
+    - batch:      [W, max_local_steps, ...] microbatches for the T window.
+    - comm_batch: [W, max_comm_steps, ...] microbatches for the comm window.
+    - q, q_bar:   int[W] realized steps in each window.
+    """
+
+    def round_fn(wparams, wopt, batch, comm_batch, q, q_bar, step=jnp.zeros((), jnp.int32)):
+        # --- Phase 1: the timed window (identical to vanilla, but from
+        # per-worker starting points). ---
+        def phase1(p, s, mb, qv):
+            return local_sgd(loss_fn, opt, p, s, mb, qv, step, cfg.iterate_mode)
+
+        p1, s1, x1, losses = jax.vmap(phase1)(wparams, wopt, batch, q)
+
+        lam = anytime_lambdas(q)
+        x_comb = combine_pytrees(x1, lam)  # what the master broadcasts
+
+        # --- Phase 2: steps taken during the communication window, from
+        # each worker's own final iterate (NOT the combined one). ---
+        def phase2(p, s, mb, qv):
+            return local_sgd(loss_fn, opt, p, s, mb, qv, step + cfg.max_local_steps, "last")
+
+        p2, s2, _, _ = jax.vmap(phase2)(p1, s1, comm_batch, q_bar)
+
+        # --- Eq. 13 self-mix. ---
+        mix = generalized_mixing_lambda(jnp.sum(q), q_bar)  # [W]
+
+        def _mix(xc, xb):
+            m = mix.reshape((-1,) + (1,) * (xb.ndim - 1)).astype(xb.dtype)
+            return m * xc[None] + (1.0 - m) * xb
+
+        new_wparams = jax.tree.map(_mix, x_comb, p2)
+        metrics = {
+            "loss": jnp.sum(lam * losses),
+            "lambdas": lam,
+            "mix": mix,
+            "q_total": jnp.sum(q),
+            "q_bar_total": jnp.sum(q_bar),
+        }
+        return new_wparams, s2, metrics
+
+    return round_fn
+
+
+def broadcast_to_workers(params: PyTree, n_workers: int) -> PyTree:
+    """Replicate a single parameter pytree into the per-worker stack."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_workers,) + p.shape), params)
+
+
+def finalize(wparams: PyTree, q_last: jax.Array) -> PyTree:
+    """Final output: lambda-weighted combine of the worker stack."""
+    return combine_pytrees(wparams, anytime_lambdas(q_last))

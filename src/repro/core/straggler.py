@@ -1,0 +1,130 @@
+"""Straggler models (paper Sec. I, Fig. 1).
+
+The paper distinguishes PERSISTENT stragglers (node failure / permanently
+unavailable: never return within T_c) from NON-PERSISTENT stragglers (randomized delay
+per epoch; EC2 measurements show a heavy tail: most steps 10-40s, some
+>100s).  This module models per-worker per-epoch *seconds-per-iteration*
+and converts a fixed compute budget T into realized step counts
+
+    q_v = floor(T / iter_time_v)        (Algorithm 2: work until T expires)
+
+and, for the baselines, finishing times for a FIXED amount of work
+
+    t_v = k * iter_time_v               (Sync-SGD / FNB / Gradient Coding)
+
+so that all schemes are simulated against the *same* stochastic hardware.
+
+This container has one CPU; on a real heterogeneous fleet q_v would be
+measured.  The algorithm consuming q_v is identical either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """Per-iteration time model: iter_time = base * (1 + slowdown).
+
+    kind:
+      constant     : slowdown = 0 (idealized homogeneous cluster)
+      shifted_exp  : slowdown ~ Exp(rate)  (classic shifted-exponential
+                     straggler model, cf. Lee et al. 2018)
+      pareto       : slowdown ~ Pareto(alpha) - 1   (heavy tail, EC2-like
+                     Fig. 1 histogram)
+      bimodal      : with prob p_slow the worker is `slow_factor`x slower
+                     this epoch (shared-workload contention)
+    persistent_frac: fraction of workers that are PERSISTENT stragglers
+                     (q_v = 0 every epoch; they never report within T_c).
+                     Persistent ids are the last ceil(frac*N) workers,
+                     deterministically, so tests can reason about them.
+    hetero_spread  : per-WORKER fixed speed multiplier drawn once in
+                     [1, 1+spread] (heterogeneous machines).
+    """
+
+    kind: str = "shifted_exp"
+    base_iter_time: float = 1.0
+    rate: float = 2.0
+    alpha: float = 1.5
+    p_slow: float = 0.1
+    slow_factor: float = 10.0
+    persistent_frac: float = 0.0
+    hetero_spread: float = 0.0
+
+    def n_persistent(self, n_workers: int) -> int:
+        return int(np.ceil(self.persistent_frac * n_workers)) if self.persistent_frac > 0 else 0
+
+    def worker_speed(self, rng: np.random.Generator, n_workers: int) -> np.ndarray:
+        """Fixed per-worker multiplier (drawn once per experiment)."""
+        if self.hetero_spread <= 0:
+            return np.ones(n_workers)
+        return 1.0 + rng.uniform(0.0, self.hetero_spread, size=n_workers)
+
+    def iter_times(
+        self,
+        rng: np.random.Generator,
+        n_workers: int,
+        worker_speed: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Sample per-worker seconds/iteration for ONE epoch. inf = persistent."""
+        if self.kind == "constant":
+            slowdown = np.zeros(n_workers)
+        elif self.kind == "shifted_exp":
+            slowdown = rng.exponential(1.0 / self.rate, size=n_workers)
+        elif self.kind == "pareto":
+            slowdown = rng.pareto(self.alpha, size=n_workers)
+        elif self.kind == "bimodal":
+            slow = rng.random(n_workers) < self.p_slow
+            slowdown = np.where(slow, self.slow_factor - 1.0, 0.0)
+        else:
+            raise ValueError(f"unknown straggler kind {self.kind!r}")
+        t = self.base_iter_time * (1.0 + slowdown)
+        if worker_speed is not None:
+            t = t * worker_speed
+        k = self.n_persistent(n_workers)
+        if k:
+            t = t.copy()
+            t[n_workers - k :] = np.inf
+        return t
+
+    # ---- Anytime-Gradients: fixed time T -> variable steps q_v ----
+    def realize_steps(
+        self,
+        rng: np.random.Generator,
+        n_workers: int,
+        budget_t: float,
+        max_steps: Optional[int] = None,
+        worker_speed: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """q_v = floor(T / iter_time_v), clipped to [0, max_steps]."""
+        it = self.iter_times(rng, n_workers, worker_speed)
+        q = np.floor(budget_t / it).astype(np.int64)
+        q = np.where(np.isfinite(it), q, 0)
+        if max_steps is not None:
+            q = np.minimum(q, max_steps)
+        return q
+
+    # ---- Baselines: fixed work k steps -> variable finishing time ----
+    def finishing_times(
+        self,
+        rng: np.random.Generator,
+        n_workers: int,
+        k_steps: int,
+        worker_speed: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """t_v = k * iter_time_v (inf for persistent stragglers)."""
+        return k_steps * self.iter_times(rng, n_workers, worker_speed)
+
+
+def order_statistic_time(finish: np.ndarray, n_wait: int) -> float:
+    """Wall-clock until the n_wait-th fastest worker finishes.
+
+    Sync-SGD: n_wait = N. FNB: n_wait = N - B. Gradient coding: N - S.
+    Returns inf if fewer than n_wait workers ever finish (persistent
+    stragglers) — the scheme stalls, which is exactly the paper's point.
+    """
+    srt = np.sort(finish)
+    return float(srt[n_wait - 1])

@@ -1,0 +1,120 @@
+"""Bound evaluators from the paper's convergence analysis (Sec. III).
+
+These implement the right-hand sides of Theorems 1, 2, 5 and Corollaries
+4, 6 so tests/benchmarks can check the empirical behaviour against the
+theory (e.g. variance ~ 1/Q, Cor. 4) and so the launcher can auto-derive
+the paper's step size (Thm 1) from problem constants.
+
+Problem constants:
+  L      Lipschitz constant of the per-sample gradient (Eq. 3)
+  sigma  bound with E||grad f - grad F||^2 <= sigma^2
+  D      diameter: D^2 = max_{x,u in X} (1/2)||x-u||^2
+  G      gradient bound ||grad f|| <= G (Thm 2)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemConstants:
+    lipschitz_l: float
+    sigma: float
+    diameter_d: float
+    grad_bound_g: float
+
+    @staticmethod
+    def for_linreg(A: np.ndarray, radius: float | None = None) -> "ProblemConstants":
+        """Estimate constants for f_k(x) = (a_k^T x - y_k)^2 on a ball.
+
+        L = 2 * max_k ||a_k||^2 (per-sample quadratic), sigma/G estimated
+        from the data spectrum on a ball of the given radius.
+        """
+        row_norms = np.linalg.norm(A, axis=1)
+        L = 2.0 * float(np.max(row_norms) ** 2)
+        r = radius if radius is not None else 2.0 * np.sqrt(A.shape[1])
+        G = 2.0 * float(np.max(row_norms)) * (float(np.max(row_norms)) * r + 3.0)
+        sigma = 0.5 * G
+        return ProblemConstants(L, sigma, r, G)
+
+
+def step_size_beta(t: np.ndarray, c: ProblemConstants) -> np.ndarray:
+    """beta_vt = sqrt(t+1) * sigma / D (Thm 1 substitution)."""
+    return np.sqrt(np.asarray(t) + 1.0) * c.sigma / c.diameter_d
+
+
+def thm1_expected_distance(
+    q: np.ndarray, lam: np.ndarray, f0_gap: float, c: ProblemConstants
+) -> float:
+    """Theorem 1 RHS: sum_v (lam_v/q_v) {F(x0)-F* + L D^2 + 2 sigma D sqrt(q_v)}."""
+    q = np.asarray(q, dtype=float)
+    lam = np.asarray(lam, dtype=float)
+    mask = q > 0
+    term = f0_gap + c.lipschitz_l * c.diameter_d**2 + 2.0 * c.sigma * c.diameter_d * np.sqrt(q)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        vals = np.where(mask, lam / np.maximum(q, 1.0) * term, 0.0)
+    return float(np.sum(vals))
+
+
+def thm2_variance_bound(q: np.ndarray, lam: np.ndarray, c: ProblemConstants) -> float:
+    """Theorem 2 RHS: 2 sigma^2 D^2 (G^2/sigma^2 + 2) * sum_v lam_v^2 / q_v."""
+    q = np.asarray(q, dtype=float)
+    lam = np.asarray(lam, dtype=float)
+    mask = q > 0
+    s = float(np.sum(np.where(mask, lam**2 / np.maximum(q, 1.0), 0.0)))
+    return 2.0 * c.sigma**2 * c.diameter_d**2 * (c.grad_bound_g**2 / c.sigma**2 + 2.0) * s
+
+
+def cor4_variance_bound(q: np.ndarray, c: ProblemConstants) -> float:
+    """Corollary 4: with Thm-3 weights the bound collapses to C / Q."""
+    Q = float(np.sum(q))
+    if Q <= 0:
+        return float("inf")
+    return 2.0 * c.sigma**2 * c.diameter_d**2 * (c.grad_bound_g**2 / c.sigma**2 + 2.0) / Q
+
+
+def optimal_lambdas_minimize_thm2(q: np.ndarray) -> np.ndarray:
+    """Solve the Thm-3 QP directly (diag quadratic, simplex constraint).
+
+    min_lam (1/2) lam^T R lam  s.t. 1^T lam = 1, lam >= 0,
+    R = diag(c / q_v)  =>  lam_v propto q_v.  Provided independently of
+    combine.anytime_lambdas so tests can cross-check the closed form
+    against a numerical QP solve.
+    """
+    q = np.asarray(q, dtype=float)
+    active = q > 0
+    if not np.any(active):
+        return np.full_like(q, 1.0 / len(q))
+    # KKT for diagonal QP on the simplex: lam_v = q_v / sum(q) on active set
+    lam = np.where(active, q, 0.0)
+    return lam / lam.sum()
+
+
+def thm5_high_prob_bound(
+    q: np.ndarray, lam: np.ndarray, delta: float, c: ProblemConstants
+) -> float:
+    """Theorem 5 RHS for the deviation |F(x)-F* - E[F(x)-F*]|."""
+    q = np.asarray(q, dtype=float)
+    lam = np.asarray(lam, dtype=float)
+    mask = q > 0
+    gamma = float(np.max(np.where(mask, lam / np.maximum(q, 1.0), 0.0)))
+    var_sum = float(
+        np.sum(
+            np.where(mask, lam**2 / np.maximum(q, 1.0), 0.0)
+            * c.sigma**2
+            * c.diameter_d**2
+            * (c.grad_bound_g**2 / c.sigma**2 + 2.0)
+        )
+    )
+    log_inv = np.log(1.0 / delta)
+    return (
+        gamma
+        * 2.0
+        * c.grad_bound_g
+        * c.diameter_d
+        * (c.grad_bound_g / c.sigma + 2.0)
+        * log_inv
+        * np.sqrt(1.0 + 36.0 * var_sum / log_inv)
+    )

@@ -1,0 +1,3 @@
+from repro.data.linreg import LinRegData, make_linreg  # noqa: F401
+from repro.data.pipeline import AnytimeBatcher, TokenBatcher  # noqa: F401
+from repro.data.synthetic import synthetic_tokens  # noqa: F401

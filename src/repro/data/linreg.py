@@ -1,0 +1,39 @@
+"""The paper's linear-regression workload (Sec. IV).
+
+Synthetic: A in R^{m x d} ~ N(0,1) iid, x* ~ N(0,1), y = A x* + z with
+z ~ N(0, 1e-3).  The normalized error reported by the paper is
+||A x_t - A x*|| / ||A x*||.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LinRegData:
+    A: np.ndarray  # [m, d]
+    y: np.ndarray  # [m]
+    x_star: np.ndarray  # [d]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[1]
+
+    def normalized_error(self, x: np.ndarray) -> float:
+        """Paper Sec. IV: ||A x - A x*|| / ||A x*||."""
+        ref = self.A @ self.x_star
+        return float(np.linalg.norm(self.A @ x - ref) / np.linalg.norm(ref))
+
+
+def make_linreg(m: int, d: int, noise_std: float = 0.0316, seed: int = 0) -> LinRegData:
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, d))
+    x_star = rng.standard_normal(d)
+    y = A @ x_star + noise_std * rng.standard_normal(m)
+    return LinRegData(A=A, y=y, x_star=x_star)

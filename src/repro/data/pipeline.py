@@ -1,0 +1,78 @@
+"""Sharded batch pipelines implementing the paper's data allocation.
+
+AnytimeBatcher: Table-I placement — the dataset is split into N blocks,
+worker v holds blocks {v..v+S} (mod N), and each round draws
+max_local_steps microbatches per worker UNIFORMLY from the worker's own
+replicated shard (Algorithm 2 line 6).  Workers therefore never touch data
+they were not assigned, and up to S persistent stragglers lose nothing.
+
+TokenBatcher: the same contract over a token corpus for LM training.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.assignment import worker_sample_ids
+
+
+class AnytimeBatcher:
+    """Rounds of [W, q_max, b, ...] microbatch arrays from numpy data."""
+
+    def __init__(
+        self,
+        arrays: dict[str, np.ndarray],  # sample-major arrays, same leading dim
+        n_workers: int,
+        s_redundancy: int,
+        max_local_steps: int,
+        local_batch: int,
+        seed: int = 0,
+    ):
+        lead = {k: v.shape[0] for k, v in arrays.items()}
+        if len(set(lead.values())) != 1:
+            raise ValueError(f"inconsistent sample counts: {lead}")
+        self.arrays = arrays
+        self.m = next(iter(lead.values()))
+        self.n_workers = n_workers
+        self.s = s_redundancy
+        self.q_max = max_local_steps
+        self.b = local_batch
+        self.rng = np.random.default_rng(seed)
+        # Table I: per-worker sample index pools (size m(S+1)/N each)
+        self.pools = [
+            worker_sample_ids(v, self.m, n_workers, s_redundancy) for v in range(n_workers)
+        ]
+
+    def round_batch(self) -> dict[str, np.ndarray]:
+        """One round's microbatches: leaves [W, q_max, b, ...]."""
+        out = {k: [] for k in self.arrays}
+        for v in range(self.n_workers):
+            idx = self.rng.choice(self.pools[v], size=(self.q_max, self.b), replace=True)
+            for k, arr in self.arrays.items():
+                out[k].append(arr[idx])
+        return {k: np.stack(vs) for k, vs in out.items()}
+
+
+class TokenBatcher:
+    """AnytimeBatcher over an LM token corpus [n_seqs, seq_len]."""
+
+    def __init__(
+        self,
+        tokens: np.ndarray,
+        n_workers: int,
+        s_redundancy: int,
+        max_local_steps: int,
+        local_batch: int,
+        seed: int = 0,
+        prefix: Optional[np.ndarray] = None,  # [n_seqs, P, src] vlm/audio stub
+    ):
+        arrays = {"tokens": tokens, "labels": np.roll(tokens, -1, axis=-1)}
+        if prefix is not None:
+            arrays["prefix_embeddings"] = prefix
+        self.inner = AnytimeBatcher(
+            arrays, n_workers, s_redundancy, max_local_steps, local_batch, seed
+        )
+
+    def round_batch(self) -> dict[str, np.ndarray]:
+        return self.inner.round_batch()

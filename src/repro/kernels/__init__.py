@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  weighted_combine  the Anytime master combine (Alg 1 l.15) — per-round
+                    full-parameter bandwidth hot-spot
+  flash_attention   blockwise prefill/training attention (causal + sliding)
+  decode_attention  FlashDecoding-style 1-token attention vs a long cache
+  ssm_scan          chunked Mamba selective scan (hymba)
+  moe_gemm          grouped expert GEMM (deepseek/phi MoE compute core)
+
+Each kernel = pl.pallas_call + explicit BlockSpec VMEM tiling; ops.py holds
+the jit'd model-layout wrappers and ref.py the pure-jnp oracles.  All are
+validated on CPU with interpret=True (see tests/test_kernels.py).
+"""

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token decode attention against a long KV cache.
+
+FlashDecoding-style: the [C, Dh] cache is streamed HBM->VMEM in BK tiles
+with an online softmax; decode is purely memory-bound, so the kernel's job
+is to touch each cache byte exactly once at full HBM bandwidth while the
+(1 x BK) score tile stays in registers.
+
+Grid = (B, H, nK) with nK minor; scratch (m, l, acc[Dh]) persists per (B,H).
+A `valid [B, C]` mask handles ring buffers that are not yet full (per-
+sequence fill levels under continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, n_k):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [1, Dh]
+    k = k_ref[0, 0].astype(jnp.float32)  # [BK, Dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+    ok = valid_ref[0] != 0  # [BK]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)[0] * scale
+    s = jnp.where(ok, s, NEG_INF)  # [BK]
+    m_prev = m_scr[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)  # [BK]
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_scr[0] * alpha + jnp.sum(p)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p[None, :], v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[0] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[0]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(
+    q: jax.Array,  # [B, H, Dh]
+    k: jax.Array,  # [B, C, H, Dh]
+    v: jax.Array,
+    valid: jax.Array,  # [C] or [B, C] bool / int
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token attention over the cache. Returns [B, H, Dh]."""
+    b, c, h, dh = k.shape
+    bk = min(bk, c)
+    pad = (-c) % bk
+    kk = jnp.moveaxis(k, 2, 1)  # [B, H, C, Dh]
+    vv = jnp.moveaxis(v, 2, 1)
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (b, c))
+    val = valid.astype(jnp.int32)
+    if pad:
+        kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        val = jnp.pad(val, ((0, 0), (0, pad)))
+    n_k = (c + pad) // bk
+    kernel = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(dh), n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, bk), lambda ib, ih, ik: (ib, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q[:, :, None, :], kk, vv, val)
+    return out[:, :, 0, :]

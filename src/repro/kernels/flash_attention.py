@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: blockwise (flash) attention for prefill/training.
+
+Online-softmax over KV blocks with running (m, l, acc) scratch carried
+across the minor grid dimension.  Supports causal and sliding-window
+masks plus a kv-length guard (padded sequences).
+
+Tiling (MXU-aligned): Q blocks [BQ=128, Dh], KV blocks [BK=128, Dh];
+scores tile [128, 128] hits the MXU natively; scratch acc [BQ, Dh] f32.
+Grid = (B, H, nQ, nK), nK minor so scratch persists per Q block.
+Fully-masked KV blocks are skipped via @pl.when (2x for causal).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: Optional[int], kv_len: int,
+    q_offset: int, bq: int, bk: int, n_k: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq + q_offset
+    k_start = ik * bk
+    q_last = q_start + bq - 1
+    # block-level reachability predicate: skip fully-masked KV blocks
+    may = jnp.asarray(True)
+    if causal:
+        may &= k_start <= q_last
+    if window is not None:
+        may &= k_start + bk - 1 > q_start - window
+    may &= k_start < kv_len
+
+    @pl.when(may)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [BQ, Dh]
+        k = k_ref[0, 0].astype(jnp.float32)  # [BK, Dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [BQ, BK]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < kv_len
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "kv_len", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, Dh]
+    k: jax.Array,  # [B, H, Sk, Dh]
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_len: Optional[int] = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    kv_len = sk if kv_len is None else kv_len
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    n_q = (sq + pad_q) // bq
+    n_k = (sk + pad_k) // bk
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / math.sqrt(dh),
+        causal=causal,
+        window=window,
+        kv_len=kv_len,
+        q_offset=q_offset,
+        bq=bq,
+        bk=bk,
+        n_k=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pad_q, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq]

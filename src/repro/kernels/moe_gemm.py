@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: grouped expert GEMM (the MoE hot-spot).
+
+    out[e, c, f] = buf[e, c, d] @ w[e, d, f]
+
+After capacity dispatch, every expert's [cap, D] token buffer multiplies
+its own [D, F] weight — a batched GEMM whose batch axis is the (model-axis
+sharded) expert dimension.  Tiling: one expert per major grid step; [BC,BD]
+x [BD,BF] MXU tiles with an f32 accumulator carried across the BD (minor)
+grid dimension.  VMEM per step: BC*BD + BD*BF + BC*BF f32 tiles
+(128*512*3*4B ~ 768 KiB) — double-bufferable.
+
+Used by models.moe.moe_ffn when cfg.kernel_impl selects pallas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
+    idx = pl.program_id(3)
+
+    @pl.when(idx == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # [BC, BD]
+    w = w_ref[0].astype(jnp.float32)  # [BD, BF]
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(idx == n_d - 1)
+    def _emit():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def moe_gemm(
+    x: jax.Array,  # [E, C, D] dispatched token buffers
+    w: jax.Array,  # [E, D, F] expert weights
+    bc: int = 128,
+    bf: int = 256,
+    bd: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped GEMM over the expert axis. Returns [E, C, F] (x.dtype)."""
+    e, c, d = x.shape
+    f = w.shape[2]
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    pc, pf, pd = (-c) % bc, (-f) % bf, (-d) % bd
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    n_c, n_f, n_d = (c + pc) // bc, (f + pf) // bf, (d + pd) // bd
+    kernel = functools.partial(_gemm_kernel, n_d=n_d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(e, n_c, n_f, n_d),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda ie, ic, if_, id_: (ie, ic, id_)),
+            pl.BlockSpec((1, bd, bf), lambda ie, ic, if_, id_: (ie, id_, if_)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ie, ic, if_, id_: (ie, ic, if_)),
+        out_shape=jax.ShapeDtypeStruct((e, c + pc, f + pf), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :c, :f]

@@ -1,0 +1,75 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+The model layer calls these with model-native layouts ([B, S, H, Dh]); the
+wrappers transpose to kernel layouts, dispatch to the Pallas implementation
+(interpret=True executes the kernel body on CPU for validation), and expose
+a `combine_pytree` that runs the Anytime master combine through the
+weighted_combine kernel one flattened chunk at a time.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref  # noqa: F401  (oracles re-exported for tests)
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
+from repro.kernels.moe_gemm import moe_gemm as _moe_gemm_pallas
+from repro.kernels.weighted_combine import weighted_combine as _combine_pallas
+
+PyTree = Any
+
+
+def flash_attention(
+    q: jax.Array,  # [B, S, H, Dh]  (model layout)
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    out = _flash_pallas(qt, kt, vt, causal=causal, window=window, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, Dh]
+    k_cache: jax.Array,  # [B, C, H, Dh]
+    v_cache: jax.Array,
+    valid: jax.Array,  # [C]
+    interpret: bool = False,
+) -> jax.Array:
+    out = _decode_pallas(q[:, 0], k_cache, v_cache, valid, interpret=interpret)
+    return out[:, None]  # [B, 1, H, Dh]
+
+
+def ssm_scan(x, dt, a, b, c, d, interpret: bool = False):
+    return _ssm_pallas(x, dt, a, b, c, d, interpret=interpret)
+
+
+def moe_gemm(x, w, interpret: bool = False):
+    """Grouped expert GEMM [E,C,D]x[E,D,F] -> [E,C,F]."""
+    return _moe_gemm_pallas(x, w, interpret=interpret)
+
+
+def weighted_combine(stacked: jax.Array, lam: jax.Array, interpret: bool = False) -> jax.Array:
+    return _combine_pallas(stacked, lam, interpret=interpret)
+
+
+def combine_pytree(worker_params: PyTree, lam: jax.Array, interpret: bool = False) -> PyTree:
+    """Kernel-backed version of core.combine.combine_pytrees.
+
+    Leaves keep their dtype; math runs in f32 inside the kernel.
+    """
+
+    def one(leaf: jax.Array) -> jax.Array:
+        w = leaf.shape[0]
+        flat = leaf.reshape(w, -1)
+        out = _combine_pallas(flat, lam, interpret=interpret)
+        return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(one, worker_params)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def weighted_combine_ref(stacked: jax.Array, lam: jax.Array) -> jax.Array:
+    """[W, N] x [W] -> [N]: sum_v lam_v x_v (the Alg-1 l.15 combine)."""
+    return jnp.einsum("wn,w->n", stacked.astype(jnp.float32), lam.astype(jnp.float32))
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, Sq, Dh]
+    k: jax.Array,  # [B, H, Sk, Dh]
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_len: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    sq, sk = q.shape[2], k.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    if kv_len is not None:
+        ok &= kpos < kv_len
+    logits = jnp.where(ok[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, H, Dh]  (one token)
+    k: jax.Array,  # [B, C, H, Dh]
+    v: jax.Array,
+    valid: jax.Array,  # [C] bool
+) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhd,bchd->bhc", q, k, preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhc,bchd->bhd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(
+    x: jax.Array,  # [B, S, Di] f32
+    dt: jax.Array,  # [B, S, Di] f32 (already softplus'd)
+    a: jax.Array,  # [Di, N] f32 (negative)
+    b: jax.Array,  # [B, S, N] f32
+    c: jax.Array,  # [B, S, N] f32
+    d: jax.Array,  # [Di] f32
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential-scan oracle. Returns (y [B,S,Di], h_final [B,Di,N])."""
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(dtt[:, :, None] * a)  # [B,Di,N]
+        h = decay * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + d * xt
+        return h, y
+
+    bsz = x.shape[0]
+    h0 = jnp.zeros((bsz, a.shape[0], a.shape[1]), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0, (x.swapaxes(0, 1), dt.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hf
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[E,C,D] x [E,D,F] -> [E,C,F] grouped expert GEMM (f32 accumulate)."""
+    return jnp.einsum("ecd,edf->ecf", x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: chunked selective scan (Mamba S6) for hymba training.
+
+The recurrence h_t = exp(dt_t * A) h_{t-1} + dt_t B_t x_t is processed in
+time CHUNKS: grid = (B, nDi, nChunks) with the chunk index minor, carrying
+the [Db, N] state in VMEM scratch across chunks.  Within a chunk the step
+loop runs over values already resident in VMEM (one HBM read per element).
+Channel blocking (Db) keeps the working set
+
+    x/dt tiles [Lc, Db] + b/c tiles [Lc, N] + state [Db, N]
+
+around (2*256*256 + 2*256*16 + 256*16) * 4B ~ 600 KiB in VMEM.
+
+All exponents are <= 0 (A < 0, dt > 0), so the in-chunk math is stable in
+f32 without rescaling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref, h_scr, *, lc, n_chunks):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # [Lc, Db]
+    dt = dt_ref[0].astype(jnp.float32)  # [Lc, Db]
+    a = a_ref[...].astype(jnp.float32)  # [Db, N]
+    b = b_ref[0].astype(jnp.float32)  # [Lc, N]
+    c = c_ref[0].astype(jnp.float32)  # [Lc, N]
+    d = d_ref[...].astype(jnp.float32)  # [Db]
+
+    def step(t, carry):
+        h, ys = carry
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]  # [Db]
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)[0]
+        b_t = jax.lax.dynamic_slice_in_dim(b, t, 1, 0)[0]  # [N]
+        c_t = jax.lax.dynamic_slice_in_dim(c, t, 1, 0)[0]
+        decay = jnp.exp(dt_t[:, None] * a)  # [Db, N]
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=1) + d * x_t  # [Db]
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y_t[None], t, 0)
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros_like(x)
+    h_fin, ys = jax.lax.fori_loop(0, lc, step, (h0, ys0))
+    h_scr[...] = h_fin
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0] = h_fin.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lc", "db", "interpret"))
+def ssm_scan(
+    x: jax.Array,  # [B, S, Di] f32
+    dt: jax.Array,  # [B, S, Di] f32 (post-softplus)
+    a: jax.Array,  # [Di, N] f32 (negative)
+    b: jax.Array,  # [B, S, N] f32
+    c: jax.Array,  # [B, S, N] f32
+    d: jax.Array,  # [Di] f32
+    lc: int = 64,
+    db: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked selective scan. Returns (y [B,S,Di], h_final [B,Di,N])."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    lc = min(lc, s)
+    db = min(db, di)
+    pad_s = (-s) % lc
+    pad_d = (-di) % db
+    if pad_s or pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, pad_d)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_s), (0, 0)))
+        a = jnp.pad(a, ((0, pad_d), (0, 0)))
+        d = jnp.pad(d, (0, pad_d))
+    sp, dip = s + pad_s, di + pad_d
+    n_chunks = sp // lc
+    n_db = dip // db
+    kernel = functools.partial(_ssm_kernel, lc=lc, n_chunks=n_chunks)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(bsz, n_db, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, lc, db), lambda ib, id_, ic: (ib, ic, id_)),  # x
+            pl.BlockSpec((1, lc, db), lambda ib, id_, ic: (ib, ic, id_)),  # dt
+            pl.BlockSpec((db, n), lambda ib, id_, ic: (id_, 0)),  # a
+            pl.BlockSpec((1, lc, n), lambda ib, id_, ic: (ib, ic, 0)),  # b
+            pl.BlockSpec((1, lc, n), lambda ib, id_, ic: (ib, ic, 0)),  # c
+            pl.BlockSpec((db,), lambda ib, id_, ic: (id_,)),  # d
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lc, db), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, db, n), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, sp, dip), x.dtype),
+            jax.ShapeDtypeStruct((bsz, dip, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((db, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d)
+    return y[:, :s, :di], h_fin[:, :di]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: the Anytime master combine (Algorithm 1, line 15).
+
+    out[n] = sum_v lam[v] * stacked[v, n]
+
+This touches EVERY parameter every round — the framework's per-round
+bandwidth hot-spot.  Tiling: the flat parameter vector is processed in
+VMEM-resident [W, BN] tiles (one HBM read per element, fused
+multiply-accumulate on the VPU, one HBM write), instead of W separate
+scaled-add passes (which would read the output W times).
+
+Tile budget: W<=32 workers x BN=4096 lanes x 4B = 512 KiB in VMEM — well
+under the ~16 MiB/core budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 4096
+
+
+def _combine_kernel(lam_ref, x_ref, o_ref):
+    # x_ref: [W, BN] tile; lam_ref: [W, 1]; o_ref: [BN]
+    x = x_ref[...].astype(jnp.float32)
+    lam = lam_ref[...].astype(jnp.float32)  # [W, 1]
+    o_ref[...] = jnp.sum(x * lam, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def weighted_combine(
+    stacked: jax.Array,  # [W, N] flat parameter stack
+    lam: jax.Array,  # [W]
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """sum_v lam_v x_v with VMEM tiling. Returns [N] float32."""
+    w, n = stacked.shape
+    pad = (-n) % block_n
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    n_pad = n + pad
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w, 1), lambda i: (0, 0)),
+            pl.BlockSpec((w, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(lam.reshape(w, 1), stacked)
+    return out[:n]

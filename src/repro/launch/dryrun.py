@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, partitions and compiles on the production meshes,
+and harvest the roofline terms — WITHOUT allocating a single model byte
+(all inputs are ShapeDtypeStructs).
+
+The two os.environ lines above MUST run before any other import: jax locks
+the device count at first backend init, and this dry-run needs 512
+placeholder host devices to build the 2x16x16 mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh, n_workers
+from repro.launch.steps import (
+    TrainPlan,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    serve_arg_specs,
+    shape_cfg,
+    train_batch_specs,
+)
+from repro.models import model as M
+from repro.sharding.specs import batch_pspec, cache_pspecs, param_pspecs, worker_axes
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool, q_max: int = 4,
+              mesh_shape=None, kv_quant: bool = False, remat: str = None,
+              generalized: bool = False):
+    """Lower + compile one (arch, shape, mesh). Returns result dict.
+
+    mesh_shape: optional (data, model) override — the §Perf resharding
+    lever (same physical chips, different logical split).
+    kv_quant:   int8 decode cache variant (§Perf memory lever).
+    """
+    if mesh_shape is not None:
+        mesh = jax.make_mesh(tuple(mesh_shape), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = INPUT_SHAPES[shape_name]
+    mp = mesh.shape["model"]
+    base = get_config(arch)
+    if shape.name == "long_500k" and base.long_context == "skip":
+        return {"status": "skipped", "reason": "long_500k skipped by design (DESIGN.md §4)"}
+    cfg = shape_cfg(base, shape, model_parallel=mp)
+    import dataclasses as _dc
+    if kv_quant:
+        cfg = _dc.replace(cfg, kv_quant=True)
+    if remat is not None:
+        cfg = _dc.replace(cfg, remat=remat)
+    w = n_workers(mesh)
+    waxes = worker_axes(mesh)
+
+    # params as specs (eval_shape — zero allocation)
+    params_specs = jax.eval_shape(lambda k: M.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = _named(mesh, param_pspecs(params_specs, mesh))
+    import math
+    n_params = sum(math.prod(l.shape) for l in jax.tree.leaves(params_specs))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            plan = TrainPlan.for_shape(shape, w, q_max=q_max)
+            batch_specs = train_batch_specs(cfg, shape, plan)
+            b_shard = {
+                k: NamedSharding(mesh, batch_pspec(mesh, True, len(v.shape)))
+                for k, v in batch_specs.items()
+            }
+            q_spec = jax.ShapeDtypeStruct((w,), jnp.int32)
+            q_shard = NamedSharding(mesh, P(waxes))
+            r_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            r_shard = NamedSharding(mesh, P())
+            if generalized:
+                # Sec.-V round: worker-stacked params sharded over pod/data
+                from repro.launch.steps import make_generalized_step
+
+                step, qc = make_generalized_step(cfg, plan)
+                wp_specs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((w,) + s.shape, s.dtype), params_specs)
+                wp_shard = _named(mesh, param_pspecs(wp_specs, mesh, worker_stacked=True))
+                comm_specs = {
+                    k: jax.ShapeDtypeStruct((w, qc) + v.shape[2:], v.dtype)
+                    for k, v in batch_specs.items()
+                }
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(wp_shard, None, b_shard, b_shard, q_shard, q_shard, r_shard),
+                    out_shardings=(wp_shard, None, None),
+                )
+                lowered = jitted.lower(wp_specs, (), batch_specs, comm_specs,
+                                       q_spec, q_spec, r_spec)
+            else:
+                step = make_train_step(cfg, plan)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_shard, None, b_shard, q_shard, r_shard),
+                    out_shardings=(p_shard, None, None),
+                )
+                lowered = jitted.lower(params_specs, (), batch_specs, q_spec, r_spec)
+            tokens_per_round = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            flat = input_specs(cfg, shape)
+            b_shard = {
+                k: NamedSharding(mesh, batch_pspec(mesh, False, len(v.shape), lead_dim=v.shape[0]))
+                for k, v in flat.items()
+            }
+            args = [params_specs, flat["tokens"]]
+            shards = [p_shard, b_shard["tokens"]]
+            if "prefix_embeddings" in flat:
+                args.append(flat["prefix_embeddings"])
+                shards.append(b_shard["prefix_embeddings"])
+            jitted = jax.jit(step, in_shardings=tuple(shards), out_shardings=None)
+            lowered = jitted.lower(*args)
+            tokens_per_round = shape.global_batch * shape.seq_len
+        else:  # decode
+            step = make_serve_step(cfg)
+            toks, cache = serve_arg_specs(cfg, shape)
+            c_shard = _named(mesh, cache_pspecs(cache, mesh))
+            t_shard = NamedSharding(mesh, batch_pspec(mesh, False, 2, lead_dim=shape.global_batch))
+            pos_shard = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, t_shard, pos_shard),
+                out_shardings=(None, c_shard),
+            )
+            lowered = jitted.lower(params_specs, cache, toks["tokens"], toks["position"])
+            tokens_per_round = shape.global_batch  # one token per sequence
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = RL.analyze(compiled, hlo)
+    chips = mesh.devices.size
+    # PRIMARY roofline terms: analytic (XLA cost_analysis counts loop
+    # bodies once — see launch/analytic.py); HLO numbers kept as
+    # per-loop-iteration compile diagnostics.
+    from repro.launch.analytic import analytic_roofline
+    ana = analytic_roofline(cfg, shape, chips, mp, w, q_max=q_max)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    result = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "variant": {"q_max": q_max, "mesh_shape": list(mesh.devices.shape), "kv_quant": kv_quant},
+        "chips": chips,
+        "n_params": n_params,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "mem_per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": ana.as_dict(),
+        "hlo_diagnostics": roof.as_dict(),
+        "model_flops_global": ana.model_flops_global,
+        "useful_compute_ratio": round(ana.useful_ratio, 4),
+        "tokens_per_round": tokens_per_round,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--q-max", type=int, default=4)
+    ap.add_argument("--mesh-shape", default=None, help="e.g. 32x8 (resharding variant)")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--generalized", action="store_true",
+                    help="lower the Sec.-V generalized round instead of vanilla")
+    ap.add_argument("--tag", default="", help="suffix for variant result files")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = args.mesh_shape or ("2x16x16" if mp else "16x16")
+                tag = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+                path = outdir / f"{tag}.json"
+                if path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {tag}: {prev['status']}")
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skipped"
+                        continue
+                print(f"[run] {tag} ...", flush=True)
+                try:
+                    ms = tuple(int(x) for x in args.mesh_shape.split("x")) if args.mesh_shape else None
+                    res = lower_one(arch, shape, mp, q_max=args.q_max,
+                                    mesh_shape=ms, kv_quant=args.kv_quant,
+                                    remat=args.remat, generalized=args.generalized)
+                except Exception as e:
+                    res = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                res.setdefault("arch", arch); res.setdefault("shape", shape)
+                res.setdefault("mesh", mesh_name)
+                path.write_text(json.dumps(res, indent=2, default=str))
+                if res["status"] == "ok":
+                    n_ok += 1
+                    r = res["roofline"]
+                    print(
+                        f"  ok: compile={res['compile_s']}s "
+                        f"t_comp={r['t_compute_s']*1e3:.2f}ms t_mem={r['t_memory_s']*1e3:.2f}ms "
+                        f"t_coll={r['t_collective_s']*1e3:.2f}ms bottleneck={r['bottleneck']}",
+                        flush=True,
+                    )
+                elif res["status"] == "skipped":
+                    n_skip += 1
+                    print(f"  skipped: {res['reason']}")
+                else:
+                    n_fail += 1
+                    print(f"  FAIL: {res['error']}")
+    print(f"\ndry-run summary: ok={n_ok} skipped={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

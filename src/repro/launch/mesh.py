@@ -1,0 +1,60 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (device count is locked at first jax init, and the
+dry-run needs to force 512 host devices BEFORE that happens).
+
+Topology (TPU v5e-class):
+  single-pod: (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod:  (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+The Anytime worker index is the ("pod","data") coordinate: 16 workers per
+pod (32 across two pods), each worker a 16-chip model-parallel group.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Degenerate mesh over however many (real) devices exist — smoke tests."""
+    n = jax.device_count()
+    data = n // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def n_workers(mesh: Mesh) -> int:
+    w = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            w *= mesh.shape[a]
+    return w
+
+
+def recommended_mesh_shape(n_params: int, kind: str) -> tuple[int, int]:
+    """Tuned (data, model) split of a 256-chip pod, from the §Perf campaigns.
+
+    Empirical law (EXPERIMENTS.md §Perf A/B/D/E): per-chip tensor-parallel
+    activation traffic scales with tokens/worker, so the `model` axis should
+    be only as wide as the parameter/cache memory demands:
+
+      train/prefill:   TP = smallest power of two with bf16 params (+1x
+                       transient grads) under ~12 GiB/chip
+      decode:          TP = 16 (cache capacity dominates; see §Perf C —
+                       narrower TP regressed on param reads)
+    """
+    if kind == "decode":
+        return (16, 16)
+    tp = 2
+    while n_params * 2 / tp > 12 * 2**30 and tp < 16:
+        tp *= 2
+    # keep at least 2-way TP for matmul-sharding benefits
+    tp = max(min(tp, 16), 2)
+    return (256 // tp, tp)

@@ -1,0 +1,135 @@
+"""Roofline-term extraction from a lowered/compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds (per-chip view —
+XLA's post-SPMD module is the per-chip program, so its FLOPs/bytes are
+already divided by the chip count):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+collective bytes are not in cost_analysis(): we parse the optimized HLO
+text and sum OPERAND sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+
+Hardware constants (TPU v5e-class, per chip):
+  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+# shape literal like  bf16[16,128]{1,0}  or f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*((?:\([^)]*\)|\S+))\s+([a-z\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        # match e.g. all-reduce, all-gather-start, all-reduce-start
+        kind = next((k for k in _COLLECTIVES if op == k or op.startswith(k + "-start")), None)
+        if kind is None:
+            continue
+        # operand shapes if printed inline after the opening paren ...
+        call = stripped[m.end() - 1 :]
+        shapes = _SHAPE_RE.findall(call)
+        if not shapes:
+            # ... else use the RESULT type (== operand bytes for all-reduce /
+            # permute; gathered size for all-gather — the on-wire volume)
+            shapes = _SHAPE_RE.findall(m.group(1))
+        out[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per chip
+    hbm_bytes: float  # per chip
+    coll_bytes: float  # per chip
+    coll_by_kind: dict
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    """Build the three roofline terms from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        coll_by_kind=coll,
+    )
+
+
+def model_flops_per_round(n_params_active: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D training (fwd+bwd), 2*N*D inference."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_params_active * tokens

@@ -1,0 +1,136 @@
+"""Continuous-batching decode scheduler (static shapes, slot-based).
+
+vLLM-lite for the attention-cache families: a fixed pool of `n_slots`
+sequences decodes in lockstep with PER-SLOT positions (decode_step accepts
+int32[B] positions); finished sequences free their slot, waiting requests
+join mid-flight via a single-slot bulk prefill written into the shared
+cache.  All shapes are static, so the jitted decode step never recompiles
+as requests come and go — the property that makes this deployable on TPU.
+
+Recurrent-state families (ssm/hybrid/encdec) need per-slot state swap-in,
+which the same slot mechanism supports via the generic pytree writes; their
+prefill is sequential (see models.prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.kvcache import init_cache
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int
+
+
+@dataclasses.dataclass
+class Finished:
+    rid: int
+    tokens: list
+
+
+def _write_slot(cache: PyTree, slot_cache: PyTree, slot: int) -> PyTree:
+    """Copy a B=1 cache pytree into slot `slot` of the pooled cache.
+
+    The batch axis position differs per leaf family: attention leaves are
+    [L, B, ...], xlstm mLSTM leaves [NS, M, B, ...] — resolved by shape.
+    """
+
+    def one(pool, single):
+        # the batch axis is wherever the B=1 cache has size 1 but the pool
+        # doesn't (axis 1 for attention/ssm leaves, axis 2 for xlstm m_*)
+        b_axis = next(
+            ax for ax in range(pool.ndim)
+            if single.shape[ax] == 1 and pool.shape[ax] != 1
+        )
+        idx = [slice(None)] * pool.ndim
+        idx[b_axis] = slice(slot, slot + 1)
+        return pool.at[tuple(idx)].set(single.astype(pool.dtype))
+
+    return jax.tree.map(one, cache, slot_cache)
+
+
+class DecodeScheduler:
+    """Slot-based continuous batching around jitted prefill/decode steps."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, n_slots: int, max_len: int,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self.positions = np.zeros(n_slots, np.int32)
+        self.remaining = np.zeros(n_slots, np.int32)  # 0 = free slot
+        self.rid = np.full(n_slots, -1, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self.out: dict[int, list] = {}
+        self.queue: list[Request] = []
+        self.finished: list[Finished] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+        self._prefill1 = jax.jit(
+            lambda p, tk, c: M.prefill_bulk(p, cfg, tk, c))
+
+    # ---- client API ----
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def idle(self) -> bool:
+        return not self.queue and not np.any(self.remaining > 0)
+
+    # ---- scheduling ----
+    def _admit(self):
+        for slot in np.flatnonzero(self.remaining == 0):
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            s = len(req.prompt)
+            # single-slot prefill into a fresh B=1 cache, then splice in
+            c1 = init_cache(self.cfg, 1, self.max_len)
+            logits, c1 = self._prefill1(self.params, jnp.asarray(req.prompt[None]), c1)
+            self.cache = _write_slot(self.cache, c1, int(slot))
+            tok = int(jnp.argmax(logits[0, : self.cfg.vocab]))
+            self.positions[slot] = s
+            self.remaining[slot] = req.max_new
+            self.rid[slot] = req.rid
+            self.last_tok[slot] = tok
+            self.out[req.rid] = []
+
+    def step(self):
+        """One scheduler tick: admit waiting requests, decode one token for
+        every active slot, retire finished sequences."""
+        self._admit()
+        active = self.remaining > 0
+        if not np.any(active):
+            return
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.positions)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1), np.int32)
+        for slot in np.flatnonzero(active):
+            self.out[int(self.rid[slot])].append(int(self.last_tok[slot]))
+            self.positions[slot] += 1
+            self.remaining[slot] -= 1
+            self.last_tok[slot] = nxt[slot]
+            if self.remaining[slot] == 0:
+                self.finished.append(Finished(int(self.rid[slot]), self.out.pop(int(self.rid[slot]))))
+                self.rid[slot] = -1
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> dict[int, list]:
+        for _ in range(max_ticks):
+            if self.idle():
+                break
+            self.step()
+        return {f.rid: f.tokens for f in self.finished}

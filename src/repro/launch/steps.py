@@ -1,0 +1,152 @@
+"""Step builders shared by the dry-run, trainer and server.
+
+train_step  = ONE Anytime-Gradients round (the paper's Algorithm 1 body):
+              q_max masked local SGD steps per worker + Theorem-3 combine.
+serve_step  = one-token decode against the sharded cache.
+prefill_step= full-sequence forward (flash path on TPU).
+
+All are pure functions of (cfg, ...) suitable for jax.jit with the
+sharding trees from repro.sharding.specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, input_specs
+from repro.core.anytime import AnytimeConfig, anytime_round
+from repro.models import model as M
+from repro.models.kvcache import cache_specs
+from repro.optim.optimizers import Optimizer, sgd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """How a flat global batch maps onto (workers x local steps x microbatch)."""
+
+    n_workers: int
+    q_max: int
+    microbatch: int
+
+    @staticmethod
+    def for_shape(shape: InputShape, n_workers: int, q_max: int = 4) -> "TrainPlan":
+        gb = shape.global_batch
+        per = gb // (n_workers * q_max)
+        if per == 0 or per * n_workers * q_max != gb:
+            raise ValueError(
+                f"global_batch={gb} does not split into W={n_workers} x q_max={q_max}"
+            )
+        return TrainPlan(n_workers, q_max, per)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    plan: TrainPlan,
+    opt: Optional[Optimizer] = None,
+    weighting: str = "anytime",
+    iterate_mode: str = "last",
+) -> Callable:
+    """One Anytime round. Signature:
+
+        params', opt_state', metrics = step(params, opt_state, batch, q, rstep)
+
+    batch leaves [W, q_max, b, ...]; q int32[W]; rstep scalar round index.
+    The paper's local optimizer is plain SGD (no state) — the default.
+    """
+    opt = opt or sgd(3e-4)
+    acfg = AnytimeConfig(
+        n_workers=plan.n_workers,
+        max_local_steps=plan.q_max,
+        weighting=weighting,
+        iterate_mode=iterate_mode,
+    )
+    loss = lambda p, mb: M.loss_fn(p, cfg, mb)
+    rnd = anytime_round(loss, opt, acfg)
+
+    def step(params, opt_state, batch, q, rstep):
+        return rnd(params, opt_state, batch, q, rstep * plan.q_max)
+
+    return step
+
+
+def make_generalized_step(
+    cfg: ModelConfig,
+    plan: TrainPlan,
+    opt: Optional[Optimizer] = None,
+    comm_frac: float = 0.5,
+) -> tuple[Callable, int]:
+    """Sec.-V generalized round as a production step (worker-stacked params).
+
+    Returns (step, max_comm_steps). Signature:
+        wparams', wopt', metrics = step(wparams, wopt, batch, comm_batch, q, q_bar, rstep)
+    wparams leaves carry the worker axis [W, ...] (sharded over pod/data —
+    workers are no longer synchronized at round start, paper Sec. V).
+    """
+    from repro.core.generalized import generalized_round
+
+    opt = opt or sgd(3e-4)
+    qc = max(int(plan.q_max * comm_frac), 1)
+    acfg = AnytimeConfig(n_workers=plan.n_workers, max_local_steps=plan.q_max)
+    loss = lambda p, mb: M.loss_fn(p, cfg, mb)
+    rnd = generalized_round(loss, opt, acfg, qc)
+
+    def step(wparams, wopt, batch, comm_batch, q, q_bar, rstep):
+        return rnd(wparams, wopt, batch, comm_batch, q, q_bar, rstep * (plan.q_max + qc))
+
+    return step, qc
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens, position):
+        return M.decode_step(params, cfg, cache, tokens, position)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, tokens, prefix_embeddings=None):
+        logits, _ = M.apply(params, cfg, tokens, prefix_embeddings)
+        return logits
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------------
+# Dry-run argument specs (ShapeDtypeStruct only)
+# --------------------------------------------------------------------------
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, plan: TrainPlan) -> dict:
+    """[W, q_max, b, ...] microbatch stream specs for one round."""
+    flat = input_specs(cfg, shape)
+    w, qm, b = plan.n_workers, plan.q_max, plan.microbatch
+
+    def reshape(sds: jax.ShapeDtypeStruct) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((w, qm, b) + sds.shape[1:], sds.dtype)
+
+    return {k: reshape(v) for k, v in flat.items()}
+
+
+def serve_arg_specs(cfg: ModelConfig, shape: InputShape) -> tuple[dict, PyTree]:
+    """(token/position specs, cache specs) for a decode shape."""
+    toks = input_specs(cfg, shape)
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    return toks, cache
+
+
+def shape_cfg(cfg: ModelConfig, shape: InputShape, model_parallel: int) -> ModelConfig:
+    """Resolve the per-shape config variant (DESIGN.md §4 long_500k policy)."""
+    changes: dict = {"model_parallel": model_parallel}
+    if shape.name == "long_500k":
+        if cfg.long_context == "skip":
+            raise ValueError(f"{cfg.name} skips long_500k by design")
+        if cfg.long_context == "sliding" and cfg.attn == "full":
+            changes["attn"] = "sliding"  # explicitly-flagged sliding variant
+        elif cfg.long_context == "sliding" and cfg.attn == "mla":
+            changes["force_sliding"] = True  # MLA keeps its type, adds the window
+    if shape.kind == "train" and cfg.remat == "none":
+        changes["remat"] = "dots"  # default training checkpoint policy
+    return dataclasses.replace(cfg, **changes)

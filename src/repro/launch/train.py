@@ -1,0 +1,120 @@
+"""End-to-end Anytime-Gradients LM trainer.
+
+Runs on whatever devices exist: the CPU smoke path uses the reduced config
+on a degenerate mesh; on a real fleet the same code takes the production
+mesh and the measured per-worker step counts.  The straggler model supplies
+q_v per round (simulated here; measured in deployment — the algorithm is
+identical, DESIGN.md §3).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --rounds 40 --workers 8 --s 1 --persistent-frac 0.125
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core.straggler import StragglerModel
+from repro.data.pipeline import TokenBatcher
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.steps import TrainPlan, make_train_step
+from repro.models import model as M
+from repro.optim import adam, clip_by_global_norm, chain, linear_warmup_cosine, sgd
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", help="CPU-scale variant")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--q-max", type=int, default=4)
+    ap.add_argument("--s", type=int, default=1, help="data replication S")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--local-batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", choices=["sgd", "adam"], default="adam")
+    ap.add_argument("--weighting", choices=["anytime", "uniform"], default="anytime")
+    ap.add_argument("--straggler", default="shifted_exp")
+    ap.add_argument("--persistent-frac", type=float, default=0.0)
+    ap.add_argument("--budget-t", type=float, default=3.0, help="epoch time budget (sim units)")
+    ap.add_argument("--n-seqs", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics-file", default=None, help="JSONL per-round metrics")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"[train] {cfg.name} family={cfg.family} params~{M.param_count(cfg):,}")
+
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init(key, cfg)
+    if args.optimizer == "adam":
+        sched = linear_warmup_cosine(args.lr, 20, args.rounds * args.q_max)
+        opt = chain(clip_by_global_norm(1.0), adam(sched))
+    else:
+        opt = sgd(args.lr)
+    opt_state = opt.init(params)
+
+    toks = synthetic_tokens(rng, args.n_seqs, args.seq_len, cfg.vocab)
+    prefix = None
+    if cfg.n_prefix_embeddings or cfg.family == "encdec":
+        p = cfg.n_prefix_embeddings or 8
+        prefix = rng.standard_normal((args.n_seqs, p, cfg.prefix_source_dim or cfg.d_model)).astype(np.float32)
+    batcher = TokenBatcher(toks, args.workers, args.s, args.q_max, args.local_batch,
+                           seed=args.seed, prefix=prefix)
+    smodel = StragglerModel(kind=args.straggler, persistent_frac=args.persistent_frac)
+    speeds = smodel.worker_speed(rng, args.workers)
+
+    plan = TrainPlan(args.workers, args.q_max, args.local_batch)
+    step = jax.jit(make_train_step(cfg, plan, opt, weighting=args.weighting))
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    wall = 0.0
+    metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
+    for r in range(args.rounds):
+        q = smodel.realize_steps(rng, args.workers, args.budget_t, args.q_max, speeds)
+        batch = {k: jnp.asarray(v) for k, v in batcher.round_batch().items()}
+        t0 = time.time()
+        params, opt_state, metrics = step(params, opt_state, batch, jnp.asarray(q, jnp.int32), jnp.int32(r))
+        loss = float(metrics["loss"])
+        wall += time.time() - t0
+        if metrics_f:
+            import json as _json
+
+            lam = np.asarray(metrics["lambdas"], np.float64)
+            ent = float(-(lam[lam > 0] * np.log(lam[lam > 0])).sum())
+            metrics_f.write(_json.dumps({
+                "round": r, "loss": loss, "q": q.tolist(),
+                "q_total": int(metrics["q_total"]),
+                "lambda_entropy": ent, "wall_s": wall,
+            }) + "\n")
+            metrics_f.flush()
+        if r % args.log_every == 0:
+            print(
+                f"round {r:4d} loss {loss:.4f} Q={int(metrics['q_total'])} "
+                f"q={q.tolist()} ({wall:.1f}s)"
+            )
+        if ckpt and (r + 1) % 10 == 0:
+            ckpt.save(r + 1, {"params": params, "opt_state": opt_state})
+    if ckpt:
+        ckpt.save(args.rounds, {"params": params, "opt_state": opt_state})
+    if metrics_f:
+        metrics_f.close()
+    print(f"[train] done: final loss {loss:.4f} wall {wall:.1f}s")
+    return loss
+
+
+if __name__ == "__main__":
+    main()

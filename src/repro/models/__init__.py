@@ -1,0 +1,15 @@
+"""Architecture families for the assigned configs.
+
+All models expose the same functional interface (no flax):
+
+  params            = init(rng, cfg)                     pytree, layers STACKED
+  logits            = apply(params, cfg, tokens, ...)    training/prefill
+  loss, aux         = loss_fn(params, cfg, batch)
+  cache             = init_cache(cfg, batch, max_len)    decode state
+  logits, cache     = decode_step(params, cfg, cache, token, pos)
+
+Layers are stacked on a leading axis and consumed with lax.scan so HLO size
+is O(1) in depth (mandatory for the 512-device dry-run compiles).
+"""
+
+from repro.models.model import init, apply, loss_fn, init_cache, decode_step, prefill, prefill_bulk  # noqa: F401

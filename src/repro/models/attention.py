@@ -1,0 +1,343 @@
+"""Attention variants: GQA (full / sliding-window / causal), MLA, decode.
+
+Shapes (per worker replica — the leading batch axis is already the
+per-worker microbatch):
+    x          [B, S, D]
+    q          [B, S, Hp, Dh]      (Hp = q heads padded to the model axis)
+    k, v       [B, S, Hkvp, Dh]
+    kv cache   [B, C, Hkvp, Dh]    (C = capacity; ring for sliding window)
+
+Head padding (DESIGN.md §4): q heads are padded so the 16-wide `model` mesh
+axis divides them; padded heads are masked out of the output projection
+(zero contribution AND zero gradient into wo's padded rows), so padding is
+mathematically inert.  The real GQA grouping is preserved exactly via an
+explicit q->kv gather map (`resolve_heads`).
+
+The pure-jnp paths are the reference; cfg.kernel_impl='pallas[_interpret]'
+routes prefill to kernels.ops.flash_attention and decode to
+kernels.ops.decode_attention (same math, VMEM-tiled).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.kvcache import resolve_heads
+from repro.models.layers import apply_rope, dense
+
+NEG_INF = -1e30
+
+
+def expand_kv(k: jax.Array, qmap: list[int]) -> jax.Array:
+    """[..., Hkvp, Dh] -> [..., Hp, Dh] via the exact q->kv grouping map."""
+    if list(qmap) == list(range(k.shape[-2])):
+        return k
+    return jnp.take(k, jnp.asarray(qmap, jnp.int32), axis=-2)
+
+
+def head_mask(hp: int, h_real: int, dtype) -> jax.Array:
+    """[Hp, 1] multiplier zeroing padded heads before the output projection."""
+    return (jnp.arange(hp) < h_real).astype(dtype)[:, None]
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0, window: Optional[int] = None) -> jax.Array:
+    """[s_q, s_k] boolean 'may attend' mask; optional sliding window."""
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_k)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return ok
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: Optional[jax.Array],
+    impl: str = "xla",
+    window: Optional[int] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Core attention on already-expanded heads. q [B,S,H,Dh], k/v [B,Sk,H,Dh]."""
+    if impl.startswith("pallas"):
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v, causal=causal, window=window, interpret=impl == "pallas_interpret"
+        )
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA block attention (training / prefill)
+# --------------------------------------------------------------------------
+def gqa_qkv(lp: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """Project + rope. Returns q [B,S,Hp,Dh], k/v [B,S,Hkvp,Dh]."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    hp, hkvp, _ = resolve_heads(cfg)
+    q = dense(x, lp["wq"], lp.get("bq")).reshape(b, s, hp, hd)
+    k = dense(x, lp["wk"], lp.get("bk")).reshape(b, s, hkvp, hd)
+    v = dense(x, lp["wv"], lp.get("bv")).reshape(b, s, hkvp, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """lp: {wq,wk,wv,wo[,bq,bk,bv]}. x [B,S,D].
+
+    return_kv: also return the roped (k, v) [B,S,Hkvp,Dh] so bulk prefill
+    can scatter them straight into the decode cache.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    hp, _, qmap = resolve_heads(cfg)
+    q, k, v = gqa_qkv(lp, cfg, x, positions)
+    kk, vv = expand_kv(k, qmap), expand_kv(v, qmap)
+    window = cfg.sliding_window if (cfg.attn == "sliding" or cfg.force_sliding) else None
+    if cfg.kernel_impl.startswith("pallas"):
+        out = mha(q, kk, vv, None, cfg.kernel_impl, window, causal)
+    else:
+        mask = causal_mask(s, s, window=window)[None, None] if (causal or window) else None
+        out = mha(q, kk, vv, mask, "xla", window, causal)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    out = dense(out.reshape(b, s, hp * hd), lp["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[..., Dh] bf16 -> (int8 values, per-[...] absmax scale)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / safe[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def gqa_decode(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    position: jax.Array,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """One-token decode. x [B,1,D]; caches [B,C,Hkvp,Dh] (ring if sliding).
+
+    Returns (out [B,1,D], updated cache dict).  Ring semantics: slot =
+    position % C; once full, the ring IS the sliding window (keys carry
+    their rope, and softmax is permutation-invariant over slots).
+    With cfg.kv_quant the ring stores int8 + per-(position, head) scales.
+    """
+    b, _, _ = x.shape
+    hd = cfg.head_dim_
+    hp, _, qmap = resolve_heads(cfg)
+    cap = k_cache.shape[1]
+    # position: scalar (lockstep batch) OR int32[B] (continuous batching)
+    pos_b = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
+    pos = pos_b[:, None]
+    q = dense(x, lp["wq"], lp.get("bq")).reshape(b, 1, hp, hd)
+    k = dense(x, lp["wk"], lp.get("bk")).reshape(b, 1, -1, hd)
+    v = dense(x, lp["wv"], lp.get("bv")).reshape(b, 1, -1, hd)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = (pos_b % cap).astype(jnp.int32)  # [B]
+    rows = jnp.arange(b)
+    if cfg.kv_quant:
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        k_cache = k_cache.at[rows, slot].set(k_q[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v_q[:, 0])
+        k_scale = k_scale.at[rows, slot].set(k_s[:, 0])
+        v_scale = v_scale.at[rows, slot].set(v_s[:, 0])
+        k_full = dequantize_kv(k_cache, k_scale, x.dtype)
+        v_full = dequantize_kv(v_cache, v_scale, x.dtype)
+    else:
+        k_cache = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
+        k_full, v_full = k_cache, v_cache
+    n_valid = jnp.minimum(pos_b + 1, cap)  # [B]
+    valid = jnp.arange(cap)[None, :] < n_valid[:, None]  # [B, C]
+    if cfg.kernel_impl.startswith("pallas"):
+        from repro.kernels import ops as kops
+
+        out = kops.decode_attention(
+            q,
+            expand_kv(k_full, qmap),
+            expand_kv(v_full, qmap),
+            valid,
+            interpret=cfg.kernel_impl == "pallas_interpret",
+        )
+    else:
+        kk = expand_kv(k_full, qmap)
+        vv = expand_kv(v_full, qmap)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32)
+        logits = logits / math.sqrt(hd)
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vv.dtype), vv, preferred_element_type=jnp.float32)
+        out = out.astype(x.dtype)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    new_cache = {"k": k_cache, "v": v_cache}
+    if cfg.kv_quant:
+        new_cache.update({"k_scale": k_scale, "v_scale": v_scale})
+    return dense(out.reshape(b, 1, hp * hd), lp["wo"]), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2, MiniCPM3)
+# --------------------------------------------------------------------------
+def _mla_dims(cfg: ModelConfig):
+    m = cfg.mla
+    hp, _, _ = resolve_heads(cfg)
+    return m, hp, m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+
+def mla_attention(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """Training/prefill MLA.
+
+    Params: wdq [D,qr] (optional), wuq [qr|D, Hp*(dn+dr)], wdkv [D, kvr],
+            wukv [kvr, Hp*(dn+dv)], wkr [D, dr], wo [Hp*dv, D].
+    The KV path is compressed through the kv_lora_rank latent; decode caches
+    ONLY the latent + rope key (the architecture's raison d'etre).
+    """
+    m, hp, dn, dr, dv = _mla_dims(cfg)
+    b, s, _ = x.shape
+    qin = dense(x, lp["wdq"]) if "wdq" in lp else x
+    q = dense(qin, lp["wuq"]).reshape(b, s, hp, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = dense(x, lp["wdkv"])  # [B,S,kvr]
+    k_rope = apply_rope(dense(x, lp["wkr"]).reshape(b, s, 1, dr), positions, cfg.rope_theta)
+    kv = dense(ckv, lp["wukv"]).reshape(b, s, hp, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, hp, dr))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    window = cfg.sliding_window if (cfg.attn == "sliding" or cfg.force_sliding) else None
+    if cfg.kernel_impl.startswith("pallas"):
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, (dn + dr) - dv))) if dv != dn + dr else v
+        out = mha(qfull, k, vpad, None, cfg.kernel_impl, window, causal)[..., :dv]
+    else:
+        mask = causal_mask(s, s, window=window)[None, None]
+        scale = 1.0 / math.sqrt(dn + dr)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qfull, k, preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    out = dense(out.reshape(b, s, hp * dv), lp["wo"])
+    if return_kv:
+        # the compressed decode cache stores (latent, roped shared key)
+        return out, (ckv, k_rope[:, :, 0])
+    return out
+
+
+def mla_decode(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    ckv_cache: jax.Array,  # [B, C, kvr]  compressed latents
+    kr_cache: jax.Array,  # [B, C, dr]   shared rope keys
+    position: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """MLA decode against the compressed cache (absorbed-projection trick).
+
+    Per DeepSeek-V2: fold W_uk into the query and W_uv into the output so
+    attention runs directly on [C, kvr] latents — the cache stays compressed.
+    """
+    m, hp, dn, dr, dv = _mla_dims(cfg)
+    b, _, _ = x.shape
+    kvr = m.kv_lora_rank
+    cap = ckv_cache.shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
+    pos = pos_b[:, None]
+    qin = dense(x, lp["wdq"]) if "wdq" in lp else x
+    q = dense(qin, lp["wuq"]).reshape(b, 1, hp, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv_new = dense(x, lp["wdkv"])  # [B,1,kvr]
+    kr_new = apply_rope(dense(x, lp["wkr"]).reshape(b, 1, 1, dr), pos, cfg.rope_theta)[:, :, 0]
+    slot = (pos_b % cap).astype(jnp.int32)
+    rows = jnp.arange(b)
+    ckv_cache = ckv_cache.at[rows, slot].set(ckv_new[:, 0].astype(ckv_cache.dtype))
+    kr_cache = kr_cache.at[rows, slot].set(kr_new[:, 0].astype(kr_cache.dtype))
+    wukv = lp["wukv"].reshape(kvr, hp, dn + dv)
+    wuk, wuv = wukv[..., :dn], wukv[..., dn:]
+    # f32 math throughout: the absorbed-projection dots hit shapes the CPU
+    # backend cannot do as bf16xbf16->f32, and decode is tiny anyway
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wuk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (
+        jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    ) * scale
+    n_valid = jnp.minimum(pos_b + 1, cap)  # [B]
+    valid = (jnp.arange(cap)[None, :] < n_valid[:, None])[:, None, None, :]
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv.astype(jnp.float32)).astype(x.dtype)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    return dense(out.reshape(b, 1, hp * dv), lp["wo"]), ckv_cache, kr_cache
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# --------------------------------------------------------------------------
+def cross_attention(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    memory_k: jax.Array,  # [B, Sm, Hkvp, Dh] precomputed from encoder output
+    memory_v: jax.Array,
+) -> jax.Array:
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    hp, _, qmap = resolve_heads(cfg)
+    q = dense(x, lp["wq"]).reshape(b, s, hp, hd)
+    out = mha(q, expand_kv(memory_k, qmap), expand_kv(memory_v, qmap), None, "xla", None, causal=False)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    return dense(out.reshape(b, s, hp * hd), lp["wo"])
+
+
+def cross_kv(lp: dict, cfg: ModelConfig, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output [B, Sm, D]."""
+    b, sm, _ = memory.shape
+    hd = cfg.head_dim_
+    _, hkvp, _ = resolve_heads(cfg)
+    k = dense(memory, lp["wk"]).reshape(b, sm, hkvp, hd)
+    v = dense(memory, lp["wv"]).reshape(b, sm, hkvp, hd)
+    return k, v

@@ -1,0 +1,153 @@
+"""Decode-state structures for every architecture family.
+
+Caches are pytrees whose leaves carry a LEADING LAYER AXIS so the decode
+step can lax.scan over layers (cache slice in, updated slice out).
+
+Families:
+  dense / vlm      ring KV cache  k,v: [L, B, C, Hkvp, Dh]
+                   (C = sliding_window for 'sliding', else full seq capacity)
+  mla              compressed cache  ckv: [L, B, C, kv_lora], kr: [L, B, C, dr]
+  moe              same as dense or mla depending on cfg.attn
+  ssm (xlstm)      per-layer mLSTM state {c,n,m} + sLSTM state {c,n,h,m}
+  hybrid (hymba)   sliding ring KV + mamba {conv, h} state
+  encdec           decoder self KV + precomputed cross-attention memory k/v
+
+`cache_specs` mirrors `init_cache` with ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def resolve_heads(cfg: ModelConfig) -> tuple[int, int, list[int]]:
+    """(padded_q_heads, padded_kv_heads, q->kv map) for cfg.model_parallel.
+
+    Hp = ceil(H/mp)*mp.  Hkvp = Hp/r for the largest divisor r of Hp with
+    Hp/r >= Hkv (minimal kv padding).  qmap[i] maps padded q head i to its
+    kv head: real heads keep the real grouping i // (H // Hkv); padded
+    heads map to kv 0 and are masked out of the output projection.
+    """
+    mp = max(getattr(cfg, "model_parallel", 1), 1)
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    hp = math.ceil(h / mp) * mp
+    r = 1
+    for cand in range(hp, 0, -1):
+        if hp % cand == 0 and hp // cand >= hkv:
+            r = cand
+            break
+    hkvp = hp // r
+    if hkvp == hp:
+        # padded MHA: keep the identity map — padded q heads read padded kv
+        # heads (garbage in, masked out) and the expand gather becomes a
+        # no-op instead of materializing a second cache-sized buffer
+        return hp, hkvp, list(range(hp))
+    group = max(h // hkv, 1)
+    qmap = [min(i // group, hkv - 1) if i < h else 0 for i in range(hp)]
+    return hp, hkvp, qmap
+
+
+def decode_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """Cache capacity: sliding archs keep a ring of window size."""
+    if cfg.attn == "sliding" or cfg.force_sliding:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def _attn_cache_shapes(cfg: ModelConfig, batch: int, cap: int) -> dict[str, tuple]:
+    l = cfg.n_layers
+    if cfg.attn == "mla":
+        m = cfg.mla
+        return {
+            "ckv": (l, batch, cap, m.kv_lora_rank),
+            "kr": (l, batch, cap, m.qk_rope_head_dim),
+        }
+    _, hkvp, _ = resolve_heads(cfg)
+    hd = cfg.head_dim_
+    shapes = {"k": (l, batch, cap, hkvp, hd), "v": (l, batch, cap, hkvp, hd)}
+    if cfg.kv_quant:
+        # int8 ring + per-(position, head) absmax scales
+        shapes["k_scale"] = (l, batch, cap, hkvp)
+        shapes["v_scale"] = (l, batch, cap, hkvp)
+    return shapes
+
+
+def _ssm_state_shapes(cfg: ModelConfig, batch: int) -> dict[str, tuple]:
+    sc = cfg.ssm
+    l = cfg.n_layers
+    di = sc.expand * cfg.d_model
+    return {
+        "conv": (l, batch, sc.conv_kernel - 1, di),
+        "h": (l, batch, di, sc.state_dim),
+    }
+
+
+def _xlstm_state_shapes(cfg: ModelConfig, batch: int) -> dict[str, tuple]:
+    xc = cfg.xlstm
+    n_super = cfg.n_layers // (xc.m_per_s + 1)
+    di = int(xc.proj_factor_m * cfg.d_model)
+    h = cfg.n_heads
+    dh_m = di // h
+    dh_s = cfg.d_model // h
+    return {
+        "m_c": (n_super, xc.m_per_s, batch, h, dh_m, dh_m),
+        "m_n": (n_super, xc.m_per_s, batch, h, dh_m),
+        "m_m": (n_super, xc.m_per_s, batch, h),
+        "m_conv": (n_super, xc.m_per_s, batch, xc.conv_kernel - 1, di),
+        "s_c": (n_super, batch, h, dh_s),
+        "s_n": (n_super, batch, h, dh_s),
+        "s_h": (n_super, batch, h, dh_s),
+        "s_m": (n_super, batch, h, dh_s),
+    }
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int) -> dict[str, tuple]:
+    cap = decode_capacity(cfg, seq_len)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return _xlstm_state_shapes(cfg, batch)
+    shapes: dict[str, tuple] = {}
+    if cfg.family == "hybrid":
+        shapes.update(_attn_cache_shapes(cfg, batch, min(cfg.sliding_window, seq_len)))
+        shapes.update(_ssm_state_shapes(cfg, batch))
+        return shapes
+    shapes.update(_attn_cache_shapes(cfg, batch, cap))
+    if cfg.family == "encdec":
+        _, hkvp, _ = resolve_heads(cfg)
+        hd = cfg.head_dim_
+        mem = cfg.n_prefix_embeddings or 1024
+        shapes["cross_k"] = (cfg.n_layers, batch, mem, hkvp, hd)
+        shapes["cross_v"] = (cfg.n_layers, batch, mem, hkvp, hd)
+    return shapes
+
+
+def _state_dtype(cfg: ModelConfig, name: str):
+    # recurrent numerics (mLSTM/sLSTM/mamba h) stay f32; KV rings in model dtype
+    if cfg.kv_quant and name in ("k", "v"):
+        return jnp.int8
+    if name in ("k_scale", "v_scale"):
+        return jnp.bfloat16
+    if name in ("k", "v", "ckv", "kr", "cross_k", "cross_v", "m_conv", "conv"):
+        return cfg.dtype_
+    return jnp.float32
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+    return {
+        name: jnp.zeros(shape, _state_dtype(cfg, name))
+        for name, shape in cache_shapes(cfg, batch, seq_len).items()
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+    """ShapeDtypeStruct mirror of init_cache (dry-run: zero allocation)."""
+    return {
+        name: jax.ShapeDtypeStruct(shape, _state_dtype(cfg, name))
+        for name, shape in cache_shapes(cfg, batch, seq_len).items()
+    }

@@ -1,0 +1,108 @@
+"""Shared neural-net primitives (pure JAX, no flax).
+
+Initializers return plain jnp arrays; callers assemble nested dicts.  All
+matmuls accumulate in float32 (`preferred_element_type`) — bf16 storage,
+f32 math, the TPU-native convention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype, scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-ish), the LLM default."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * std).astype(dtype)
+
+
+def stacked_dense_init(key: jax.Array, n: int, d_in: int, d_out: int, dtype, scale=None) -> jax.Array:
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (n, d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# linear (f32 accumulation)
+# --------------------------------------------------------------------------
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    out = jnp.einsum("...d,df->...f", x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU FFN: w2( silu(x w1) * (x w3) )."""
+    h = jax.nn.silu(dense(x, w1).astype(jnp.float32)) * dense(x, w3).astype(jnp.float32)
+    return dense(h.astype(x.dtype), w2)
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1, w2: jax.Array, b2) -> jax.Array:
+    h = jax.nn.gelu(dense(x, w1, b1).astype(jnp.float32), approximate=True)
+    return dense(h.astype(x.dtype), w2, b2)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim/2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate [..., seq, n_heads, head_dim] by position-dependent angles.
+
+    positions: broadcastable to [..., seq] (int or float).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, valid: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token-level CE. logits [..., V] f32-accumulated, labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if valid is None:
+        return jnp.mean(nll)
+    v = valid.astype(jnp.float32)
+    return jnp.sum(nll * v) / jnp.maximum(jnp.sum(v), 1.0)

@@ -1,0 +1,684 @@
+"""Unified model: init / apply / loss / prefill / decode for every family.
+
+Families (cfg.family):
+  dense   GQA or MLA attention + SwiGLU FFN        (qwen*, starcoder2, minicpm3)
+  moe     attention + routed/shared experts        (deepseek-v2-lite, phi3.5-moe)
+  ssm     xLSTM superblocks (mLSTM x m + sLSTM)    (xlstm-350m)
+  hybrid  parallel attention + Mamba heads         (hymba-1.5b)
+  encdec  encoder stack + causal decoder w/ cross  (seamless-m4t-medium)
+  vlm     dense backbone + projected patch prefix  (llava-next-mistral-7b)
+
+Every stack is consumed with lax.scan over STACKED layer params so HLO size
+is depth-independent (512-device dry-run compiles stay tractable).  The
+modality frontends of vlm/audio archs are STUBS by assignment: apply()
+consumes precomputed prefix embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.kvcache import init_cache, resolve_heads  # noqa: F401  (re-export)
+from repro.models.layers import (
+    dense,
+    embed_init,
+    rms_norm,
+    softmax_cross_entropy,
+    stacked_dense_init,
+    swiglu,
+)
+
+PyTree = Any
+
+
+# ==========================================================================
+# Initialization
+# ==========================================================================
+def _attn_params(key, cfg: ModelConfig, n: int, dt) -> dict:
+    hd = cfg.head_dim_
+    hp, hkvp, _ = resolve_heads(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.attn == "mla":
+        m = cfg.mla
+        dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+        p = {}
+        if m.q_lora_rank:
+            p["wdq"] = stacked_dense_init(ks[0], n, d, m.q_lora_rank, dt)
+            q_in = m.q_lora_rank
+        else:
+            q_in = d
+        p["wuq"] = stacked_dense_init(ks[1], n, q_in, hp * (dn + dr), dt)
+        p["wdkv"] = stacked_dense_init(ks[2], n, d, m.kv_lora_rank, dt)
+        p["wkr"] = stacked_dense_init(ks[3], n, d, dr, dt)
+        p["wukv"] = stacked_dense_init(ks[4], n, m.kv_lora_rank, hp * (dn + dv), dt)
+        p["wo"] = stacked_dense_init(ks[5], n, hp * dv, d, dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * d))
+        return p
+    p = {
+        "wq": stacked_dense_init(ks[0], n, d, hp * hd, dt),
+        "wk": stacked_dense_init(ks[1], n, d, hkvp * hd, dt),
+        "wv": stacked_dense_init(ks[2], n, d, hkvp * hd, dt),
+        "wo": stacked_dense_init(ks[3], n, hp * hd, d, dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, hp * hd), dt)
+        p["bk"] = jnp.zeros((n, hkvp * hd), dt)
+        p["bv"] = jnp.zeros((n, hkvp * hd), dt)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, n: int, dt, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": stacked_dense_init(ks[0], n, d, f, dt),
+        "w3": stacked_dense_init(ks[1], n, d, f, dt),
+        "w2": stacked_dense_init(ks[2], n, f, d, dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * f)),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig, n: int, dt) -> dict:
+    mc = cfg.moe
+    d = cfg.d_model
+    fe = mc.d_ff_expert or cfg.d_ff
+    e = mc.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": stacked_dense_init(ks[0], n, d, e, jnp.float32, scale=0.02),
+        "w1": (jax.random.truncated_normal(ks[1], -2, 2, (n, e, d, fe)) / math.sqrt(d)).astype(dt),
+        "w3": (jax.random.truncated_normal(ks[2], -2, 2, (n, e, d, fe)) / math.sqrt(d)).astype(dt),
+        "w2": (jax.random.truncated_normal(ks[3], -2, 2, (n, e, fe, d)) / math.sqrt(2 * cfg.n_layers * fe)).astype(dt),
+    }
+    if mc.n_shared:
+        fs = mc.n_shared * fe
+        p["sw1"] = stacked_dense_init(ks[4], n, d, fs, dt)
+        p["sw3"] = stacked_dense_init(ks[5], n, d, fs, dt)
+        p["sw2"] = stacked_dense_init(ks[6], n, fs, d, dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * fs))
+    return p
+
+
+def _mamba_params(key, cfg: ModelConfig, n: int, dt) -> dict:
+    sc = cfg.ssm
+    d = cfg.d_model
+    di = sc.expand * d
+    dtr = sc.dt_rank or math.ceil(d / 16)
+    k = sc.conv_kernel
+    ks = jax.random.split(key, 6)
+    a_init = jnp.broadcast_to(jnp.arange(1, sc.state_dim + 1, dtype=jnp.float32), (n, di, sc.state_dim))
+    return {
+        "in_proj": stacked_dense_init(ks[0], n, d, 2 * di, dt),
+        "conv": (jax.random.normal(ks[1], (n, k, di)) / math.sqrt(k)).astype(jnp.float32),
+        "x_proj": stacked_dense_init(ks[2], n, di, dtr + 2 * sc.state_dim, dt),
+        "dt_proj": stacked_dense_init(ks[3], n, dtr, di, jnp.float32),
+        "dt_bias": jnp.full((n, di), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),
+        "d": jnp.ones((n, di), jnp.float32),
+        "out_proj": stacked_dense_init(ks[4], n, di, d, dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * di)),
+    }
+
+
+def _xlstm_params(key, cfg: ModelConfig, dt) -> dict:
+    xc = cfg.xlstm
+    d = cfg.d_model
+    ns = cfg.n_layers // (xc.m_per_s + 1)
+    m = xc.m_per_s
+    di = int(xc.proj_factor_m * d)
+    h = cfg.n_heads
+    dhs = d // h
+    fs = math.ceil(xc.proj_factor_s * d / 128) * 128  # lane/shard-friendly
+    ks = jax.random.split(key, 12)
+    return {
+        "m_ln": jnp.zeros((ns, m, d), jnp.float32),
+        "m_up": (jax.random.truncated_normal(ks[0], -2, 2, (ns, m, d, 2 * di)) / math.sqrt(d)).astype(dt),
+        "m_conv": (jax.random.normal(ks[1], (ns, m, xc.conv_kernel, di)) / math.sqrt(xc.conv_kernel)).astype(jnp.float32),
+        "m_wq": (jax.random.truncated_normal(ks[2], -2, 2, (ns, m, di, di)) / math.sqrt(di)).astype(dt),
+        "m_wk": (jax.random.truncated_normal(ks[3], -2, 2, (ns, m, di, di)) / math.sqrt(di)).astype(dt),
+        "m_wv": (jax.random.truncated_normal(ks[4], -2, 2, (ns, m, di, di)) / math.sqrt(di)).astype(dt),
+        "m_wif": (jax.random.truncated_normal(ks[5], -2, 2, (ns, m, di, 2 * h)) * 0.02).astype(jnp.float32),
+        "m_down": (jax.random.truncated_normal(ks[6], -2, 2, (ns, m, di, d)) / math.sqrt(2 * cfg.n_layers * di)).astype(dt),
+        "s_ln": jnp.zeros((ns, d), jnp.float32),
+        "s_gates": (jax.random.truncated_normal(ks[7], -2, 2, (ns, d, 4 * d)) / math.sqrt(d)).astype(dt),
+        "s_r": (jax.random.truncated_normal(ks[8], -2, 2, (ns, 4, h, dhs, dhs)) / math.sqrt(dhs)).astype(jnp.float32),
+        "s_ln2": jnp.zeros((ns, d), jnp.float32),
+        "s_w1": (jax.random.truncated_normal(ks[9], -2, 2, (ns, d, fs)) / math.sqrt(d)).astype(dt),
+        "s_w3": (jax.random.truncated_normal(ks[10], -2, 2, (ns, d, fs)) / math.sqrt(d)).astype(dt),
+        "s_w2": (jax.random.truncated_normal(ks[11], -2, 2, (ns, fs, d)) / math.sqrt(2 * cfg.n_layers * fs)).astype(dt),
+    }
+
+
+def _block_params(key, cfg: ModelConfig, n: int, dt, encoder: bool = False) -> dict:
+    """Stacked params for n scanned layers of the cfg trunk."""
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    p: dict = {"ln1": jnp.zeros((n, d), jnp.float32), "ln2": jnp.zeros((n, d), jnp.float32)}
+    if cfg.family == "ssm":
+        raise AssertionError("xlstm uses _xlstm_params")
+    p["attn"] = _attn_params(ks[0], cfg, n, dt)
+    if cfg.family == "moe" and not encoder:
+        p["ffn"] = _moe_params(ks[1], cfg, n, dt)
+    else:
+        p["ffn"] = _mlp_params(ks[1], cfg, n, dt)
+    if cfg.family == "hybrid":
+        p["mamba"] = _mamba_params(ks[2], cfg, n, dt)
+        p["attn_norm"] = jnp.zeros((n, d), jnp.float32)
+        p["ssm_norm"] = jnp.zeros((n, d), jnp.float32)
+    if cfg.family == "encdec" and not encoder:
+        p["lnx"] = jnp.zeros((n, d), jnp.float32)
+        p["cross"] = _attn_params(ks[3], dataclasses.replace(cfg, attn="full", qkv_bias=False), n, dt)
+    return p
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = cfg.dtype_
+    vp = cfg.padded_vocab()
+    ks = jax.random.split(rng, 8)
+    params: dict = {
+        "embed": embed_init(ks[0], vp, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[1], (cfg.d_model, vp)) / math.sqrt(cfg.d_model)).astype(dt)
+    if cfg.family == "ssm":
+        params["blocks"] = _xlstm_params(ks[2], cfg, dt)
+    elif cfg.family == "moe" and cfg.moe.first_dense_layers:
+        nd = cfg.moe.first_dense_layers
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        params["dense0"] = _block_params(ks[3], dense_cfg, nd, dt)
+        params["blocks"] = _block_params(ks[2], cfg, cfg.n_layers - nd, dt)
+    else:
+        params["blocks"] = _block_params(ks[2], cfg, cfg.n_layers, dt)
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, attn="full")
+        params["encoder"] = {
+            "blocks": _block_params(ks[4], enc_cfg, cfg.n_encoder_layers, dt, encoder=True),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    if cfg.n_prefix_embeddings or cfg.family in ("vlm", "encdec"):
+        src = cfg.prefix_source_dim or cfg.d_model
+        params["prefix_proj"] = {
+            "w1": dense_init(ks[5], src, cfg.d_model, dt),
+            "w2": dense_init(ks[6], cfg.d_model, cfg.d_model, dt),
+        }
+    return params
+
+
+def dense_init(key, d_in, d_out, dt):
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out)) / math.sqrt(d_in)).astype(dt)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(shapes))
+
+
+# ==========================================================================
+# Block forward (training / prefill)
+# ==========================================================================
+def _zero_aux() -> dict:
+    return {
+        "moe_aux": jnp.zeros((), jnp.float32),
+        "moe_z": jnp.zeros((), jnp.float32),
+        "moe_dropped": jnp.zeros((), jnp.float32),
+    }
+
+
+def _ffn_apply(lp_ffn: dict, cfg: ModelConfig, x: jax.Array, is_moe: bool) -> tuple[jax.Array, dict]:
+    if is_moe:
+        return moe_mod.moe_ffn(lp_ffn, cfg, x)
+    return swiglu(x, lp_ffn["w1"], lp_ffn["w3"], lp_ffn["w2"]), _zero_aux()
+
+
+def _trunk_block(cfg: ModelConfig, is_moe: bool, causal: bool, x, lp, positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a = attn_mod.gqa_attention(lp["attn"], cfg, h, positions, causal=causal)
+        s, _ = ssm_mod.mamba_mixer(lp["mamba"], cfg, h)
+        mixed = 0.5 * (
+            rms_norm(a, lp["attn_norm"], cfg.norm_eps) + rms_norm(s, lp["ssm_norm"], cfg.norm_eps)
+        )
+        x = x + mixed
+    elif cfg.attn == "mla":
+        x = x + attn_mod.mla_attention(lp["attn"], cfg, h, positions, causal=causal)
+    else:
+        x = x + attn_mod.gqa_attention(lp["attn"], cfg, h, positions, causal=causal)
+    if "cross" in lp:
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], cfg, hx, lp["_mem_k"], lp["_mem_v"])
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    f, aux = _ffn_apply(lp["ffn"], cfg, h2, is_moe)
+    return x + f, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(cfg: ModelConfig, blocks: PyTree, x: jax.Array, positions, is_moe: bool, causal: bool):
+    block = partial(_trunk_block, cfg, is_moe, causal)
+
+    def body(carry, lp):
+        y, aux = _remat(lambda c, p: block(c, p, positions), cfg)(carry, lp)
+        return y, aux
+
+    x, auxs = jax.lax.scan(body, x, blocks)
+    return x, jax.tree.map(jnp.sum, auxs)
+
+
+# ---- xLSTM trunk ----
+def _mlstm_layer(cfg: ModelConfig, x: jax.Array, lp: dict) -> jax.Array:
+    """One mLSTM layer (parallel training form). lp leaves unstacked."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = lp["m_up"].shape[-1] // 2
+    xa = rms_norm(x, lp["m_ln"], cfg.norm_eps)
+    up = dense(xa, lp["m_up"])
+    xm, z = up[..., :di], up[..., di:]
+    # causal depthwise conv
+    k = lp["m_conv"].shape[0]
+    pad = jnp.zeros((b, k - 1, di), xm.dtype)
+    xpad = jnp.concatenate([pad, xm], axis=1)
+    idx = jnp.arange(s)[:, None] + jnp.arange(k)[None, :]
+    xc = jnp.einsum("bskd,kd->bsd", xpad[:, idx], lp["m_conv"], preferred_element_type=jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+    q = dense(xc, lp["m_wq"]).reshape(b, s, h, di // h)
+    kk = dense(xc, lp["m_wk"]).reshape(b, s, h, di // h)
+    v = dense(xm, lp["m_wv"]).reshape(b, s, h, di // h)
+    gates = dense(xc, lp["m_wif"]).astype(jnp.float32)  # [B,S,2H]
+    i_g, f_g = gates[..., :h], gates[..., h:]
+    o = ssm_mod.mlstm_parallel(q, kk, v, i_g, f_g)  # [B,S,H,Dh]
+    o = o.reshape(b, s, di) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + dense(o, lp["m_down"])
+
+
+def _slstm_layer(cfg: ModelConfig, x: jax.Array, lp: dict) -> jax.Array:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xa = rms_norm(x, lp["s_ln"], cfg.norm_eps)
+    gates = dense(xa, lp["s_gates"]).reshape(b, s, 4, h, dh)
+    hseq, _ = ssm_mod.slstm_scan(gates, lp["s_r"])
+    x = x + hseq.reshape(b, s, d).astype(x.dtype)
+    h2 = rms_norm(x, lp["s_ln2"], cfg.norm_eps)
+    f = swiglu(h2, lp["s_w1"], lp["s_w3"], lp["s_w2"])
+    return x + f
+
+
+def _xlstm_trunk(cfg: ModelConfig, blocks: PyTree, x: jax.Array) -> jax.Array:
+    m = cfg.xlstm.m_per_s
+
+    def super_body(carry, lp):
+        y = carry
+        for j in range(m):  # small static unroll within the superblock
+            mlp_j = {k2: v[j] for k2, v in lp.items() if k2.startswith("m_")}
+            y = _remat(partial(_mlstm_layer, cfg), cfg)(y, mlp_j)
+        slp = {k2: v for k2, v in lp.items() if k2.startswith("s_")}
+        y = _remat(partial(_slstm_layer, cfg), cfg)(y, slp)
+        return y, ()
+
+    x, _ = jax.lax.scan(super_body, x, blocks)
+    return x
+
+
+# ==========================================================================
+# apply / loss
+# ==========================================================================
+def _encode(params: PyTree, cfg: ModelConfig, memory_in: jax.Array) -> jax.Array:
+    """Encoder stack (bidirectional attention) over projected frames."""
+    x = memory_in
+    positions = jnp.arange(x.shape[1])
+    enc_cfg = dataclasses.replace(cfg, attn="full", family="dense")
+    x, _ = _scan_blocks(enc_cfg, params["encoder"]["blocks"], x, positions, False, causal=False)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _project_prefix(params: PyTree, cfg: ModelConfig, prefix: jax.Array) -> jax.Array:
+    pp = params["prefix_proj"]
+    h = jax.nn.gelu(dense(prefix.astype(cfg.dtype_), pp["w1"]).astype(jnp.float32), approximate=True)
+    return dense(h.astype(cfg.dtype_), pp["w2"])
+
+
+def apply(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    prefix_embeddings: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    """Training / prefill forward. Returns (logits [B, T(, +P for vlm), Vp], aux)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s = tokens.shape
+    n_prefix = 0
+    memory = None
+    if cfg.family == "vlm" and prefix_embeddings is not None:
+        pref = _project_prefix(params, cfg, prefix_embeddings)
+        x = jnp.concatenate([pref, x], axis=1)
+        n_prefix = pref.shape[1]
+    if cfg.family == "encdec":
+        assert prefix_embeddings is not None, "encdec needs encoder frames"
+        memory = _encode(params, cfg, _project_prefix(params, cfg, prefix_embeddings))
+    positions = jnp.arange(x.shape[1])
+    aux = _zero_aux()
+    if cfg.family == "ssm":
+        x = _xlstm_trunk(cfg, params["blocks"], x)
+    elif cfg.family == "encdec":
+        # cross k/v are computed per layer inside the scan from shared memory
+        def body(carry, lp):
+            mk, mv = attn_mod.cross_kv(lp["cross"], cfg, memory)
+            lp = dict(lp)
+            lp["_mem_k"], lp["_mem_v"] = mk, mv
+            y, a = _trunk_block(cfg, False, True, carry, lp, positions)
+            return y, a
+
+        x, auxs = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+        aux = jax.tree.map(jnp.sum, auxs)
+    else:
+        if "dense0" in params:
+            dense_cfg = dataclasses.replace(cfg, family="dense")
+            x, _ = _scan_blocks(dense_cfg, params["dense0"], x, positions, False, True)
+        x, aux = _scan_blocks(cfg, params["blocks"], x, positions, cfg.family == "moe", True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = dense(x, head)
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    return logits, aux
+
+
+def _mask_padded_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    vp = logits.shape[-1]
+    if vp == cfg.vocab:
+        return logits
+    bias = jnp.where(jnp.arange(vp) < cfg.vocab, 0.0, -1e30).astype(logits.dtype)
+    return logits + bias
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Mean next-token CE (+ MoE aux). batch: tokens, labels[, prefix_embeddings]."""
+    logits, aux = apply(params, cfg, batch["tokens"], batch.get("prefix_embeddings"))
+    logits = _mask_padded_vocab(logits, cfg)
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    return ce + aux["moe_aux"] + aux["moe_z"]
+
+
+# ==========================================================================
+# Decode (serve_step)
+# ==========================================================================
+def _decode_dense_block(cfg: ModelConfig, is_moe: bool, x, lp, cache_l: dict, position):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    new_cache = dict(cache_l)
+    if cfg.family == "hybrid":
+        a, upd = attn_mod.gqa_decode(
+            lp["attn"], cfg, h, cache_l["k"], cache_l["v"], position,
+            cache_l.get("k_scale"), cache_l.get("v_scale"),
+        )
+        s_out, st = ssm_mod.mamba_mixer(
+            lp["mamba"], cfg, h, state={"conv": cache_l["conv"], "h": cache_l["h"]}
+        )
+        new_cache.update(upd)
+        new_cache.update({"conv": st["conv"], "h": st["h"]})
+        x = x + 0.5 * (
+            rms_norm(a, lp["attn_norm"], cfg.norm_eps) + rms_norm(s_out, lp["ssm_norm"], cfg.norm_eps)
+        )
+    elif cfg.attn == "mla":
+        a, ckv, kr = attn_mod.mla_decode(lp["attn"], cfg, h, cache_l["ckv"], cache_l["kr"], position)
+        new_cache.update({"ckv": ckv, "kr": kr})
+        x = x + a
+    else:
+        a, upd = attn_mod.gqa_decode(
+            lp["attn"], cfg, h, cache_l["k"], cache_l["v"], position,
+            cache_l.get("k_scale"), cache_l.get("v_scale"),
+        )
+        new_cache.update(upd)
+        x = x + a
+    if "cross" in lp:
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], cfg, hx, cache_l["cross_k"], cache_l["cross_v"])
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(lp["ffn"], cfg, h2, is_moe)
+    return x + f, new_cache
+
+
+def _decode_xlstm(cfg: ModelConfig, blocks: PyTree, cache: dict, x: jax.Array):
+    """One-token step through the xLSTM stack. x [B,1,D]."""
+    m = cfg.xlstm.m_per_s
+    h = cfg.n_heads
+
+    def super_body(carry, scan_in):
+        y = carry  # [B,1,D]
+        lp, cl = scan_in
+        new_cl = dict(cl)
+        mc_list, mn_list, mm_list, mconv_list = [], [], [], []
+        for j in range(m):
+            mlp_j = {k2: v[j] for k2, v in lp.items() if k2.startswith("m_")}
+            b = y.shape[0]
+            di = mlp_j["m_up"].shape[-1] // 2
+            xa = rms_norm(y, mlp_j["m_ln"], cfg.norm_eps)
+            up = dense(xa, mlp_j["m_up"])
+            xm, z = up[..., :di], up[..., di:]
+            conv_state = cl["m_conv"][j]  # [B, K-1, Di]
+            xwin = jnp.concatenate([conv_state.astype(xm.dtype), xm], axis=1)  # [B,K,Di]
+            xc = jnp.einsum("bkd,kd->bd", xwin, mlp_j["m_conv"], preferred_element_type=jnp.float32)
+            xc = jax.nn.silu(xc).astype(y.dtype)[:, None]
+            dh = di // h
+            q = dense(xc, mlp_j["m_wq"]).reshape(b, h, dh)
+            kk = dense(xc, mlp_j["m_wk"]).reshape(b, h, dh)
+            v = dense(xm, mlp_j["m_wv"]).reshape(b, h, dh)
+            gates = dense(xc, mlp_j["m_wif"]).astype(jnp.float32).reshape(b, 2 * h)
+            st = {"c": cl["m_c"][j], "n": cl["m_n"][j], "m": cl["m_m"][j]}
+            o, st2 = ssm_mod.mlstm_step(q, kk, v, gates[:, :h], gates[:, h:], st)
+            o = o.reshape(b, 1, di) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+            y = y + dense(o, mlp_j["m_down"])
+            mc_list.append(st2["c"]); mn_list.append(st2["n"]); mm_list.append(st2["m"])
+            mconv_list.append(xwin[:, 1:].astype(cl["m_conv"].dtype))
+        new_cl["m_c"] = jnp.stack(mc_list)
+        new_cl["m_n"] = jnp.stack(mn_list)
+        new_cl["m_m"] = jnp.stack(mm_list)
+        new_cl["m_conv"] = jnp.stack(mconv_list)
+        # sLSTM single step
+        slp = {k2: v for k2, v in lp.items() if k2.startswith("s_")}
+        b = y.shape[0]
+        dh = cfg.d_model // h
+        xa = rms_norm(y, slp["s_ln"], cfg.norm_eps)
+        gates = dense(xa, slp["s_gates"]).reshape(b, 1, 4, h, dh)
+        st = {"c": cl["s_c"], "n": cl["s_n"], "h": cl["s_h"], "m": cl["s_m"]}
+        hseq, st2 = ssm_mod.slstm_scan(gates, slp["s_r"], st)
+        new_cl.update({"s_c": st2["c"], "s_n": st2["n"], "s_h": st2["h"], "s_m": st2["m"]})
+        y = y + hseq.reshape(b, 1, cfg.d_model).astype(y.dtype)
+        h2 = rms_norm(y, slp["s_ln2"], cfg.norm_eps)
+        y = y + swiglu(h2, slp["s_w1"], slp["s_w3"], slp["s_w2"])
+        return y, new_cl
+
+    x, new_cache = jax.lax.scan(super_body, x, (blocks, cache))
+    return x, new_cache
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    tokens: jax.Array,  # [B, 1]
+    position: jax.Array,  # scalar int32: index of this token
+) -> tuple[jax.Array, PyTree]:
+    """serve_step: ONE new token against the cache. Returns (logits [B,Vp], cache')."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # [B,1,D]
+    if cfg.family == "ssm":
+        x, new_cache = _decode_xlstm(cfg, params["blocks"], cache, x)
+    else:
+        is_moe = cfg.family == "moe"
+        # the cache is one flat [n_layers, ...] stack; leading dense layers
+        # (DeepSeek first_dense_layers) consume its first slices unscanned
+        n_dense = 0
+        if "dense0" in params:
+            n_dense = jax.tree.leaves(params["dense0"])[0].shape[0]
+            dense_cfg = dataclasses.replace(cfg, family="dense")
+            head_cache = {k2: v[:n_dense] for k2, v in cache.items()}
+            for j in range(n_dense):
+                lp_j = jax.tree.map(lambda a: a[j], params["dense0"])
+                cl_j = {k2: v[j] for k2, v in head_cache.items()}
+                x, cl2 = _decode_dense_block(dense_cfg, False, x, lp_j, cl_j, position)
+                head_cache = {k2: head_cache[k2].at[j].set(cl2[k2]) for k2 in head_cache}
+            main_cache = {k2: v[n_dense:] for k2, v in cache.items()}
+        else:
+            main_cache = cache
+
+        def body(carry, scan_in):
+            lp, cl = scan_in
+            y, cl2 = _decode_dense_block(cfg, is_moe, carry, lp, cl, position)
+            return y, cl2
+
+        x, new_main = jax.lax.scan(body, x, (params["blocks"], main_cache))
+        if n_dense:
+            new_cache = {
+                k2: jnp.concatenate([head_cache[k2], new_main[k2]], axis=0) for k2 in new_main
+            }
+        else:
+            new_cache = new_main
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = dense(x, head)[:, 0]
+    return _mask_padded_vocab(logits, cfg), new_cache
+
+
+# ==========================================================================
+# Bulk prefill: one flash-path forward fills the whole cache
+# ==========================================================================
+def _scatter_ring(cache: jax.Array, values: jax.Array, seq_positions: jax.Array) -> jax.Array:
+    """Write values [L,B,S,...] into ring cache [L,B,C,...] at slots pos%C,
+    keeping only the last C positions when S > C (sliding window)."""
+    cap = cache.shape[2]
+    s = values.shape[2]
+    keep = min(s, cap)
+    vals = values[:, :, s - keep :]
+    slots = (seq_positions[s - keep :] % cap).astype(jnp.int32)
+    return cache.at[:, :, slots].set(vals.astype(cache.dtype))
+
+
+def prefill_bulk(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    prefix_embeddings: Optional[jax.Array] = None,
+) -> tuple[jax.Array, PyTree]:
+    """Production prefill: ONE parallel forward (flash path on TPU) that
+    emits every layer's roped K/V (or MLA latents) and bulk-scatters them
+    into the decode cache.  Returns (last-position logits [B, Vp], cache).
+
+    Supported: attention-cache families (dense / vlm / moe / mla).
+    Recurrent-state families (ssm / hybrid) and enc-dec fall back to the
+    sequential reference `prefill` — their state is inherently serial.
+    """
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        logits_last, cache = prefill(params, cfg, tokens, cache, prefix_embeddings)
+        return _mask_padded_vocab(logits_last, cfg), cache
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and prefix_embeddings is not None:
+        pref = _project_prefix(params, cfg, prefix_embeddings)
+        x = jnp.concatenate([pref, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    is_moe = cfg.family == "moe"
+    is_mla = cfg.attn == "mla"
+
+    def block_with_kv(block_cfg, block_moe, carry, lp):
+        h = rms_norm(carry, lp["ln1"], block_cfg.norm_eps)
+        if block_cfg.attn == "mla":
+            a, kv = attn_mod.mla_attention(lp["attn"], block_cfg, h, positions, return_kv=True)
+        else:
+            a, kv = attn_mod.gqa_attention(lp["attn"], block_cfg, h, positions, return_kv=True)
+        y = carry + a
+        h2 = rms_norm(y, lp["ln2"], block_cfg.norm_eps)
+        f, aux = _ffn_apply(lp["ffn"], block_cfg, h2, block_moe)
+        return y + f, kv
+
+    kv_per_layer = []
+    if "dense0" in params:
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        n_dense = jax.tree.leaves(params["dense0"])[0].shape[0]
+        for j in range(n_dense):
+            lp_j = jax.tree.map(lambda a: a[j], params["dense0"])
+            x, kv = block_with_kv(dense_cfg, False, x, lp_j)
+            kv_per_layer.append(kv)
+
+    def body(carry, lp):
+        y, kv = block_with_kv(cfg, is_moe, carry, lp)
+        return y, kv
+
+    x, kv_scanned = jax.lax.scan(body, x, params["blocks"])
+    if kv_per_layer:
+        head_kv = jax.tree.map(lambda *ls: jnp.stack(ls), *kv_per_layer)
+        kv_all = jax.tree.map(lambda h, t: jnp.concatenate([h, t], axis=0), head_kv, kv_scanned)
+    else:
+        kv_all = kv_scanned
+
+    if is_mla:
+        ckv, kr = kv_all  # [L,B,S,kvr], [L,B,S,dr]
+        cache = dict(cache)
+        cache["ckv"] = _scatter_ring(cache["ckv"], ckv, positions)
+        cache["kr"] = _scatter_ring(cache["kr"], kr, positions)
+    else:
+        k, v = kv_all  # [L,B,S,Hkvp,Dh]
+        cache = dict(cache)
+        if cfg.kv_quant:
+            k_q, k_s = attn_mod.quantize_kv(k)
+            v_q, v_s = attn_mod.quantize_kv(v)
+            cache["k"] = _scatter_ring(cache["k"], k_q, positions)
+            cache["v"] = _scatter_ring(cache["v"], v_q, positions)
+            cache["k_scale"] = _scatter_ring(cache["k_scale"][..., None], k_s[..., None], positions)[..., 0]
+            cache["v_scale"] = _scatter_ring(cache["v_scale"][..., None], v_s[..., None], positions)[..., 0]
+        else:
+            cache["k"] = _scatter_ring(cache["k"], k, positions)
+            cache["v"] = _scatter_ring(cache["v"], v, positions)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits_last = dense(x[:, -1:], head)[:, 0]
+    return _mask_padded_vocab(logits_last, cfg), cache
+
+
+# ==========================================================================
+# Prefill (fill the cache from a prompt, return last-token logits)
+# ==========================================================================
+def prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: PyTree,
+    prefix_embeddings: Optional[jax.Array] = None,
+) -> tuple[jax.Array, PyTree]:
+    """Simple (non-fused) prefill: decode tokens one at a time via scan.
+
+    Functional-fidelity reference used by tests/examples; production prefill
+    runs `apply` with the flash kernel and scatters K/V in bulk.
+    """
+    if cfg.family == "encdec" and prefix_embeddings is not None:
+        memory = _encode(params, cfg, _project_prefix(params, cfg, prefix_embeddings))
+
+        def fill(lp, _):
+            mk, mv = attn_mod.cross_kv(lp["cross"], cfg, memory)
+            return (), (mk, mv)
+
+        _, (mk, mv) = jax.lax.scan(fill, (), params["blocks"])
+        cache = dict(cache, cross_k=mk.astype(cache["cross_k"].dtype), cross_v=mv.astype(cache["cross_v"].dtype))
+
+    def step(carry, t):
+        cache_c, _ = carry
+        logits, cache_c = decode_step(params, cfg, cache_c, tokens[:, t][:, None], t)
+        return (cache_c, logits), ()
+
+    s = tokens.shape[1]
+    (cache, logits), _ = jax.lax.scan(step, (cache, jnp.zeros((tokens.shape[0], params["embed"].shape[0]), cfg.dtype_)), jnp.arange(s))
+    return logits, cache

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer (DeepSeek-V2-Lite, Phi-3.5-MoE).
+
+Capacity-based scatter dispatch (dropless up to capacity_factor):
+  1. router logits -> top-k experts + weights per token
+  2. tokens sorted by expert id; position-within-expert via stable rank
+  3. scatter into [E, capacity, D] buffers (overflow dropped, counted)
+  4. grouped expert SwiGLU: einsum over the expert axis (expert-parallel:
+     E is sharded over the `model` mesh axis -> the scatter/gather lower
+     to all-to-all, the MoE-characteristic collective)
+  5. gather back, combine with router weights
+Shared experts (DeepSeek) run densely on every token.
+
+Aux losses: switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense
+
+
+def router_topk(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """logits [T, E] -> (weights [T,k] softmaxed over the k, ids [T,k])."""
+    vals, ids = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return w, ids
+
+
+def load_balance_loss(logits: jax.Array, ids: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-Transformer aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # [T,E]
+    p_e = jnp.mean(probs, axis=0)
+    occupancy = jax.nn.one_hot(ids[:, 0], n_experts, dtype=jnp.float32)  # top-1 occupancy share
+    f_e = jnp.mean(occupancy, axis=0)
+    return n_experts * jnp.sum(f_e * p_e)
+
+
+def router_z_loss(logits: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+
+
+def moe_dispatch_indices(ids: jax.Array, n_experts: int, capacity: int):
+    """Compute scatter destinations for [T, k] expert assignments.
+
+    Returns (dest [T*k] int32 in [0, E*cap) with E*cap meaning 'dropped',
+    token_src [T*k] source token of each slot-assignment).
+    """
+    tk = ids.size
+    flat_e = ids.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert group = index - first index of that expert
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(tk, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos < capacity
+    dest_sorted = jnp.where(keep, sorted_e * capacity + pos, n_experts * capacity)
+    # un-permute back to [T*k] order
+    dest = jnp.zeros((tk,), jnp.int32).at[order].set(dest_sorted)
+    return dest
+
+
+def moe_ffn(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    capacity: Optional[int] = None,
+) -> tuple[jax.Array, dict]:
+    """x [B, S, D] -> (out [B, S, D], aux losses).
+
+    lp: {router [D,E], w1/w3 [E,D,Fe], w2 [E,Fe,D][, sw1/sw3/sw2 shared]}
+    """
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = mc.n_experts, mc.top_k
+    xf = x.reshape(t, d)
+    logits = dense(xf, lp["router"]).astype(jnp.float32)  # [T,E]
+    w, ids = router_topk(logits, k)
+    cap = capacity or max(int(mc.capacity_factor * t * k / e), 1)
+    # round capacity to a lane-friendly multiple
+    cap = max((cap + 7) // 8 * 8, 8)
+    dest = moe_dispatch_indices(ids, e, cap)  # [T*k]
+    token_src = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    # scatter tokens -> expert buffers (extra row catches drops)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[jnp.minimum(dest, e * cap)].set(xf[token_src])
+    buf = buf[: e * cap].reshape(e, cap, d)
+    # grouped expert SwiGLU (Pallas moe_gemm kernel on the TPU path)
+    if cfg.kernel_impl.startswith("pallas"):
+        from repro.kernels import ops as kops
+
+        interp = cfg.kernel_impl == "pallas_interpret"
+        h1 = kops.moe_gemm(buf, lp["w1"], interpret=interp).astype(jnp.float32)
+        h3 = kops.moe_gemm(buf, lp["w3"], interpret=interp).astype(jnp.float32)
+        h = (jax.nn.silu(h1) * h3).astype(x.dtype)
+        eo = kops.moe_gemm(h, lp["w2"], interpret=interp)
+    else:
+        h1 = jnp.einsum("ecd,edf->ecf", buf, lp["w1"], preferred_element_type=jnp.float32)
+        h3 = jnp.einsum("ecd,edf->ecf", buf, lp["w3"], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(h1) * h3).astype(x.dtype)
+        eo = jnp.einsum("ecf,efd->ecd", h, lp["w2"], preferred_element_type=jnp.float32).astype(x.dtype)
+    # gather back: each (token, k) slot reads its expert output (0 if dropped)
+    eo_flat = jnp.concatenate([eo.reshape(e * cap, d), jnp.zeros((1, d), eo.dtype)], axis=0)
+    per_slot = eo_flat[jnp.minimum(dest, e * cap)] * (dest < e * cap)[:, None].astype(eo.dtype)
+    combined = jnp.einsum(
+        "tkd,tk->td", per_slot.reshape(t, k, d), w.astype(per_slot.dtype), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    out = combined.reshape(b, s, d)
+    # shared experts (dense on all tokens)
+    if "sw1" in lp:
+        hs = (jax.nn.silu(dense(xf, lp["sw1"]).astype(jnp.float32)) * dense(xf, lp["sw3"]).astype(jnp.float32)).astype(x.dtype)
+        out = out + dense(hs, lp["sw2"]).reshape(b, s, d)
+    aux = {
+        "moe_aux": mc.aux_loss_coef * load_balance_loss(logits, ids, e),
+        "moe_z": mc.router_z_coef * router_z_loss(logits),
+        "moe_dropped": jnp.mean((dest >= e * cap).astype(jnp.float32)),
+    }
+    return out, aux

@@ -1,0 +1,206 @@
+"""Recurrent sequence mixers: Mamba selective SSM (Hymba) and xLSTM cells.
+
+All three expose a parallel TRAINING form over [B, S, ...] plus an O(1)
+DECODE step carrying explicit state — that is what makes these families the
+native `long_500k` architectures.
+
+Mamba (S6): h_t = exp(dt*A) h_{t-1} + dt * B_t x_t ;  y_t = C_t h_t + D x_t
+  training: jax.lax.associative_scan over (decay, drive) pairs
+  (the Pallas `ssm_scan` kernel implements the chunked form: intra-chunk
+  matmul on the MXU, inter-chunk carried state).
+
+mLSTM (xLSTM): matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T with
+  exponential gating and a max-state stabilizer; training uses the
+  quadratic attention-like form with a log-gate decay mask (as in the
+  xLSTM paper), decode the recurrence.
+
+sLSTM: scalar-memory LSTM with exponential gating + normalizer; strictly
+  sequential -> lax.scan over time for training.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# Mamba selective scan
+# ==========================================================================
+def selective_scan_ref(
+    x: jax.Array,  # [B, S, Di]   input (post in-proj, post conv, post silu)
+    dt: jax.Array,  # [B, S, Di]   softplus'd timestep
+    a: jax.Array,  # [Di, N]      -exp(A_log) (negative)
+    b: jax.Array,  # [B, S, N]
+    c: jax.Array,  # [B, S, N]
+    d: jax.Array,  # [Di]
+    h0: Optional[jax.Array] = None,  # [B, Di, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Parallel associative-scan selective SSM. Returns (y [B,S,Di], h_S)."""
+    decay = jnp.exp(dt[..., None] * a)  # [B,S,Di,N]
+    drive = dt[..., None] * b[:, :, None, :] * x[..., None]  # [B,S,Di,N]
+    if h0 is not None:
+        drive = drive.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c, preferred_element_type=jnp.float32)
+    y = y + x.astype(jnp.float32) * d
+    return y.astype(x.dtype), h[:, -1]
+
+
+def mamba_mixer(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    state: Optional[dict] = None,  # decode: {"conv": [B,K-1,Di], "h": [B,Di,N]}
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full Mamba block mixer. Returns (y [B,S,D], new_state or None).
+
+    lp: in_proj [D, 2Di], conv [K, Di], x_proj [Di, dtr+2N], dt_proj [dtr, Di],
+        dt_bias [Di], a_log [Di, N], d [Di], out_proj [Di, D].
+    """
+    sc = cfg.ssm
+    b_, s_, _ = x.shape
+    di = lp["dt_bias"].shape[0]
+    n = sc.state_dim
+    k = sc.conv_kernel
+    xz = dense(x, lp["in_proj"])  # [B,S,2Di]
+    xs, z = xz[..., :di], xz[..., di:]
+    # depthwise causal conv over time
+    if state is None:
+        pad = jnp.zeros((b_, k - 1, di), xs.dtype)
+        xpad = jnp.concatenate([pad, xs], axis=1)  # [B, S+K-1, Di]
+        new_conv = None
+    else:
+        xpad = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = xpad[:, -(k - 1):]
+    idx = jnp.arange(s_)[:, None] + jnp.arange(k)[None, :]  # [S, K]
+    windows = xpad[:, idx]  # [B, S, K, Di]
+    xc = jnp.einsum("bskd,kd->bsd", windows, lp["conv"], preferred_element_type=jnp.float32)
+    xc = jax.nn.silu(xc + lp.get("conv_bias", jnp.zeros((di,), jnp.float32)))
+    xc = xc.astype(x.dtype)
+    # input-dependent SSM params
+    proj = dense(xc, lp["x_proj"])  # [B,S,dtr+2N]
+    dtr = lp["dt_proj"].shape[0]
+    dt = jax.nn.softplus(dense(proj[..., :dtr], lp["dt_proj"]).astype(jnp.float32) + lp["dt_bias"])
+    bmat = proj[..., dtr : dtr + n].astype(jnp.float32)
+    cmat = proj[..., dtr + n :].astype(jnp.float32)
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))  # [Di,N]
+    h0 = state["h"] if state is not None else None
+    if cfg.kernel_impl.startswith("pallas") and state is None:
+        from repro.kernels import ops as kops
+
+        y, h_last = kops.ssm_scan(
+            xc.astype(jnp.float32), dt, a, bmat, cmat, lp["d"].astype(jnp.float32),
+            interpret=cfg.kernel_impl == "pallas_interpret",
+        )
+        y = y.astype(x.dtype)
+    else:
+        y, h_last = selective_scan_ref(xc, dt, a, bmat, cmat, lp["d"].astype(jnp.float32), h0)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, lp["out_proj"])
+    new_state = None if state is None else {"conv": new_conv, "h": h_last}
+    return out, new_state
+
+
+# ==========================================================================
+# mLSTM (xLSTM matrix-memory cell)
+# ==========================================================================
+def mlstm_parallel(
+    q: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,
+    v: jax.Array,
+    i_gate: jax.Array,  # [B, S, H]  pre-activation (log-space input gate)
+    f_gate: jax.Array,  # [B, S, H]  pre-activation forget gate
+) -> jax.Array:
+    """Quadratic stabilized training form (xLSTM paper App. formulation).
+
+    D_ts = exp(log_sig_f cumulative decay + i_s - stabilizer); out =
+    (QK^T * D) V with a normalizer max(|sum|, exp(-m)).
+    """
+    bsz, s, h, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # [B,S,H]
+    cum = jnp.cumsum(logf, axis=1)  # [B,S,H]
+    # decay(t,s) = cum_t - cum_s (for s<=t), plus i_s
+    dmat = cum[:, :, None, :] - cum[:, None, :, :]  # [B,T,S,H]
+    dmat = dmat + i_gate.astype(jnp.float32)[:, None, :, :]
+    mask = (jnp.arange(s)[:, None] >= jnp.arange(s)[None, :])[None, :, :, None]
+    dmat = jnp.where(mask, dmat, NEG_INF)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # stabilizer [B,T,1,H]
+    dexp = jnp.exp(dmat - m)  # [B,T,S,H]
+    scores = jnp.einsum("bthd,bshd->btsh", q, k, preferred_element_type=jnp.float32) / math.sqrt(dh)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)), jnp.exp(-m))
+    w = w / norm
+    out = jnp.einsum("btsh,bshd->bthd", w.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def mlstm_step(
+    q: jax.Array,  # [B, H, Dh]
+    k: jax.Array,
+    v: jax.Array,
+    i_gate: jax.Array,  # [B, H]
+    f_gate: jax.Array,
+    state: dict,  # {"c": [B,H,Dh,Dh], "n": [B,H,Dh], "m": [B,H]}
+) -> tuple[jax.Array, dict]:
+    """O(1) recurrent decode step of the same cell."""
+    dh = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    i = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state["m"], i)
+    fdec = jnp.exp(logf + state["m"] - m_new)[..., None]  # [B,H,1]
+    iexp = jnp.exp(i - m_new)[..., None]
+    kf = k.astype(jnp.float32) / math.sqrt(dh)
+    c = state["c"] * fdec[..., None] + iexp[..., None] * (
+        v.astype(jnp.float32)[..., :, None] * kf[..., None, :]
+    )  # [B,H,Dh(v),Dh(k)]
+    n = state["n"] * fdec + iexp * kf
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(jnp.float32))), jnp.exp(-m_new)
+    )[..., None]
+    out = jnp.einsum("bhvd,bhd->bhv", c, q.astype(jnp.float32)) / denom
+    return out.astype(v.dtype), {"c": c, "n": n, "m": m_new}
+
+
+# ==========================================================================
+# sLSTM (scalar memory, exponential gating, normalizer state)
+# ==========================================================================
+def slstm_scan(
+    x_gates: jax.Array,  # [B, S, 4, H, Dh] pre-activations (i,f,z,o) from input
+    r_kernels: jax.Array,  # [4, H, Dh, Dh] recurrent (block-diagonal per head)
+    state: Optional[dict] = None,  # {"c","n","h","m": [B,H,Dh]}
+) -> tuple[jax.Array, dict]:
+    """Sequential sLSTM over time. Returns (h_seq [B,S,H,Dh], final state)."""
+    bsz, s, _, h, dh = x_gates.shape
+    if state is None:
+        z = jnp.zeros((bsz, h, dh), jnp.float32)
+        state = {"c": z, "n": z, "h": z, "m": z}
+
+    def step(carry, xt):  # xt [B,4,H,Dh]
+        c, n, hprev, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        rec = jnp.einsum("bhd,ghde->bghe", hprev, r_kernels.astype(jnp.float32))
+        g = xt.astype(jnp.float32) + rec  # [B,4,H,Dh]
+        i_, f_, z_, o_ = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_) + m, i_)
+        i = jnp.exp(i_ - m_new)
+        f = jnp.exp(jax.nn.log_sigmoid(f_) + m - m_new)
+        c_new = f * c + i * jnp.tanh(z_)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+        return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+    final, hseq = jax.lax.scan(step, state, jnp.moveaxis(x_gates, 1, 0))
+    return jnp.moveaxis(hseq, 0, 1), final

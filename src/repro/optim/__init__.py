@@ -1,0 +1,10 @@
+"""Optimizers and step-size schedules (no optax dependency)."""
+
+from repro.optim.optimizers import Optimizer, sgd, momentum, adam, adamw, clip_by_global_norm, chain  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant_lr,
+    cosine_decay,
+    linear_warmup_cosine,
+    inverse_sqrt,
+    anytime_paper_schedule,
+)

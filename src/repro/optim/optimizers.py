@@ -1,0 +1,129 @@
+"""Minimal optax-style optimizers, built from scratch (no optax offline).
+
+An Optimizer is (init, update):
+    state = init(params)
+    updates, state = update(grads, state, params, step)
+where `updates` are ADDED to params (sign convention: descent direction,
+i.e. updates already include the negative learning rate).
+
+All states are pytrees of arrays so they vmap/shard/scan cleanly — the
+anytime worker loop vmaps these over the worker axis and the combine step
+lambda-averages them (see core/anytime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]  # (grads, state, params, step)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD — what the paper's Algorithm 2 runs locally."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None, step=0):
+        lrv = sched(step)
+        return jax.tree.map(lambda g: (-lrv * g).astype(g.dtype), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None, step=0):
+        lrv = sched(step)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g, state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m_, g: (-lrv * (beta * m_ + g)).astype(g.dtype), m, grads)
+        else:
+            upd = jax.tree.map(lambda m_: (-lrv * m_).astype(m_.dtype), m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None, step=0):
+        count = state["count"] + 1
+        lrv = sched(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def _upd(m_, v_, g):
+            mhat = m_ / c1
+            vhat = v_ / c2
+            return (-lrv * mhat / (jnp.sqrt(vhat) + eps)).astype(g.dtype)
+
+        upd = jax.tree.map(_upd, m, v, grads)
+        return upd, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+    sched = _as_schedule(lr)
+
+    def update(grads, state, params, step=0):
+        upd, state2 = base.update(grads, state, params, step)
+        lrv = sched(step)
+        upd = jax.tree.map(lambda u, p: (u - lrv * weight_decay * p.astype(jnp.float32)).astype(u.dtype), upd, params)
+        return upd, state2
+
+    return Optimizer(base.init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Callable[[PyTree], PyTree]:
+    """Gradient transformation: rescale so that ||g||_2 <= max_norm."""
+
+    def clip(grads):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+    return clip
+
+
+def chain(clip_fn: Callable[[PyTree], PyTree], opt: Optimizer) -> Optimizer:
+    """Compose a gradient transform (e.g. clipping) in front of an optimizer."""
+
+    def update(grads, state, params=None, step=0):
+        return opt.update(clip_fn(grads), state, params, step)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,61 @@
+"""Step-size schedules.
+
+`anytime_paper_schedule` is the paper's Theorem-1 step size: the worker-local
+SGD step at (sub-epoch) iteration t uses
+
+    eta_vt = 1 / (L + beta_vt),   beta_vt = sqrt(t+1) * sigma / D
+
+NOTE on the paper's notation: Theorem 1 states "step size eta_vt =
+L + sqrt(t+1) sigma / D", but the mirror-descent update it analyses
+(Appendix B, Eq. 19) uses eta as the *prox coefficient*, i.e. the effective
+gradient step is 1/eta.  We expose the effective learning rate 1/(L+beta)
+— the quantity a practitioner sets — and keep the prox form in
+`core.theory` for the bound calculators.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+
+    return sched
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * cos), dtype=jnp.float32)
+
+    return sched
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def sched(step):
+        warm = lr * (step + 1) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps)).astype(jnp.float32)
+
+    return sched
+
+
+def inverse_sqrt(lr: float, warmup_steps: int = 0):
+    def sched(step):
+        s = jnp.maximum(step, warmup_steps) + 1.0
+        return jnp.asarray(lr, jnp.float32) * jnp.sqrt((warmup_steps + 1.0)) / jnp.sqrt(s)
+
+    return sched
+
+
+def anytime_paper_schedule(lipschitz_l: float, sigma: float, diameter_d: float):
+    """Theorem 1: effective lr_t = 1 / (L + sqrt(t+1) * sigma / D)."""
+
+    def sched(step):
+        beta = jnp.sqrt(step + 1.0) * sigma / diameter_d
+        return (1.0 / (lipschitz_l + beta)).astype(jnp.float32)
+
+    return sched

@@ -1,0 +1,7 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    MODEL_AXIS,
+    worker_axes,
+)

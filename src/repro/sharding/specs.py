@@ -1,0 +1,188 @@
+"""Partition rules: param/batch/cache pytrees -> jax.sharding.PartitionSpec.
+
+Megatron-style 2D layout on mesh axes  (["pod",] "data", "model"):
+  * the Anytime worker axis == ("pod","data"): each worker is a
+    model-parallel group; worker-stacked arrays shard their leading axis
+    over it, and the Theorem-3 combine all-reduces over it.
+  * `model` shards heads / FFN / experts / vocab, column-then-row so every
+    block has one all-reduce (or reduce-scatter under --seq-shard).
+
+Rules are NAME-BASED over the param tree (leaf dict key), with divisibility
+guards: a dim is sharded only if the axis size divides it — otherwise that
+dim is replicated (the resolver never fails; DESIGN.md §4 padding makes the
+hot dims divisible for all ten archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+MODEL_AXIS = "model"
+
+
+def worker_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that together form the Anytime worker index."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _guard(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Replicate any dim the proposed axis does not divide."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# name -> proposed spec builder (ndim-aware); leading scan axes map to None
+def _rule(name: str, ndim: int) -> P:
+    M = MODEL_AXIS
+
+    def lead(spec_tail: tuple) -> P:
+        return P(*((None,) * (ndim - len(spec_tail)) + spec_tail))
+
+    # ---- trunk ----
+    if name == "embed":
+        return P(M, None)
+    if name == "lm_head":
+        return P(None, M)
+    if name in ("wq", "wuq", "wdkv", "w1", "w3", "sw1", "sw3", "in_proj", "dt_proj",
+                "s_gates", "m_up", "m_wq", "m_wk", "m_wv"):
+        return lead((None, M))  # column-parallel: [.., d_in, d_out/M]
+    if name in ("wo", "wukv", "w2", "sw2", "x_proj", "out_proj", "s_w2", "m_down"):
+        return lead((M, None))  # row-parallel: [.., d_in/M, d_out]
+    if name in ("wk", "wv"):
+        return lead((None, M))  # guarded: replicated when Hkvp*Dh % M != 0
+    if name in ("s_w1", "s_w3"):
+        return lead((None, M))
+    if name in ("bq", "bk", "bv"):
+        return lead((M,))
+    if name == "router":
+        return lead((None, None))  # replicated: tiny, consumed by top-k
+    if name in ("conv", "m_conv"):
+        return lead((None, M))  # [.., K, Di/M]
+    if name in ("dt_bias", "d"):
+        return lead((M,))  # [.., Di/M]
+    if name == "a_log":
+        return lead((M, None))  # [.., Di/M, N]
+    if name == "wkr":
+        return lead((None, None))
+    if name == "wdq":
+        return lead((None, M))
+    if name == "s_r":
+        return lead((None, None, None, None))
+    if name == "m_wif":
+        return lead((M, None))
+    # moe expert stacks: shard the EXPERT axis (expert parallelism)
+    # (w1/w3/w2 matched above would shard d_out; expert arrays are 4D)
+    return P(*([None] * ndim))
+
+
+def _moe_expert_rule(name: str, ndim: int) -> Optional[P]:
+    """4D expert stacks [L, E, d_in, d_out] -> shard E over `model`."""
+    if name in ("w1", "w3", "w2") and ndim == 4:
+        return P(None, MODEL_AXIS, None, None)
+    return None
+
+
+def param_pspecs(params: PyTree, mesh: Mesh, worker_stacked: bool = False) -> PyTree:
+    """PartitionSpec tree matching `params` (shapes or arrays).
+
+    worker_stacked: leaves carry a leading worker axis (generalized anytime
+    state) sharded over ("pod","data").
+    """
+    waxes = worker_axes(mesh)
+
+    def one(path, leaf) -> P:
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        if worker_stacked:
+            ndim -= 1
+        spec = _moe_expert_rule(name, ndim) or _rule(name, ndim)
+        if worker_stacked:
+            spec = P(waxes, *tuple(spec))
+            shape_for_guard = shape
+        else:
+            shape_for_guard = shape
+        return _guard(mesh, spec, shape_for_guard)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspec(mesh: Mesh, worker_batch: bool, ndim: int, lead_dim: Optional[int] = None) -> P:
+    """Input batch spec.
+
+    worker_batch=True: leading axis is the Anytime worker axis [W, q_max, b, ...]
+    worker_batch=False: plain [global_batch, ...] (prefill/decode serving),
+    batch sharded over ("pod","data").  If lead_dim is given and the worker
+    axes do not divide it (e.g. long_500k's global_batch=1), the batch is
+    replicated — the mesh's model axis still shards the compute.
+    """
+    waxes = worker_axes(mesh)
+    if lead_dim is not None and lead_dim % _axis_size(mesh, waxes) != 0:
+        return P(*([None] * ndim))
+    return P(waxes, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache: PyTree, mesh: Mesh) -> PyTree:
+    """Decode-state specs: [L, B, ...] -> batch over workers, heads/features
+    over `model` where divisible."""
+    waxes = worker_axes(mesh)
+
+    def one(path, leaf) -> P:
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        shape = tuple(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v"):  # [L,B,C,Hkvp,Dh]
+            if shape[3] % _axis_size(mesh, MODEL_AXIS) == 0:
+                spec = P(None, waxes, None, MODEL_AXIS, None)
+            else:
+                # few KV heads (GQA): shard the cache LENGTH over `model`
+                # (flash-decoding split-K) instead of replicating gigabytes
+                spec = P(None, waxes, MODEL_AXIS, None, None)
+        elif name in ("k_scale", "v_scale"):  # [L,B,C,Hkvp]
+            if shape[3] % _axis_size(mesh, MODEL_AXIS) == 0:
+                spec = P(None, waxes, None, MODEL_AXIS)
+            else:
+                spec = P(None, waxes, MODEL_AXIS, None)
+        elif name in ("ckv", "kr"):  # [L,B,C,r] — shard the length; the
+            # latent dim stays whole for the absorbed-projection matmuls
+            spec = P(None, waxes, MODEL_AXIS, None)
+        elif name in ("conv", "h"):  # mamba [L,B,K-1|Di,Di|N]
+            spec = P(None, waxes, MODEL_AXIS, None) if name == "h" else P(None, waxes, None, MODEL_AXIS)
+        elif name.startswith("m_"):  # xlstm mLSTM state [NS,M,B,...]
+            spec = P(None, None, waxes, *([None] * (len(shape) - 3)))
+        elif name.startswith("s_"):  # sLSTM state [NS,B,H,Dh]
+            spec = P(None, waxes, None, None)
+        else:
+            spec = P(*([None] * len(shape)))
+        return _guard(mesh, spec, shape)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real device
+count (1 CPU); only launch/dryrun.py forces 512 host devices."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# deterministic, quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# jit compilation makes first examples slow; disable wall-clock deadlines
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=20,
+    derandomize=True,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

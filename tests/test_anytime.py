@@ -1,0 +1,110 @@
+"""The Anytime-Gradients round itself (Algorithms 1 & 2) + paper claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnytimeConfig, anytime_round, local_sgd, reshape_global_batch
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+
+
+def _linreg_loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+def _make_batch(data, rng, w, qmax, b):
+    idx = rng.integers(0, data.m, size=(w, qmax, b))
+    return (jnp.asarray(data.A[idx], jnp.float32), jnp.asarray(data.y[idx], jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(2000, 16, seed=3)
+
+
+def test_masked_steps_are_identity(lin, rng):
+    """Worker with q_v = 0 must return its input (Alg 1 l.13)."""
+    params = {"x": jnp.asarray(rng.standard_normal(16), jnp.float32)}
+    mb = _make_batch(lin, rng, 1, 4, 8)
+    mb = jax.tree.map(lambda t: t[0], mb)
+    p_fin, _, iterate, loss = local_sgd(
+        _linreg_loss, sgd(0.01), params, (), mb, jnp.int32(0), jnp.int32(0)
+    )
+    np.testing.assert_array_equal(np.asarray(p_fin["x"]), np.asarray(params["x"]))
+    assert float(loss) == 0.0
+
+
+def test_partial_mask_equals_truncated_run(lin, rng):
+    """q_v=k must equal running exactly k unmasked steps."""
+    params = {"x": jnp.zeros(16, jnp.float32)}
+    mb = jax.tree.map(lambda t: t[0], _make_batch(lin, rng, 1, 6, 8))
+    p_k, *_ = local_sgd(_linreg_loss, sgd(0.01), params, (), mb, jnp.int32(3), jnp.int32(0))
+    mb3 = jax.tree.map(lambda t: t[:3], mb)
+    p_3, *_ = local_sgd(_linreg_loss, sgd(0.01), params, (), mb3, jnp.int32(3), jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(p_k["x"]), np.asarray(p_3["x"]), rtol=1e-6)
+
+
+def test_round_converges_with_stragglers(lin, rng):
+    w, qmax = 8, 8
+    cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+    rnd = jax.jit(anytime_round(_linreg_loss, sgd(0.02), cfg))
+    params = {"x": jnp.zeros(16, jnp.float32)}
+    state = ()
+    for ep in range(25):
+        q = jnp.asarray(rng.integers(0, qmax + 1, w), jnp.int32)
+        params, state, m = rnd(params, state, _make_batch(lin, rng, w, qmax, 16), q)
+    assert lin.normalized_error(np.asarray(params["x"], np.float64)) < 0.1
+
+
+def test_equal_q_reduces_to_uniform_averaging(lin, rng):
+    """With q_v all equal, Thm-3 weights == 1/N (classical Sync-SGD)."""
+    w, qmax = 4, 3
+    batch = _make_batch(lin, rng, w, qmax, 8)
+    params = {"x": jnp.zeros(16, jnp.float32)}
+    q = jnp.full((w,), qmax, jnp.int32)
+    outs = {}
+    for weighting in ("anytime", "uniform"):
+        cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax, weighting=weighting)
+        p, _, _ = anytime_round(_linreg_loss, sgd(0.01), cfg)(params, (), batch, q)
+        outs[weighting] = np.asarray(p["x"])
+    np.testing.assert_allclose(outs["anytime"], outs["uniform"], rtol=1e-6)
+
+
+def test_fig2b_weighted_beats_uniform(lin, rng):
+    """Paper Fig. 2(b): with skewed q_v, Thm-3 weighting converges faster
+    than uniform averaging."""
+    w, qmax = 10, 20
+    # skew mirroring Fig 2(a): worker 1 does 20 steps, last does 1
+    q = jnp.asarray(np.linspace(qmax, 1, w).astype(int), jnp.int32)
+    errs = {}
+    for weighting in ("anytime", "uniform"):
+        cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax, weighting=weighting)
+        rnd = jax.jit(anytime_round(_linreg_loss, sgd(0.02), cfg))
+        params = {"x": jnp.zeros(16, jnp.float32)}
+        state = ()
+        r = np.random.default_rng(0)
+        for ep in range(12):
+            params, state, _ = rnd(params, state, _make_batch(lin, r, w, qmax, 8), q)
+        errs[weighting] = lin.normalized_error(np.asarray(params["x"], np.float64))
+    assert errs["anytime"] < errs["uniform"]
+
+
+def test_average_iterate_mode(lin, rng):
+    cfg = AnytimeConfig(n_workers=4, max_local_steps=4, iterate_mode="average")
+    rnd = anytime_round(_linreg_loss, sgd(0.02), cfg)
+    params = {"x": jnp.zeros(16, jnp.float32)}
+    q = jnp.asarray([4, 3, 2, 0], jnp.int32)
+    p, _, m = rnd(params, (), _make_batch(lin, rng, 4, 4, 8), q)
+    assert np.all(np.isfinite(np.asarray(p["x"])))
+    assert np.isclose(np.asarray(m["lambdas"]).sum(), 1.0, atol=1e-6)
+
+
+def test_reshape_global_batch():
+    x = jnp.arange(32).reshape(32, 1)
+    out = reshape_global_batch({"t": x}, n_workers=4, max_local_steps=2)
+    assert out["t"].shape == (4, 2, 4, 1)
+    with pytest.raises(ValueError):
+        reshape_global_batch({"t": x}, n_workers=5, max_local_steps=2)

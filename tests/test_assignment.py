@@ -1,0 +1,57 @@
+"""Table-I data placement properties (paper Sec. II-B)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core.assignment import (
+    assignment_matrix,
+    block_slices,
+    coverage_after_failures,
+    worker_block_ids,
+    worker_sample_ids,
+)
+
+
+@hypothesis.given(st.integers(1, 64), st.data())
+def test_each_block_on_s_plus_1_workers(n, data):
+    s = data.draw(st.integers(0, n - 1))
+    mat = assignment_matrix(n, s)
+    # every block replicated S+1 times; every worker holds S+1 blocks
+    assert np.all(mat.sum(axis=0) == s + 1)
+    assert np.all(mat.sum(axis=1) == s + 1)
+
+
+@hypothesis.given(st.integers(2, 24), st.data())
+def test_robust_to_any_s_failures(n, data):
+    """The paper's robustness claim: <= S persistent stragglers lose no data."""
+    s = data.draw(st.integers(0, n - 1))
+    k = data.draw(st.integers(0, s))
+    failed = set(data.draw(st.permutations(range(n)))[:k])
+    assert coverage_after_failures(n, s, failed)
+
+
+def test_s_plus_1_failures_can_lose_data():
+    # with S=0, losing any worker loses its block
+    assert not coverage_after_failures(4, 0, {1})
+
+
+@hypothesis.given(st.integers(1, 1000), st.integers(1, 32))
+def test_block_slices_partition(m, n):
+    sls = block_slices(m, n)
+    ids = np.concatenate([np.arange(s.start, s.stop) for s in sls])
+    assert len(ids) == m
+    assert np.array_equal(ids, np.arange(m))
+    sizes = [s.stop - s.start for s in sls]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_worker_sample_ids_match_blocks():
+    m, n, s = 100, 10, 2
+    ids = worker_sample_ids(3, m, n, s)
+    # worker 3 holds blocks 3,4,5 -> samples 30..59
+    assert np.array_equal(np.sort(ids), np.arange(30, 60))
+    assert len(ids) == m * (s + 1) // n
+
+
+def test_circular_shift_structure():
+    assert worker_block_ids(9, 10, 2) == [9, 0, 1]

@@ -1,0 +1,52 @@
+"""Async-SGD baseline: staleness degrades the solution; Anytime does not."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import async_run, async_wall_clock
+from repro.core.straggler import StragglerModel
+from repro.data.linreg import make_linreg
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(2000, 12, seed=5)
+
+
+def _grad_fn(lin, batch=32):
+    A = jnp.asarray(lin.A, jnp.float32)
+    y = jnp.asarray(lin.y, jnp.float32)
+
+    def grad(params, key):
+        idx = jax.random.randint(key, (batch,), 0, A.shape[0])
+        a, yy = A[idx], y[idx]
+        r = a @ params["x"] - yy
+        return {"x": 2.0 * a.T @ r / batch}
+
+    return grad
+
+
+def test_async_converges_with_small_staleness(lin):
+    p, _ = async_run(_grad_fn(lin), {"x": jnp.zeros(12, jnp.float32)},
+                     lr=0.02, n_updates=400, staleness=1)
+    assert lin.normalized_error(np.asarray(p["x"], np.float64)) < 0.12
+
+
+def test_staleness_hurts(lin):
+    """The paper's async criticism: error floor grows with staleness."""
+    errs = {}
+    for s in (1, 32):
+        p, _ = async_run(_grad_fn(lin), {"x": jnp.zeros(12, jnp.float32)},
+                         lr=0.05, n_updates=300, staleness=s, seed=1)
+        errs[s] = lin.normalized_error(np.asarray(p["x"], np.float64))
+    assert errs[32] > errs[1] * 1.5, errs
+
+
+def test_async_wall_clock_uses_aggregate_rate(rng):
+    m = StragglerModel(kind="constant")
+    t = async_wall_clock(m, rng, n_workers=10, n_updates=100)
+    assert t == pytest.approx(10.0)  # 100 updates at 10 workers x 1s/iter
+    m2 = StragglerModel(kind="constant", persistent_frac=0.5)
+    t2 = async_wall_clock(m2, rng, n_workers=10, n_updates=100)
+    assert t2 == pytest.approx(20.0)  # half the fleet dead

@@ -1,0 +1,117 @@
+"""Baseline schemes + the paper's comparative claims (Sec. II-E, IV)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnytimeConfig, anytime_round
+from repro.core.baselines import (
+    fnb_epoch_time,
+    fnb_round,
+    gc_epoch_time,
+    make_cyclic_code,
+    sync_epoch_time,
+    sync_round,
+)
+from repro.core.baselines.fnb import fastest_mask
+from repro.core.straggler import StragglerModel
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+def _batch(data, rng, w, q, b, pools=None):
+    if pools is None:
+        idx = rng.integers(0, data.m, size=(w, q, b))
+    else:
+        idx = np.stack([rng.choice(pools[v], size=(q, b)) for v in range(w)])
+    return (jnp.asarray(data.A[idx], jnp.float32), jnp.asarray(data.y[idx], jnp.float32))
+
+
+def test_sync_round_uniform_average(rng):
+    lin = make_linreg(500, 8, seed=0)
+    rnd = sync_round(_loss, sgd(0.01), n_workers=4, k_steps=3)
+    params = {"x": jnp.zeros(8, jnp.float32)}
+    p, _, m = rnd(params, (), _batch(lin, rng, 4, 3, 8))
+    np.testing.assert_allclose(np.asarray(m["lambdas"]), 0.25, atol=1e-6)
+    assert np.all(np.isfinite(np.asarray(p["x"])))
+
+
+def test_fnb_discards_slow_workers(rng):
+    lin = make_linreg(500, 8, seed=0)
+    rnd = fnb_round(_loss, sgd(0.01), n_workers=4, k_steps=3)
+    params = {"x": jnp.zeros(8, jnp.float32)}
+    mask = jnp.asarray([True, True, False, False])
+    p, _, m = rnd(params, (), _batch(lin, rng, 4, 3, 8), mask)
+    lam = np.asarray(m["lambdas"])
+    np.testing.assert_allclose(lam, [0.5, 0.5, 0, 0], atol=1e-6)
+
+
+def test_fastest_mask_excludes_persistent():
+    finish = np.array([3.0, 1.0, np.inf, 2.0])
+    mask = fastest_mask(finish, n_drop=1)
+    assert mask.tolist() == [True, True, False, True]
+    mask0 = fastest_mask(finish, n_drop=0)  # inf can never be "kept"
+    assert mask0.tolist() == [True, True, False, True]
+
+
+def test_epoch_time_ordering(rng):
+    """Wall-clock per epoch: FNB <= GC(N-S wait) <= Sync, given one model."""
+    m = StragglerModel(kind="shifted_exp", rate=0.5)
+    r1, r2, r3 = (np.random.default_rng(5) for _ in range(3))
+    t_sync = sync_epoch_time(m, r1, 10, k_steps=30)
+    t_fnb, _ = fnb_epoch_time(m, r2, 10, k_steps=30, n_drop=2)
+    t_gc, _ = gc_epoch_time(m, r3, 10, s=2, steps_per_block=10)
+    assert t_fnb < t_sync
+    assert t_gc <= sync_epoch_time(m, np.random.default_rng(5), 10, k_steps=30)
+
+
+def test_sync_stalls_with_persistent_straggler(rng):
+    m = StragglerModel(persistent_frac=0.1)
+    assert np.isinf(sync_epoch_time(m, rng, 10, k_steps=5))
+    t_fnb, mask = fnb_epoch_time(m, rng, 10, k_steps=5, n_drop=1)
+    assert np.isfinite(t_fnb) and not mask[-1]
+
+
+def test_fnb_persistent_bias_vs_anytime_robustness(rng):
+    """[Tandon] Fig 7 / paper Sec II-E: FNB with a persistent straggler and
+    S=0 permanently loses that worker's data -> biased solution; Anytime
+    with S=1 replication reaches the optimum."""
+    from repro.core.assignment import worker_sample_ids
+
+    lin = make_linreg(1200, 10, seed=4)
+    w, qmax = 6, 6
+    # make block 5's data essential: shift its labels strongly
+    lin.A[1000:, :] *= 3.0
+    lin.y[:] = lin.A @ lin.x_star
+    dead = 5  # persistent straggler
+
+    # FNB S=0: worker v samples only its own block
+    pools0 = [worker_sample_ids(v, lin.m, w, 0) for v in range(w)]
+    rnd = fnb_round(_loss, sgd(0.02), w, qmax)
+    params = {"x": jnp.zeros(10, jnp.float32)}
+    mask = jnp.asarray([v != dead for v in range(w)])
+    for _ in range(30):
+        params, _, _ = rnd(params, (), _batch(lin, rng, w, qmax, 16, pools0), mask)
+    err_fnb = lin.normalized_error(np.asarray(params["x"], np.float64))
+
+    # Anytime S=1: replicated blocks keep coverage
+    pools1 = [worker_sample_ids(v, lin.m, w, 1) for v in range(w)]
+    cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+    arnd = anytime_round(_loss, sgd(0.02), cfg)
+    params = {"x": jnp.zeros(10, jnp.float32)}
+    q = jnp.asarray([qmax] * w, jnp.int32).at[dead].set(0)
+    for _ in range(30):
+        params, _, _ = arnd(params, (), _batch(lin, rng, w, qmax, 16, pools1), q)
+    err_any = lin.normalized_error(np.asarray(params["x"], np.float64))
+    assert err_any < err_fnb, (err_any, err_fnb)
+    assert err_any < 0.12
+
+
+def test_gc_code_reusable_across_epochs():
+    code = make_cyclic_code(10, 2, seed=0)
+    assert code.n_wait == 8

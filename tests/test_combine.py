@@ -1,0 +1,83 @@
+"""Theorem-3 combining weights + the combine operation (paper Sec. II-D, III-C)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.combine import (
+    anytime_lambdas,
+    combine_pytrees,
+    generalized_mixing_lambda,
+    uniform_lambdas,
+)
+from repro.core.theory import optimal_lambdas_minimize_thm2
+
+
+@hypothesis.given(
+    q=hnp.arrays(np.int64, st.integers(1, 32), elements=st.integers(0, 10_000))
+)
+def test_lambdas_simplex(q):
+    lam = np.asarray(anytime_lambdas(jnp.asarray(q)))
+    assert np.all(lam >= 0)
+    assert np.isclose(lam.sum(), 1.0, atol=1e-5)
+
+
+@hypothesis.given(
+    q=hnp.arrays(np.int64, st.integers(2, 16), elements=st.integers(0, 1000)).filter(
+        lambda q: q.sum() > 0
+    )
+)
+def test_thm3_closed_form_matches_qp(q):
+    """lambda_v = q_v / sum(q) is the minimizer of the Thm-2 variance bound."""
+    lam = np.asarray(anytime_lambdas(jnp.asarray(q)))
+    lam_qp = optimal_lambdas_minimize_thm2(q)
+    np.testing.assert_allclose(lam, lam_qp, atol=1e-6)
+
+
+def test_lambda_proportional_to_work():
+    lam = np.asarray(anytime_lambdas(jnp.asarray([100, 50, 0, 50])))
+    np.testing.assert_allclose(lam, [0.5, 0.25, 0.0, 0.25], atol=1e-6)
+
+
+def test_persistent_straggler_gets_zero():
+    """Alg 1 l.12-14: v not in chi -> lambda_v = 0."""
+    lam = np.asarray(anytime_lambdas(jnp.asarray([10, 0, 10])))
+    assert lam[1] == 0.0
+
+
+def test_all_zero_falls_back_uniform():
+    lam = np.asarray(anytime_lambdas(jnp.zeros(4, jnp.int32)))
+    np.testing.assert_allclose(lam, 0.25)
+
+
+def test_uniform_lambdas_mask():
+    lam = np.asarray(uniform_lambdas(jnp.asarray([True, False, True, True])))
+    np.testing.assert_allclose(lam, [1 / 3, 0, 1 / 3, 1 / 3], atol=1e-6)
+
+
+def test_combine_pytrees_weighted_sum(rng):
+    stacked = {"a": jnp.asarray(rng.standard_normal((3, 4, 5))), "b": jnp.asarray(rng.standard_normal((3, 2)))}
+    lam = jnp.asarray([0.2, 0.3, 0.5])
+    out = combine_pytrees(stacked, lam)
+    for k in stacked:
+        expect = np.tensordot(np.asarray(lam), np.asarray(stacked[k]), axes=(0, 0))
+        np.testing.assert_allclose(np.asarray(out[k]), expect, rtol=1e-5)
+
+
+def test_generalized_mixing_lambda_eq13():
+    """Eq 13: lambda = Q / (q_bar + Q); q_bar=0 -> 1 (reduces to vanilla)."""
+    lam = generalized_mixing_lambda(jnp.asarray(100.0), jnp.asarray([0.0, 100.0, 300.0]))
+    np.testing.assert_allclose(np.asarray(lam), [1.0, 0.5, 0.25], atol=1e-6)
+
+
+def test_combine_kernel_matches_reference(rng):
+    from repro.kernels import ops
+
+    stacked = {"w": jnp.asarray(rng.standard_normal((4, 33, 7)), jnp.float32)}
+    lam = jnp.asarray(anytime_lambdas(jnp.asarray([3, 1, 0, 4])))
+    ref_out = combine_pytrees(stacked, lam)
+    ker_out = ops.combine_pytree(stacked, lam, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker_out["w"]), np.asarray(ref_out["w"]), atol=1e-5)

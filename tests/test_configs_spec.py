@@ -1,0 +1,85 @@
+"""Assignment-spec conformance: each config must carry the EXACT published
+dimensions from the brief (these tests lock them against drift)."""
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, all_configs, get_config
+
+SPEC = {
+    # id: (family, L, d_model, H, kv, d_ff, vocab)
+    "llava_next_mistral_7b": ("vlm", 32, 4096, 32, 8, 14336, 32000),
+    "hymba_1_5b": ("hybrid", 32, 1600, 25, 5, 5504, 32001),
+    "qwen1_5_32b": ("dense", 64, 5120, 40, 40, 27392, 152064),
+    "xlstm_350m": ("ssm", 24, 1024, 4, 4, 0, 50304),
+    "deepseek_v2_lite_16b": ("moe", 27, 2048, 16, 16, 10944, 102400),
+    "seamless_m4t_medium": ("encdec", 12, 1024, 16, 16, 4096, 256206),
+    "qwen2_0_5b": ("dense", 24, 896, 14, 2, 4864, 151936),
+    "minicpm3_4b": ("dense", 62, 2560, 40, 40, 6400, 73448),
+    "starcoder2_7b": ("dense", 32, 4608, 36, 4, 18432, 49152),
+    "phi3_5_moe_42b": ("moe", 32, 4096, 32, 8, 6400, 32064),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_dims(arch):
+    fam, L, d, h, kv, ff, v = SPEC[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+    assert cfg.source, "every config must cite its source"
+
+
+def test_family_extras():
+    ds = get_config("deepseek_v2_lite_16b")
+    assert ds.moe.n_experts == 64 and ds.moe.top_k == 6 and ds.moe.n_shared == 2
+    assert ds.moe.d_ff_expert == 1408 and ds.mla.kv_lora_rank == 512
+    phi = get_config("phi3_5_moe_42b")
+    assert phi.moe.n_experts == 16 and phi.moe.top_k == 2
+    hy = get_config("hymba_1_5b")
+    assert hy.ssm.state_dim == 16
+    mc = get_config("minicpm3_4b")
+    assert mc.mla.q_lora_rank == 768 and mc.mla.kv_lora_rank == 256
+    xl = get_config("xlstm_350m")
+    assert xl.xlstm is not None and xl.n_layers % (xl.xlstm.m_per_s + 1) == 0
+    sm = get_config("seamless_m4t_medium")
+    assert sm.n_encoder_layers == 12 and sm.cross_attention
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long_context_policy_matches_design():
+    pol = {a: get_config(a).long_context for a in ARCH_IDS}
+    assert pol["xlstm_350m"] == "native"
+    assert pol["hymba_1_5b"] == "native"
+    assert pol["seamless_m4t_medium"] == "skip"
+    for a in ("qwen1_5_32b", "qwen2_0_5b", "minicpm3_4b", "starcoder2_7b",
+              "deepseek_v2_lite_16b", "phi3_5_moe_42b", "llava_next_mistral_7b"):
+        assert pol[a] == "sliding"
+
+
+def test_all_configs_loadable():
+    cfgs = all_configs()
+    assert len(cfgs) == 10
+    # aliases resolve too
+    assert get_config("qwen1.5-32b").name == "qwen1.5-32b"
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.n_experts == 16
+
+
+def test_recommended_mesh_matches_perf_campaigns():
+    """The tuned TP widths must reproduce the §Perf A/B/E winners."""
+    from repro.launch.mesh import recommended_mesh_shape
+
+    assert recommended_mesh_shape(32_000_000_000, "train") == (32, 8)   # qwen1.5 (A1)
+    assert recommended_mesh_shape(15_700_000_000, "train") == (64, 4)   # deepseek (B2)
+    assert recommended_mesh_shape(7_000_000_000, "prefill") == (128, 2)  # llava (E3)
+    assert recommended_mesh_shape(32_000_000_000, "decode") == (16, 16)  # C2 refuted narrower

@@ -1,0 +1,86 @@
+"""Data pipeline: Table-I placement enforcement + batch shapes + checkpointing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.core.assignment import worker_sample_ids
+from repro.data import AnytimeBatcher, TokenBatcher, make_linreg, synthetic_tokens
+from repro.data.synthetic import lm_batch
+
+
+def test_anytime_batcher_shapes(rng):
+    m, d, w, s, qm, b = 120, 5, 6, 1, 3, 4
+    lin = make_linreg(m, d, seed=0)
+    bt = AnytimeBatcher({"A": lin.A, "y": lin.y}, w, s, qm, b, seed=0)
+    batch = bt.round_batch()
+    assert batch["A"].shape == (w, qm, b, d)
+    assert batch["y"].shape == (w, qm, b)
+
+
+def test_batcher_respects_table_i(rng):
+    """Workers may only ever see samples from their assigned S+1 blocks."""
+    m, w, s = 120, 6, 1
+    data = np.arange(m)[:, None].astype(float)
+    bt = AnytimeBatcher({"ids": data}, w, s, max_local_steps=8, local_batch=16, seed=1)
+    for _ in range(5):
+        batch = bt.round_batch()
+        for v in range(w):
+            seen = set(batch["ids"][v].reshape(-1).astype(int).tolist())
+            allowed = set(worker_sample_ids(v, m, w, s).tolist())
+            assert seen <= allowed, f"worker {v} saw foreign samples"
+
+
+def test_batcher_rejects_mismatched_arrays():
+    with pytest.raises(ValueError):
+        AnytimeBatcher({"a": np.zeros((10, 2)), "b": np.zeros((11,))}, 2, 0, 2, 2)
+
+
+def test_token_batcher_labels_shifted(rng):
+    toks = synthetic_tokens(rng, 40, 16, vocab=50)
+    tb = TokenBatcher(toks, n_workers=4, s_redundancy=1, max_local_steps=2, local_batch=3)
+    batch = tb.round_batch()
+    assert batch["tokens"].shape == (4, 2, 3, 16)
+    np.testing.assert_array_equal(
+        batch["labels"][..., :-1], batch["tokens"][..., 1:]
+    )
+
+
+def test_synthetic_tokens_structured(rng):
+    toks = synthetic_tokens(rng, 100, 64, vocab=128, structure=0.9)
+    assert toks.shape == (100, 64)
+    assert toks.min() >= 0 and toks.max() < 128
+    # structure: successor entropy must be far below uniform
+    pairs = {}
+    for r in toks:
+        for a, b in zip(r[:-1], r[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+    match = np.mean([
+        np.mean(np.asarray(v) == np.bincount(v).argmax()) for v in pairs.values() if len(v) > 4
+    ])
+    assert match > 0.5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3), "s": {"c": jnp.int32(7)}}
+    p = tmp_path / "x.ckpt"
+    save_pytree(p, tree)
+    back = load_pytree(p, tree)
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32), np.asarray(tree["w"], np.float32))
+    assert int(back["s"]["c"]) == 7
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    p = tmp_path / "x.ckpt"
+    save_pytree(p, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        load_pytree(p, {"w": jnp.zeros((3, 2))})
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, {"a": jnp.ones(2) * s})
+    assert mgr.all_steps() == [3, 4]
+    tree, step = mgr.restore({"a": jnp.zeros(2)})
+    assert step == 4 and float(tree["a"][0]) == 4.0

@@ -1,0 +1,84 @@
+"""Multi-device integration: the SAME anytime step, jit-sharded over an
+8-device host mesh, must agree with the single-device run (subprocess so
+the 8-device XLA_FLAGS never leaks into other tests)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import dataclasses
+    from repro.configs import get_config
+    from repro.launch.steps import TrainPlan, make_train_step
+    from repro.models import model as M
+    from repro.sharding.specs import param_pspecs, worker_axes
+
+    assert jax.device_count() == 8
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = dataclasses.replace(get_config("qwen2_0_5b").reduced(),
+                              dtype="float32", model_parallel=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    w, qmax, b, s = 4, 2, 2, 16
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (w, qmax, b, s)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    q = jnp.asarray([2, 1, 0, 2], jnp.int32)
+    plan = TrainPlan(w, qmax, b)
+    step = make_train_step(cfg, plan)
+
+    # single-device reference
+    p_ref, _, m_ref = jax.jit(step)(params, (), batch, q, jnp.int32(0))
+
+    # sharded execution
+    p_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                           param_pspecs(params, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    b_shard = {k: NamedSharding(mesh, P("data", None, None, None)) for k in batch}
+    with mesh:
+        jstep = jax.jit(step,
+                        in_shardings=(p_shard, None, b_shard,
+                                      NamedSharding(mesh, P("data")),
+                                      NamedSharding(mesh, P())),
+                        out_shardings=(p_shard, None, None))
+        p_dist, _, m_dist = jstep(
+            jax.device_put(params, p_shard),
+            (),
+            {k: jax.device_put(v, b_shard[k]) for k, v in batch.items()},
+            jax.device_put(q, NamedSharding(mesh, P("data"))),
+            jnp.int32(0))
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_dist)))
+    print(json.dumps({
+        "max_param_err": err,
+        "loss_ref": float(m_ref["loss"]),
+        "loss_dist": float(m_dist["loss"]),
+        "devices": jax.device_count(),
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_anytime_matches_single_device(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["max_param_err"] < 5e-4, out
+    assert abs(out["loss_ref"] - out["loss_dist"]) < 1e-3

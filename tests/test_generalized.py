@@ -1,0 +1,59 @@
+"""Generalized Anytime-Gradients (paper Sec. V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AnytimeConfig, anytime_round
+from repro.core.generalized import broadcast_to_workers, finalize, generalized_round
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+def _batch(data, rng, w, q, b):
+    idx = rng.integers(0, data.m, size=(w, q, b))
+    return (jnp.asarray(data.A[idx], jnp.float32), jnp.asarray(data.y[idx], jnp.float32))
+
+
+def test_qbar_zero_reduces_to_vanilla(rng):
+    """lambda_vt = 1 when q_bar = 0: generalized == vanilla + broadcast."""
+    lin = make_linreg(1000, 8, seed=1)
+    w, qmax, qc = 4, 3, 2
+    cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+    params = {"x": jnp.zeros(8, jnp.float32)}
+    batch = _batch(lin, rng, w, qmax, 8)
+    comm = _batch(lin, rng, w, qc, 8)
+    q = jnp.asarray([3, 2, 1, 3], jnp.int32)
+
+    van, _, _ = anytime_round(_loss, sgd(0.01), cfg)(params, (), batch, q)
+    wp = broadcast_to_workers(params, w)
+    wopt = jax.tree.map(lambda *_: (), tuple())  # sgd: empty states per worker
+    gen_round = generalized_round(_loss, sgd(0.01), cfg, max_comm_steps=qc)
+    wp2, _, _ = gen_round(wp, (), batch, comm, q, jnp.zeros(w, jnp.int32))
+    for v in range(w):
+        np.testing.assert_allclose(np.asarray(wp2["x"][v]), np.asarray(van["x"]), rtol=1e-5)
+
+
+def test_generalized_converges_and_uses_comm_steps(rng):
+    lin = make_linreg(2000, 12, seed=2)
+    w, qmax, qc = 6, 6, 3
+    cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+    gen_round = jax.jit(generalized_round(_loss, sgd(0.02), cfg, max_comm_steps=qc))
+    wp = broadcast_to_workers({"x": jnp.zeros(12, jnp.float32)}, w)
+    state = ()
+    q_last = None
+    for ep in range(20):
+        q = jnp.asarray(rng.integers(1, qmax + 1, w), jnp.int32)
+        qb = jnp.asarray(rng.integers(0, qc + 1, w), jnp.int32)
+        wp, state, m = gen_round(wp, state, _batch(lin, rng, w, qmax, 16),
+                                 _batch(lin, rng, w, qc, 16), q, qb)
+        q_last = q
+        assert np.isclose(np.asarray(m["lambdas"]).sum(), 1.0, atol=1e-5)
+        assert np.all(np.asarray(m["mix"]) <= 1.0)
+    x = finalize(wp, q_last)
+    assert lin.normalized_error(np.asarray(x["x"], np.float64)) < 0.15

@@ -1,0 +1,60 @@
+"""Gradient Coding baseline [Tandon et al. 2017]: exact decode property."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.assignment import block_slices, worker_block_ids
+from repro.core.baselines.gradient_coding import (
+    gc_decode_weights,
+    gc_round,
+    make_cyclic_code,
+)
+
+
+@pytest.mark.parametrize("n,s", [(10, 1), (10, 2), (6, 3), (8, 0)])
+def test_code_structure(n, s):
+    code = make_cyclic_code(n, s, seed=0)
+    for v in range(n):
+        support = np.flatnonzero(code.B[v])
+        assert set(support) <= set(worker_block_ids(v, n, s))
+
+
+@pytest.mark.parametrize("n,s", [(10, 2), (7, 1)])
+def test_decode_exact_for_every_straggler_set(n, s, rng):
+    code = make_cyclic_code(n, s, seed=1)
+    for drop in itertools.combinations(range(n), s):
+        rec = np.ones(n, bool)
+        rec[list(drop)] = False
+        a = gc_decode_weights(code, rec)
+        # a^T B == all-ones  =>  decoded gradient == full gradient
+        np.testing.assert_allclose(a @ code.B, np.ones(n), atol=1e-6)
+        assert np.all(a[list(drop)] == 0)
+
+
+def test_decode_needs_n_minus_s_workers():
+    code = make_cyclic_code(6, 2, seed=0)
+    rec = np.zeros(6, bool)
+    rec[:3] = True  # only 3 < 6-2
+    with pytest.raises(ValueError):
+        gc_decode_weights(code, rec)
+
+
+def test_gc_round_recovers_full_gradient(rng):
+    n, s, d, m = 8, 2, 12, 160
+    code = make_cyclic_code(n, s, seed=2)
+    A = rng.standard_normal((m, d))
+    y = A @ rng.standard_normal(d)
+    sls = block_slices(m, n)
+
+    def block_grad(params, j):
+        a, yy = A[sls[j]], y[sls[j]]
+        return {"x": jnp.asarray(2 * a.T @ (a @ np.asarray(params["x"]) - yy))}
+
+    params = {"x": jnp.asarray(rng.standard_normal(d), jnp.float32)}
+    full = 2 * A.T @ (A @ np.asarray(params["x"]) - y)
+    rec = np.ones(n, bool)
+    rec[[0, 5]] = False
+    _, g = gc_round(block_grad, code, lr=0.0)(params, rec)
+    np.testing.assert_allclose(np.asarray(g["x"]), full, rtol=2e-4, atol=2e-4)

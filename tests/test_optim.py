@@ -1,0 +1,94 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adam,
+    adamw,
+    anytime_paper_schedule,
+    chain,
+    clip_by_global_norm,
+    constant_lr,
+    cosine_decay,
+    inverse_sqrt,
+    linear_warmup_cosine,
+    momentum,
+    sgd,
+)
+
+
+def _rosenbrock_ish(opt, steps=300):
+    params = {"x": jnp.asarray([2.0, -1.5])}
+    target = jnp.asarray([0.3, 0.7])
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2) + 0.1 * jnp.sum(p["x"] ** 4)
+
+    state = opt.init(params)
+    for t in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, t)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [sgd(0.05), momentum(0.02, 0.9), momentum(0.02, 0.9, nesterov=True),
+     adam(0.05), adamw(0.05, weight_decay=0.001)],
+    ids=["sgd", "momentum", "nesterov", "adam", "adamw"],
+)
+def test_optimizers_converge(opt):
+    assert _rosenbrock_ish(opt) < 0.2
+
+
+def test_clip_by_global_norm():
+    clip = clip_by_global_norm(1.0)
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    c = clip(g)
+    np.testing.assert_allclose(np.asarray(c["a"]), [0.6, 0.8], rtol=1e-6)
+    small = {"a": jnp.asarray([0.1, 0.1])}
+    np.testing.assert_allclose(np.asarray(clip(small)["a"]), [0.1, 0.1])
+
+
+def test_chain_clips_then_steps():
+    opt = chain(clip_by_global_norm(1.0), sgd(1.0))
+    upd, _ = opt.update({"a": jnp.asarray([30.0, 40.0])}, (), None, 0)
+    np.testing.assert_allclose(np.asarray(upd["a"]), [-0.6, -0.8], rtol=1e-6)
+
+
+def test_schedules():
+    assert float(constant_lr(0.1)(100)) == pytest.approx(0.1)
+    cd = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.1)
+    wc = linear_warmup_cosine(1.0, 10, 110)
+    assert float(wc(0)) == pytest.approx(0.1)
+    assert float(wc(9)) == pytest.approx(1.0)
+    isq = inverse_sqrt(1.0, warmup_steps=3)
+    assert float(isq(3)) == pytest.approx(1.0)
+    assert float(isq(15)) == pytest.approx(0.5)
+
+
+def test_paper_schedule_decays_like_inv_sqrt():
+    s = anytime_paper_schedule(lipschitz_l=0.0, sigma=1.0, diameter_d=1.0)
+    assert float(s(0)) == pytest.approx(1.0)
+    assert float(s(3)) == pytest.approx(0.5)
+    # L > 0 caps the max step size at 1/L
+    s2 = anytime_paper_schedule(lipschitz_l=10.0, sigma=1.0, diameter_d=1.0)
+    assert float(s2(0)) <= 0.1
+
+
+def test_adam_state_is_combinable():
+    """Adam moments are plain pytrees -> the lambda-weighted combine works."""
+    from repro.core.combine import combine_pytrees
+
+    opt = adam(0.1)
+    p = {"w": jnp.ones(3)}
+    s = opt.init(p)
+    _, s = opt.update({"w": jnp.ones(3)}, s, p, 0)
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), s)
+    merged = combine_pytrees(stacked, jnp.asarray([0.5, 0.5]))
+    np.testing.assert_allclose(np.asarray(merged["m"]["w"]), np.asarray(s["m"]["w"]), rtol=1e-6)

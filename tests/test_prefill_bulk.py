@@ -1,0 +1,87 @@
+"""Bulk (flash-path) prefill == sequential decode prefill, per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.kvcache import init_cache
+
+ARCHS = ["qwen2_0_5b", "minicpm3_4b", "phi3_5_moe_42b", "deepseek_v2_lite_16b"]
+
+
+def _setup(arch, kv_quant=False):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32", kv_quant=kv_quant)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_bulk_matches_sequential(arch):
+    cfg, params, toks = _setup(arch)
+    B, S, cap = 2, 8, 12
+    cache_ref = init_cache(cfg, B, cap)
+    for t in range(S):
+        logits_ref, cache_ref = M.decode_step(params, cfg, cache_ref, toks[:, t][:, None], jnp.int32(t))
+    cache_blk = init_cache(cfg, B, cap)
+    logits_blk, cache_blk = M.prefill_bulk(params, cfg, toks, cache_blk)
+    np.testing.assert_allclose(
+        np.asarray(logits_blk[:, : cfg.vocab]),
+        np.asarray(logits_ref[:, : cfg.vocab]), rtol=5e-3, atol=5e-3)
+    # continuing decode from either cache must agree
+    nxt = jnp.argmax(logits_ref[:, : cfg.vocab], -1)[:, None].astype(jnp.int32)
+    l1, _ = M.decode_step(params, cfg, cache_ref, nxt, jnp.int32(S))
+    l2, _ = M.decode_step(params, cfg, cache_blk, nxt, jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(l1[:, : cfg.vocab]), np.asarray(l2[:, : cfg.vocab]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_bulk_prefill_int8_cache():
+    cfg, params, toks = _setup("qwen2_0_5b", kv_quant=True)
+    cache = init_cache(cfg, 2, 12)
+    assert cache["k"].dtype == jnp.int8
+    logits, cache = M.prefill_bulk(params, cfg, toks, cache)
+    assert bool(jnp.all(jnp.isfinite(logits[:, : cfg.vocab])))
+    # int8 path tracks the fp path closely
+    cfg_fp = dataclasses.replace(cfg, kv_quant=False)
+    cache_fp = init_cache(cfg_fp, 2, 12)
+    logits_fp, _ = M.prefill_bulk(params, cfg_fp, toks, cache_fp)
+    np.testing.assert_allclose(np.asarray(logits[:, : cfg.vocab]),
+                               np.asarray(logits_fp[:, : cfg.vocab]), rtol=0.1, atol=0.1)
+
+
+def test_bulk_prefill_sliding_ring_keeps_last_window():
+    cfg = dataclasses.replace(get_config("llava_next_mistral_7b").reduced(),
+                              dtype="float32", n_prefix_embeddings=0, family="dense",
+                              sliding_window=4)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, cfg.vocab)
+    cache = M.init_cache(cfg, 1, 10)  # sliding -> cap = window = 4
+    assert cache["k"].shape[2] == 4
+    logits, cache2 = M.prefill_bulk(params, cfg, toks, cache)
+    # sequential reference over the same ring
+    cache_ref = M.init_cache(cfg, 1, 10)
+    for t in range(10):
+        logits_ref, cache_ref = M.decode_step(params, cfg, cache_ref, toks[:, t][:, None], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits[:, : cfg.vocab]),
+                               np.asarray(logits_ref[:, : cfg.vocab]), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(cache2["k"], np.float32),
+                               np.asarray(cache_ref["k"], np.float32), rtol=5e-3, atol=5e-3)
+
+
+def test_bulk_prefill_vlm_includes_prefix():
+    cfg = dataclasses.replace(get_config("llava_next_mistral_7b").reduced(), dtype="float32")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, cfg.vocab)
+    prefix = jnp.ones((1, cfg.n_prefix_embeddings, cfg.prefix_source_dim), jnp.float32)
+    cap = cfg.n_prefix_embeddings + 6 + 4
+    cache = M.init_cache(cfg, 1, cap)
+    logits, cache = M.prefill_bulk(params, cfg, toks, cache, prefix)
+    # matches the parallel apply at the last text position
+    par, _ = M.apply(params, cfg, toks, prefix)
+    np.testing.assert_allclose(np.asarray(logits[:, : cfg.vocab]),
+                               np.asarray(par[:, -1, : cfg.vocab]), rtol=5e-3, atol=5e-3)

@@ -1,0 +1,98 @@
+"""Partition-rule coherence for all ten FULL configs (no devices needed:
+rules are pure functions of shapes + an abstract mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.steps import shape_cfg
+from repro.models import model as M
+from repro.models.kvcache import cache_specs
+from repro.sharding.specs import cache_pspecs, param_pspecs, worker_axes
+
+
+def _mesh(multi_pod=False):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _axis_size(mesh, axis):
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _check_divisible(tree, specs, mesh):
+    leaves, _ = jax.tree.flatten(tree)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    n_sharded = 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is not None:
+                assert dim % _axis_size(mesh, axis) == 0, (leaf.shape, spec)
+                n_sharded += 1
+    return n_sharded
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    mesh = _mesh(multi_pod)
+    cfg = shape_cfg(get_config(arch), INPUT_SHAPES["train_4k"], mesh.shape["model"])
+    specs_tree = jax.eval_shape(lambda k: M.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_pspecs(specs_tree, mesh)
+    n_sharded = _check_divisible(specs_tree, pspecs, mesh)
+    assert n_sharded > 0, "nothing sharded at all?"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_big_weights_are_model_sharded(arch):
+    """Every >=32 MiB (bf16) weight must be sharded over `model` — a 32B
+    dense model cannot fit replicated."""
+    mesh = _mesh()
+    cfg = shape_cfg(get_config(arch), INPUT_SHAPES["train_4k"], 16)
+    specs_tree = jax.eval_shape(lambda k: M.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_pspecs(specs_tree, mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs_tree)
+    spec_leaves = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat, spec_leaves):
+        per_layer_bytes = np.prod(leaf.shape[1:] or leaf.shape) * 2
+        if per_layer_bytes >= 32 * 2**20:
+            assert any(a is not None for a in tuple(spec)), (
+                f"{jax.tree_util.keystr(path)} {leaf.shape} unsharded")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    cfg0 = get_config(arch)
+    if shape_name == "long_500k" and cfg0.long_context == "skip":
+        pytest.skip("long_500k skipped by design")
+    mesh = _mesh()
+    shape = INPUT_SHAPES[shape_name]
+    cfg = shape_cfg(cfg0, shape, 16)
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    pspecs = cache_pspecs(cache, mesh)
+    _check_divisible(cache, pspecs, mesh)
+
+
+def test_worker_axes():
+    assert worker_axes(_mesh()) == ("data",)
+    assert worker_axes(_mesh(True)) == ("pod", "data")
+
+
+def test_long500k_cache_is_bounded():
+    """Sliding/native long-context archs must NOT materialize a 524k cache."""
+    shape = INPUT_SHAPES["long_500k"]
+    for arch in ARCH_IDS:
+        cfg0 = get_config(arch)
+        if cfg0.long_context == "skip":
+            continue
+        cfg = shape_cfg(cfg0, shape, 16)
+        cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        total = sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(cache))
+        assert total < 8e9, f"{arch}: cache {total/1e9:.1f} GB not bounded"

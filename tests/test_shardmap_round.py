@@ -1,0 +1,66 @@
+"""The explicit shard_map Anytime round (core/distributed.py) must equal
+the pjit/vmap form — run in a subprocess with 8 forced host devices."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import AnytimeConfig, anytime_round
+    from repro.core.distributed import make_shardmap_round
+    from repro.optim import sgd
+
+    mesh = jax.make_mesh((8,), ("data",))
+
+    def loss_fn(params, mb):
+        a, y = mb
+        r = a @ params["x"] - y
+        return jnp.mean(r * r)
+
+    rng = np.random.default_rng(0)
+    w, qmax, b, dim = 8, 3, 4, 12
+    A = jnp.asarray(rng.standard_normal((w, qmax, b, dim)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((w, qmax, b)), jnp.float32)
+    q = jnp.asarray([3, 2, 0, 1, 3, 3, 2, 1], jnp.int32)
+    params = {"x": jnp.asarray(rng.standard_normal(dim), jnp.float32)}
+    cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+
+    ref, _, mref = anytime_round(loss_fn, sgd(0.01), cfg)(params, (), (A, y), q)
+
+    pspecs = {"x": P()}
+    rnd = make_shardmap_round(loss_fn, sgd(0.01), cfg, mesh, pspecs)
+    with mesh:
+        bs = NamedSharding(mesh, P("data"))
+        out, _, m = jax.jit(rnd)(
+            jax.device_put(params, NamedSharding(mesh, P())), (),
+            (jax.device_put(A, bs), jax.device_put(y, bs)),
+            jax.device_put(q, bs), jnp.int32(0))
+    err = float(jnp.abs(out["x"] - ref["x"]).max())
+    print(json.dumps({"err": err, "loss_ref": float(mref["loss"]),
+                      "loss_sm": float(m["loss"])}))
+    """
+)
+
+
+@pytest.mark.slow
+def test_shardmap_round_matches_vmap_form():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["err"] < 1e-5, out
+    assert abs(out["loss_ref"] - out["loss_sm"]) < 1e-5

