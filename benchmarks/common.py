@@ -1,7 +1,11 @@
 """Shared simulation harness for the paper-figure benchmarks.
 
 Every scheme is driven against the SAME StragglerModel (the paper ran all
-EC2 experiments simultaneously for the same reason).  Results are
+EC2 experiments simultaneously for the same reason) AND the same
+RoundEngine: all epochs of a run execute as ONE jit dispatch
+(`RoundEngine.run` with a pre-sampled q-matrix and keep_history=True), so
+cross-scheme curves compare algorithms, not dispatch overheads — the
+error-runtime confound Dutta et al. (2018) warn about.  Results are
 (wall_clock_seconds, normalized_error) curves + a time-to-target summary,
 printed as CSV rows `name,us_per_call,derived`.
 
@@ -19,18 +23,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AnytimeConfig, anytime_round
+from repro.core import from_arena
 from repro.core.assignment import block_slices, worker_sample_ids
 from repro.core.baselines import (
     fnb_epoch_time,
-    fnb_round,
     gc_epoch_time,
-    gc_round,
     make_cyclic_code,
     sync_epoch_time,
-    sync_round,
 )
-from repro.core.generalized import broadcast_to_workers, finalize, generalized_round
+from repro.core.baselines.gradient_coding import gc_decode_weights
+from repro.core.engine import (
+    RoundEngine,
+    RoundPolicy,
+    fnb_policy,
+    gc_policy,
+    generalized_policy,
+    sync_policy,
+)
 from repro.core.straggler import StragglerModel
 from repro.data.linreg import LinRegData, make_linreg
 from repro.optim import sgd
@@ -73,97 +82,165 @@ class SimSetup:
         return (jnp.asarray(self.data.A[idx], jnp.float32), jnp.asarray(self.data.y[idx], jnp.float32))
 
 
+def _zero_params(setup: SimSetup) -> dict:
+    return {"x": jnp.zeros(setup.data.d, jnp.float32)}
+
+
+def _stack_batches(batches: list) -> tuple:
+    """[(A, y)] per epoch -> ([K, W, q, b, d], [K, W, q, b])."""
+    return (jnp.stack([b[0] for b in batches]), jnp.stack([b[1] for b in batches]))
+
+
+def _error_curve(setup: SimSetup, engine: RoundEngine, history, walls):
+    """Per-epoch normalized error from the driver's arena history [K, N]."""
+    hist = np.asarray(history, np.float64)
+    curve = []
+    for ep, wall in enumerate(walls):
+        x = np.asarray(
+            from_arena(jnp.asarray(hist[ep], jnp.float32), engine.pspec)["x"], np.float64
+        )
+        curve.append((wall, setup.data.normalized_error(x)))
+    return curve
+
+
 def run_anytime(setup: SimSetup, weighting: str = "anytime", fixed_q: Optional[np.ndarray] = None):
-    """Error-vs-wall-clock for Anytime-Gradients (or its uniform ablation)."""
-    cfg = AnytimeConfig(setup.n_workers, setup.qmax, setup.s, weighting=weighting)
-    rnd = jax.jit(anytime_round(linreg_loss, sgd(setup.lr), cfg))
+    """Error-vs-wall-clock for Anytime-Gradients (or its uniform ablation).
+
+    All epochs run inside ONE RoundEngine driver dispatch; the q-matrix is
+    pre-sampled in the legacy per-epoch draw order (q then batch) so the
+    stochastic trajectory matches the pre-engine harness."""
+    policy = RoundPolicy(name=f"anytime_{weighting}", weighting=weighting,
+                         s_redundancy=setup.s)
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax, policy)
     pools = setup.pools()
     r = np.random.default_rng(setup.seed)
-    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
-    wall, curve = 0.0, []
+    qs, batches = [], []
     for ep in range(setup.epochs):
         q = fixed_q if fixed_q is not None else setup.straggler.realize_steps(
             r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds)
-        params, _, _ = rnd(params, (), setup.batch(r, pools), jnp.asarray(q, jnp.int32))
-        wall += setup.budget_t
-        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
-    return curve
+        qs.append(np.asarray(q))
+        batches.append(setup.batch(r, pools))
+    state = engine.init_state(_zero_params(setup), ())
+    _, outs = engine.run(state, _stack_batches(batches), np.stack(qs), keep_history=True)
+    walls = [(ep + 1) * setup.budget_t for ep in range(setup.epochs)]
+    return _error_curve(setup, engine, outs["arena"], walls)
 
 
 def run_generalized(setup: SimSetup, comm_frac: float = 0.5):
     """Sec.-V generalized scheme; comm window = comm_frac * T."""
     qc = max(int(setup.qmax * comm_frac), 1)
-    cfg = AnytimeConfig(setup.n_workers, setup.qmax, setup.s)
-    rnd = jax.jit(generalized_round(linreg_loss, sgd(setup.lr), cfg, qc))
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
+                         generalized_policy(), max_comm_steps=qc)
     pools = setup.pools()
     r = np.random.default_rng(setup.seed)
-    wp = broadcast_to_workers({"x": jnp.zeros(setup.data.d, jnp.float32)}, setup.n_workers)
-    wall, curve = 0.0, []
-    q = None
+    qs, qbs, batches, comms = [], [], [], []
     for ep in range(setup.epochs):
-        q = setup.straggler.realize_steps(r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds)
-        qb = setup.straggler.realize_steps(r, setup.n_workers, setup.budget_t * comm_frac, qc, setup.speeds)
-        wp, _, _ = rnd(wp, (), setup.batch(r, pools), setup.batch(r, pools, qc),
-                       jnp.asarray(q, jnp.int32), jnp.asarray(qb, jnp.int32))
-        wall += setup.budget_t * (1.0 + comm_frac)
-        x = finalize(wp, jnp.asarray(q, jnp.int32))
-        curve.append((wall, setup.data.normalized_error(np.asarray(x["x"], np.float64))))
+        qs.append(setup.straggler.realize_steps(
+            r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds))
+        qbs.append(setup.straggler.realize_steps(
+            r, setup.n_workers, setup.budget_t * comm_frac, qc, setup.speeds))
+        batches.append(setup.batch(r, pools))
+        comms.append(setup.batch(r, pools, qc))
+    state = engine.init_state(_zero_params(setup), ())
+    _, outs = engine.run(state, _stack_batches(batches), np.stack(qs),
+                         comm_batches=_stack_batches(comms),
+                         qbars=jnp.asarray(np.stack(qbs), jnp.int32),
+                         keep_history=True)
+    # history rows are per-worker stacks [K, W, N]; finalize each epoch with
+    # its own Theorem-3 weights (the master's view after epoch t)
+    hist = np.asarray(outs["arena"], np.float64)
+    curve = []
+    for ep in range(setup.epochs):
+        q = np.asarray(qs[ep], np.float64)
+        lam = q / q.sum() if q.sum() > 0 else np.full_like(q, 1.0 / len(q))
+        vec = jnp.asarray(lam @ hist[ep], jnp.float32)
+        x = np.asarray(from_arena(vec, engine.pspec)["x"], np.float64)
+        curve.append(((ep + 1) * setup.budget_t * (1.0 + comm_frac),
+                      setup.data.normalized_error(x)))
     return curve
 
 
 def run_sync(setup: SimSetup):
-    rnd = jax.jit(sync_round(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax))
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
+                         sync_policy())
     pools = setup.pools(0)  # classical sync: no replication
     r = np.random.default_rng(setup.seed)
-    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
-    wall, curve = 0.0, []
+    walls, batches, wall = [], [], 0.0
     for ep in range(setup.epochs):
         wall += sync_epoch_time(setup.straggler, r, setup.n_workers, setup.qmax, setup.speeds)
-        params, _, _ = rnd(params, (), setup.batch(r, pools))
-        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
-    return curve
+        walls.append(wall)
+        batches.append(setup.batch(r, pools))
+    q_mat = np.full((setup.epochs, setup.n_workers), setup.qmax, np.int64)
+    state = engine.init_state(_zero_params(setup), ())
+    _, outs = engine.run(state, _stack_batches(batches), q_mat, keep_history=True)
+    return _error_curve(setup, engine, outs["arena"], walls)
 
 
 def run_fnb(setup: SimSetup, n_drop: int):
-    rnd = jax.jit(fnb_round(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax))
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
+                         fnb_policy())
     pools = setup.pools(0)  # FNB has no replication
     r = np.random.default_rng(setup.seed)
-    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
-    wall, curve = 0.0, []
+    walls, qs, batches, wall = [], [], [], 0.0
     for ep in range(setup.epochs):
         dt, mask = fnb_epoch_time(setup.straggler, r, setup.n_workers, setup.qmax, n_drop, setup.speeds)
         wall += dt
-        params, _, _ = rnd(params, (), setup.batch(r, pools), jnp.asarray(mask))
-        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
-    return curve
+        walls.append(wall)
+        qs.append(np.where(mask, setup.qmax, 0))
+        batches.append(setup.batch(r, pools))
+    state = engine.init_state(_zero_params(setup), ())
+    _, outs = engine.run(state, _stack_batches(batches), np.stack(qs), keep_history=True)
+    return _error_curve(setup, engine, outs["arena"], walls)
 
 
 def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1):
-    """GC: one exact full-batch GD step per epoch, fastest N-S wait."""
+    """GC: one exact full-batch GD step per epoch, fastest N-S wait.
+
+    Engine form: worker v's (static) microbatch stream is its S+1 assigned
+    blocks; the per-step scales are the code-matrix entries and the per-
+    epoch decode vectors enter as explicit combine weights, so every epoch
+    is the exact coded step x' = x0 - lr * sum_v a_v c_v — through the SAME
+    driver as every other scheme.  Block data never changes, so the driver
+    runs with a static batch (batch_per_round=False).
+    """
+    from repro.core.assignment import worker_block_ids
+
     code = make_cyclic_code(setup.n_workers, setup.s, seed=setup.seed)
     sls = block_slices(setup.data.m, setup.n_workers)
     A, y = setup.data.A, setup.data.y
+    if setup.data.m % setup.n_workers:
+        # uniform [W, S+1, blk, d] block stacks need equal-size blocks;
+        # truncating would silently break the exact-full-gradient property
+        raise ValueError(
+            f"gradient coding needs N | m for the engine block stack "
+            f"(m={setup.data.m}, N={setup.n_workers})"
+        )
+    blk = setup.data.m // setup.n_workers
+    w, s = setup.n_workers, setup.s
+    bA = np.zeros((w, s + 1, blk, setup.data.d), np.float32)
+    bY = np.zeros((w, s + 1, blk), np.float32)
+    for v in range(w):
+        for t, j in enumerate(worker_block_ids(v, w, s)):
+            bA[v, t] = A[sls[j]]
+            bY[v, t] = y[sls[j]]
 
-    def block_grad(params, j):
-        a, yy = A[sls[j]], y[sls[j]]
-        x = np.asarray(params["x"], np.float64)
-        return {"x": jnp.asarray(2.0 * a.T @ (a @ x - yy) / len(yy), jnp.float32)}
-
-    # full-batch GD needs its own stable lr
-    gd_lr = setup.lr
-    rnd = gc_round(block_grad, code, gd_lr)
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), w, s + 1, gc_policy(code))
     r = np.random.default_rng(setup.seed)
-    params = {"x": jnp.zeros(setup.data.d, jnp.float32)}
-    wall, curve = 0.0, []
     # one GC "epoch" costs each worker S+1 block passes; in straggler-model
     # units a block pass ~ (m/N)/local_batch iteration-equivalents
     steps_per_block = max(setup.data.m // setup.n_workers // setup.local_batch, 1)
+    walls, qs, lams, wall = [], [], [], 0.0
     for ep in range(setup.epochs * epochs_scale):
         dt, rec = gc_epoch_time(setup.straggler, r, setup.n_workers, setup.s, steps_per_block, setup.speeds)
         wall += dt
-        params, _ = rnd(params, rec)
-        curve.append((wall, setup.data.normalized_error(np.asarray(params["x"], np.float64))))
-    return curve
+        walls.append(wall)
+        qs.append(np.where(rec, s + 1, 0))
+        lams.append(gc_decode_weights(code, rec))
+    state = engine.init_state(_zero_params(setup), ())
+    _, outs = engine.run(state, (jnp.asarray(bA), jnp.asarray(bY)), np.stack(qs),
+                         lams=jnp.asarray(np.stack(lams), jnp.float32),
+                         batch_per_round=False, keep_history=True)
+    return _error_curve(setup, engine, outs["arena"], walls)
 
 
 def time_to_target(curve, target: float) -> float:

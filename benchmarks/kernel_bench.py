@@ -5,9 +5,15 @@ CPU wall-times of interpret-mode Pallas are NOT meaningful TPU numbers, so
 for each kernel we report (a) the jitted XLA-oracle CPU time as a sanity
 signal and (b) the TPU roofline time bound from bytes/flops (what the
 kernel is designed to approach).
+
+`run_roundengine` additionally benchmarks the RoundEngine multi-round
+driver against per-round dispatch on the linreg config and writes
+BENCH_roundengine.json (rounds/s + per-round host-sync counts).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -42,6 +48,25 @@ def run():
     bytes_moved = (w * n + n) * 4
     rows.append(("kernel_weighted_combine_cpu_oracle", f"{us:.0f}",
                  f"tpu_roofline_us={bytes_moved/HBM_BW*1e6:.0f}"))
+
+    # arena combine vs per-leaf tree combine: same total elements split over
+    # a 24-leaf "model" — measures the dispatch/fusion win of ONE [W, N]
+    # contraction vs 24 small per-leaf reductions
+    from repro.core import arena as AR
+    from repro.core.combine import combine_pytrees
+
+    sizes = [4096 * (i % 6 + 1) for i in range(24)]
+    tree = {f"w{i}": jnp.asarray(rng.standard_normal((w, s)).astype(np.float32))
+            for i, s in enumerate(sizes)}
+    f_tree = jax.jit(lambda t, l: combine_pytrees(t, l))
+    us_tree = _time(lambda t, l: jax.tree.leaves(f_tree(t, l))[0], tree, lam)
+    spec = AR.arena_spec(jax.tree.map(lambda l: l[0], tree))
+    mat = AR.stack_to_arena(tree, spec)
+    f_arena = jax.jit(lambda m, l: jnp.einsum("wn,w->n", m, l))
+    us_arena = _time(f_arena, mat, lam)
+    rows.append(("combine_tree_24leaf_cpu", f"{us_tree:.0f}", f"n_total={sum(sizes)}"))
+    rows.append(("combine_arena_24leaf_cpu", f"{us_arena:.0f}",
+                 f"speedup_vs_tree={us_tree/max(us_arena,1e-9):.2f}x"))
 
     # flash attention: 1x8 heads x 2048 x 128
     b, h, s, d = 1, 8, 2048, 128
@@ -79,7 +104,99 @@ def run():
     return rows
 
 
+def run_roundengine(out_path: str = "BENCH_roundengine.json",
+                    rounds: int = 32, repeats: int = 3):
+    """Multi-round driver vs per-round dispatch on the linreg config.
+
+    Both paths run the IDENTICAL anytime round (same engine, same q-matrix,
+    same batches, already device-resident); the only difference is K rounds
+    inside one jit (lax.scan, zero host syncs between rounds) vs the legacy
+    per-round flow — one jit dispatch per round with this round's q uploaded
+    to the device, the loss read back, and the parameter vector read back
+    for the error curve (the three host round-trips the driver eliminates;
+    keep_history hands back the whole per-round trajectory in the single
+    dispatch instead).  Writes rounds/s and the per-round host-sync count
+    to BENCH_roundengine.json.
+    """
+    from benchmarks.common import SimSetup, linreg_loss, make_linreg
+    from repro.core.engine import RoundEngine, anytime_policy
+    from repro.core.straggler import StragglerModel
+    from repro.optim import sgd
+
+    # paper-structural linreg config (N=10 workers, q_max=24, d=100) with a
+    # small microbatch: the quantity under test is per-round dispatch/sync
+    # overhead, not the GEMM time shared identically by both paths
+    setup = SimSetup(data=make_linreg(20_000, 100, seed=0), n_workers=10,
+                     qmax=24, local_batch=4, epochs=rounds,
+                     straggler=StragglerModel(kind="shifted_exp", rate=1.0))
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
+                         anytime_policy())
+    pools = setup.pools()
+    r = np.random.default_rng(0)
+    q_mat = setup.straggler.realize_steps_matrix(
+        r, rounds, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds)
+    batches = [setup.batch(r, pools) for _ in range(rounds)]
+    stacked = (jnp.stack([b[0] for b in batches]), jnp.stack([b[1] for b in batches]))
+    params0 = {"x": jnp.zeros(setup.data.d, jnp.float32)}
+
+    # --- engine driver: ONE dispatch for all rounds ---
+    state0 = engine.init_state(params0, ())
+    st, _ = engine.run(state0, stacked, q_mat, keep_history=True)  # compile
+    jax.tree.leaves(st.arena)[0].block_until_ready()
+    t_drv = []
+    for _ in range(repeats):
+        t0 = time.time()
+        st, outs = engine.run(engine.init_state(params0, ()), stacked, q_mat,
+                              keep_history=True)
+        np.asarray(outs["arena"])  # whole trajectory, ONE readback
+        t_drv.append(time.time() - t0)
+    drv_s = min(t_drv)
+
+    # --- per-round dispatch: K jit calls, q + metrics cross the host ---
+    rnd = jax.jit(engine.tree_round())
+    q_dev = jnp.asarray(q_mat, jnp.int32)
+    p, s, m = rnd(params0, (), batches[0], q_dev[0])  # compile
+    jax.tree.leaves(p)[0].block_until_ready()
+    t_per = []
+    for _ in range(repeats):
+        p = params0
+        t0 = time.time()
+        for k in range(rounds):
+            q_host = jnp.asarray(q_mat[k], jnp.int32)  # host->device, per round
+            p, _, m = rnd(p, (), batches[k], q_host)
+            float(m["loss"])        # device->host sync (legacy logging)
+            np.asarray(p["x"])      # device->host sync (legacy error curve)
+        t_per.append(time.time() - t0)
+    per_s = min(t_per)
+
+    result = {
+        "config": {"m": setup.data.m, "d": setup.data.d, "workers": setup.n_workers,
+                   "q_max": setup.qmax, "rounds": rounds, "repeats": repeats},
+        "engine_driver": {
+            "rounds_per_s": rounds / drv_s,
+            "wall_s": drv_s,
+            "host_syncs_per_round": 1.0 / rounds,  # one dispatch per K rounds
+            "jit_traces": engine.trace_count,
+        },
+        "per_round_dispatch": {
+            "rounds_per_s": rounds / per_s,
+            "wall_s": per_s,
+            # q upload + loss readback + param readback, each round
+            "host_syncs_per_round": 3.0,
+        },
+        "speedup": per_s / drv_s,
+    }
+    pathlib.Path(out_path).write_text(json.dumps(result, indent=2))
+    return [
+        ("roundengine_driver", f"{drv_s/rounds*1e6:.0f}",
+         f"rounds_per_s={rounds/drv_s:.1f}"),
+        ("roundengine_per_round_dispatch", f"{per_s/rounds*1e6:.0f}",
+         f"rounds_per_s={rounds/per_s:.1f}"),
+        ("roundengine_speedup", f"{per_s/drv_s:.2f}", f"written={out_path}"),
+    ]
+
+
 if __name__ == "__main__":
     from benchmarks.common import emit_csv
 
-    emit_csv(run())
+    emit_csv(run() + run_roundengine())

@@ -8,6 +8,9 @@
   assignment.py  Table-I S+1 circular replicated data placement
   theory.py      Thm 1/2/5, Cor 4/6 bound evaluators
   baselines/     Sync-SGD, fastest-(N-B), Gradient Coding comparators
+  engine.py      unified RoundEngine: every scheme as a RoundPolicy over
+                 one masked scan + single-jit multi-round driver
+  arena.py       flat f32 parameter arena backing the engine's hot combine
 """
 
 from repro.core.anytime import AnytimeConfig, anytime_round, local_sgd, reshape_global_batch  # noqa: F401
@@ -20,6 +23,27 @@ from repro.core.combine import (  # noqa: F401
 )
 from repro.core.generalized import broadcast_to_workers, finalize, generalized_round  # noqa: F401
 from repro.core.straggler import StragglerModel, order_statistic_time  # noqa: F401
+from repro.core.arena import (  # noqa: F401
+    ArenaSpec,
+    arena_spec,
+    broadcast_arena,
+    from_arena,
+    stack_from_arena,
+    stack_to_arena,
+    to_arena,
+)
+from repro.core.engine import (  # noqa: F401
+    EngineState,
+    POLICIES,
+    RoundEngine,
+    RoundPolicy,
+    anytime_policy,
+    async_policy,
+    fnb_policy,
+    gc_policy,
+    generalized_policy,
+    sync_policy,
+)
 from repro.core.assignment import (  # noqa: F401
     assignment_matrix,
     block_slices,

@@ -1,0 +1,103 @@
+"""Flat parameter arena: contiguous f32 views over model/optimizer pytrees.
+
+The RoundEngine (core/engine.py) keeps the training state as ONE contiguous
+float32 vector per logical copy ("arena") instead of a pytree of leaves.
+Motivation (DESIGN.md §5): the Anytime master combine touches EVERY
+parameter every round, and a per-leaf tree-map dispatches one reduction per
+leaf — dozens of small kernels for an LM.  With the arena the whole combine
+is a single [W, N] x [W] contraction that lowers to one
+`kernels/weighted_combine` call (or one fused XLA einsum).
+
+An `ArenaSpec` records the static layout (treedef, per-leaf shapes, dtypes,
+offsets); `to_arena` / `from_arena` are pure reshape+concat/slice ops that
+XLA folds away, so round-tripping inside a jit costs nothing on a
+replicated layout.  Non-f32 leaves (bf16 params, int32 step counters) are
+cast to f32 in the arena and cast back on exit — exact for bf16/f16 values
+and for integers below 2**24, which covers every counter we carry.
+
+Worker-stacked variants (`stack_to_arena` / `stack_from_arena`) treat a
+leading [W, ...] axis on every leaf as the row axis of a [W, N] arena
+matrix — the layout the combine kernel consumes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaSpec:
+    """Static layout of a pytree inside a flat f32 arena."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]
+    sizes: tuple[int, ...]
+    size: int
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+
+def arena_spec(tree: PyTree) -> ArenaSpec:
+    """Build the layout from a concrete pytree or one of ShapeDtypeStructs."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.asarray(l).dtype if not hasattr(l, "dtype") else l.dtype for l in leaves)
+    sizes = tuple(math.prod(s) for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    return ArenaSpec(treedef, shapes, dtypes, tuple(offsets), sizes, off)
+
+
+def to_arena(tree: PyTree, spec: ArenaSpec) -> jax.Array:
+    """Pytree -> flat f32 [spec.size] vector (empty trees -> [0])."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate([jnp.asarray(l).astype(jnp.float32).reshape(-1) for l in leaves])
+
+
+def from_arena(vec: jax.Array, spec: ArenaSpec) -> PyTree:
+    """Flat f32 vector -> pytree with the original shapes/dtypes."""
+    leaves = [
+        jax.lax.slice_in_dim(vec, o, o + s, axis=0).reshape(shape).astype(dt)
+        for o, s, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes, spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def stack_to_arena(tree: PyTree, spec: ArenaSpec) -> jax.Array:
+    """Worker-stacked pytree (leaves [W, ...]) -> [W, spec.size] arena matrix."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0, 0), jnp.float32)
+    w = leaves[0].shape[0]
+    return jnp.concatenate(
+        [jnp.asarray(l).astype(jnp.float32).reshape(w, -1) for l in leaves], axis=1
+    )
+
+
+def stack_from_arena(mat: jax.Array, spec: ArenaSpec) -> PyTree:
+    """[W, spec.size] arena matrix -> worker-stacked pytree (leaves [W, ...])."""
+    w = mat.shape[0]
+    leaves = [
+        jax.lax.slice_in_dim(mat, o, o + s, axis=1).reshape((w,) + shape).astype(dt)
+        for o, s, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes, spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def broadcast_arena(vec: jax.Array, n_workers: int) -> jax.Array:
+    """[N] -> [W, N] (replicate one arena into a worker stack)."""
+    return jnp.broadcast_to(vec[None], (n_workers,) + vec.shape)

@@ -9,6 +9,14 @@ lets benchmarks show the error floor growing with staleness while Anytime
 
 Wall-clock model: updates arrive at the aggregate worker rate — async
 never waits, so its wall-clock per update is iter_time / N_active.
+
+`async_run` below is the serial reference oracle.  The RoundEngine form is
+`core.engine.async_policy()`: a round-stale Hogwild model where every
+participant's delta is applied additively to the master copy (the affine
+combine with lambda_v = 1), all deltas computed against the round-start
+params — staleness of one full round, the harness-aligned comparator the
+fig benchmarks drive (tests/test_engine.py checks the two agree on the
+staleness-free limit).
 """
 from __future__ import annotations
 

@@ -15,7 +15,7 @@ from typing import Any, Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.anytime import AnytimeConfig, anytime_round
+from repro.core.engine import RoundEngine, fnb_policy
 from repro.core.straggler import StragglerModel, order_statistic_time
 from repro.optim.optimizers import Optimizer
 
@@ -35,14 +35,10 @@ def fastest_mask(finish: np.ndarray, n_drop: int) -> np.ndarray:
 
 
 def fnb_round(loss_fn: Callable, opt: Optimizer, n_workers: int, k_steps: int):
-    """One FNB epoch. Caller passes the finisher mask for this epoch."""
-    cfg = AnytimeConfig(
-        n_workers=n_workers,
-        max_local_steps=k_steps,
-        weighting="uniform",
-        iterate_mode="last",
-    )
-    inner = anytime_round(loss_fn, opt, cfg)
+    """One FNB epoch via the engine. Caller passes this epoch's finisher mask
+    (drop-out is q_v = 0 + uniform weighting on the survivors)."""
+    engine = RoundEngine(loss_fn, opt, n_workers, k_steps, fnb_policy())
+    inner = engine.tree_round()
 
     def round_fn(params, opt_state, batch, finisher_mask, step=0):
         q = jnp.where(finisher_mask, k_steps, 0).astype(jnp.int32)

@@ -21,6 +21,13 @@ on the measure-zero failure event.
 Cost model: each worker computes S+1 block gradients per epoch (the
 redundancy the paper calls "wasteful" — it buys robustness but no speed),
 and the master waits for the fastest N-S workers.
+
+`gc_round` below is the host-side reference oracle.  The RoundEngine form
+is `core.engine.gc_policy(code)`: the per-step gradient scales are the
+B[v, j] entries in block-visit order, the decode vector a (from
+`gc_decode_weights`) enters the round as explicit combine weights, and the
+engine's affine combine x' = (1 - sum a) x0 + sum_v a_v x_v reproduces the
+exact coded step x' = x0 - lr * sum_v a_v c_v (tests/test_engine.py).
 """
 from __future__ import annotations
 

@@ -9,10 +9,9 @@ from __future__ import annotations
 
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
-from repro.core.anytime import AnytimeConfig, anytime_round
+from repro.core.engine import RoundEngine, sync_policy
 from repro.core.straggler import StragglerModel, order_statistic_time
 from repro.optim.optimizers import Optimizer
 
@@ -20,14 +19,9 @@ PyTree = Any
 
 
 def sync_round(loss_fn: Callable, opt: Optimizer, n_workers: int, k_steps: int):
-    """One Sync-SGD epoch = anytime round with q_v = k for all, uniform weights."""
-    cfg = AnytimeConfig(
-        n_workers=n_workers,
-        max_local_steps=k_steps,
-        weighting="uniform",
-        iterate_mode="last",
-    )
-    inner = anytime_round(loss_fn, opt, cfg)
+    """One Sync-SGD epoch = engine round with q_v = k for all, uniform weights."""
+    engine = RoundEngine(loss_fn, opt, n_workers, k_steps, sync_policy())
+    inner = engine.tree_round()
 
     def round_fn(params, opt_state, batch, step=0):
         import jax.numpy as jnp

@@ -7,19 +7,20 @@ the EXPLICIT alternative — shard_map over the worker mesh axes with
 control exactly where the combine collective sits (e.g. to overlap it with
 the generalized scheme's extra local steps, paper Sec. V).
 
-Both forms are numerically identical (tests/test_distributed.py).
+Since the RoundEngine refactor this is a THIN BACKEND: the round body lives
+in `RoundEngine.shardmap_round` (core/engine.py) and this wrapper only
+adapts the legacy (loss_fn, opt, cfg, mesh, param_specs) signature.  Both
+forms are numerically identical (tests/test_distributed.py,
+tests/test_shardmap_round.py).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.anytime import AnytimeConfig, local_sgd
-from repro.core.combine import combine_mean_axis
+from repro.core.anytime import AnytimeConfig
+from repro.core.engine import RoundEngine, RoundPolicy
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
@@ -39,35 +40,12 @@ def make_shardmap_round(
     param_specs (replicated over the worker axes); output params identical
     on every worker (psum-combined).
     """
-    waxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-
-    def body(params, opt_state, batch, q, step):
-        # inside shard_map: this program instance IS one worker's model group
-        my_batch = jax.tree.map(lambda x: x[0], batch)  # [1, q_max, ...] -> slice
-        my_q = q[0]
-        p_fin, s_fin, iterate, loss = local_sgd(
-            loss_fn, opt, params, opt_state, my_batch, my_q, step, cfg.iterate_mode
-        )
-        new_params = combine_mean_axis(iterate, my_q, waxes)  # Thm-3 psum pair
-        if cfg.combine_opt_state:
-            new_opt = combine_mean_axis(s_fin, my_q, waxes)
-        else:
-            new_opt = s_fin
-        q_total = jax.lax.psum(my_q.astype(jnp.float32), waxes)
-        mean_loss = jax.lax.psum(loss * my_q.astype(jnp.float32), waxes) / jnp.maximum(q_total, 1.0)
-        return new_params, new_opt, {"loss": mean_loss, "q_total": q_total}
-
-    batch_spec = P(waxes)  # leading worker axis split; rest replicated
-
-    def round_fn(params, opt_state, batch, q, step=jnp.zeros((), jnp.int32)):
-        opt_specs = jax.tree.map(lambda _: P(), opt_state)
-        wrapped = jax.shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(param_specs, opt_specs, batch_spec, P(waxes), P()),
-            out_specs=(param_specs, opt_specs, P()),
-            check_vma=False,
-        )
-        return wrapped(params, opt_state, batch, q, step)
-
-    return round_fn
+    policy = RoundPolicy(
+        name=f"shardmap_{cfg.weighting}",
+        weighting=cfg.weighting,
+        iterate_mode=cfg.iterate_mode,
+        combine_opt_state=cfg.combine_opt_state,
+        s_redundancy=cfg.s_redundancy,
+    )
+    engine = RoundEngine(loss_fn, opt, cfg.n_workers, cfg.max_local_steps, policy)
+    return engine.shardmap_round(mesh, param_specs)

@@ -1,0 +1,607 @@
+"""Unified RoundEngine: every round scheme as a policy over one masked scan.
+
+The paper compares fixed-time Anytime rounds (Theorem-3 weighted combines)
+against fixed-work schemes (Sync-SGD, fastest-(N-B), gradient coding) and
+asynchronous updates.  The seed repo implemented each scheme as its own
+hand-rolled loop with per-leaf `combine_pytrees` reductions, so the Fig-3/4
+comparisons exercised different dispatch overheads, not just different
+algorithms.  This module is the single substrate (DESIGN.md §5):
+
+  * Every scheme is a `RoundPolicy`: a weight function lambda(q), a
+    participation mask (encoded as q_v = 0), an update rule ('sgd' local
+    steps or 'coded' one-shot gradient coding), and optional extra phases
+    (the Sec.-V generalized self-mix).
+  * One round body runs the SAME masked `local_sgd` scan for all policies.
+  * The master combine is AFFINE over the round-start iterate x0:
+
+        x' = (1 - sum_v lam_v) * x0 + sum_v lam_v * x_v
+
+    With sum lam = 1 (anytime / uniform) the x0 term vanishes and this is
+    Algorithm 1 line 15.  With explicit decode weights a_v it is EXACTLY
+    gradient coding (x' = x0 - lr * sum_v a_v c_v), and with lam_v = 1 on
+    participants it is round-stale Hogwild async (every delta applied to
+    the master copy, all computed against the stale round-start params).
+  * Two state layouts share the policy logic:
+      - 'arena': the whole model lives in one contiguous f32 vector
+        (core/arena.py); the combine is ONE [R, N] x [R] contraction that
+        lowers to `kernels/weighted_combine` (or a fused XLA einsum)
+        instead of a per-leaf tree-map.  This is the hot path and the only
+        layout the multi-round driver uses.
+      - 'tree': per-leaf combine that preserves model-parallel shardings
+        (the pjit path in launch/steps.py keeps leaves sharded over the
+        'model' mesh axes; flattening would force an all-gather).
+  * `run()` drives K rounds inside ONE jax.jit via lax.scan with buffer
+    donation, consuming a pre-sampled [K, W] q-matrix from StragglerModel:
+    zero host round-trips between rounds, one compile for any K.
+
+The legacy `core.anytime.anytime_round` / `core.generalized` /
+`core.baselines.*` entry points remain as reference oracles; tests compare
+the engine against them to float tolerance (tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import arena as AR
+from repro.core.anytime import local_sgd
+from repro.core.combine import (
+    anytime_lambdas,
+    combine_mean_axis,
+    combine_pytrees,
+    generalized_mixing_lambda,
+    uniform_lambdas,
+)
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+LossFn = Callable[[PyTree, PyTree], jax.Array]
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (experimental module pre-0.5)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundPolicy:
+    """One distributed-SGD scheme, expressed over the shared masked scan.
+
+    weighting   'anytime'  — Theorem 3, lambda_v = q_v / sum q
+                'uniform'  — 1/|chi| on participants (Sync-SGD / FNB)
+                'explicit' — caller-supplied weights (gradient-coding decode
+                             vectors a_v); combine is affine over x0
+                'additive' — lambda_v = 1 on participants; x' = x0 +
+                             sum(x_v - x0): round-stale Hogwild async
+    update      'sgd'   — Algorithm-2 masked local SGD steps
+                'coded' — accumulate per-step-scaled gradients at x0, apply
+                          ONE optimizer update (gradient coding's c_v)
+    generalized Sec.-V two-phase round with Eq.-13 self-mixing; the state
+                carries a PER-WORKER parameter stack.
+    step_scales [W][q_max] per-(worker, step) gradient scales for 'coded'
+                (the code-matrix entries B[v, j] in block-visit order).
+    s_redundancy  Table-I data placement S (consumed by the data layer;
+                recorded here so a policy fully describes a scheme).
+    """
+
+    name: str
+    weighting: str = "anytime"
+    update: str = "sgd"
+    iterate_mode: str = "last"
+    generalized: bool = False
+    combine_opt_state: bool = True
+    s_redundancy: int = 0
+    step_scales: Optional[tuple[tuple[float, ...], ...]] = None
+
+    def __post_init__(self):
+        if self.weighting not in ("anytime", "uniform", "explicit", "additive"):
+            raise ValueError(f"bad weighting {self.weighting!r}")
+        if self.update not in ("sgd", "coded"):
+            raise ValueError(f"bad update {self.update!r}")
+        if self.iterate_mode not in ("last", "average"):
+            raise ValueError(f"bad iterate_mode {self.iterate_mode!r}")
+        if self.update == "coded" and self.step_scales is None:
+            raise ValueError("'coded' update needs step_scales")
+
+    @property
+    def affine(self) -> bool:
+        """Whether the combine includes the round-start iterate x0."""
+        return self.weighting in ("explicit", "additive")
+
+
+def anytime_policy(iterate_mode: str = "last", combine_opt_state: bool = True,
+                   s_redundancy: int = 0) -> RoundPolicy:
+    """Paper Algorithm 1: fixed time T, Theorem-3 weights."""
+    return RoundPolicy("anytime", weighting="anytime", iterate_mode=iterate_mode,
+                       combine_opt_state=combine_opt_state, s_redundancy=s_redundancy)
+
+
+def sync_policy() -> RoundPolicy:
+    """Wait-for-all Sync-SGD: q_v = k for every worker, uniform weights."""
+    return RoundPolicy("sync", weighting="uniform")
+
+
+def fnb_policy() -> RoundPolicy:
+    """Fastest-(N-B) [Pan et al. 2017]: q_v = k on finishers, 0 on the B
+    dropped; uniform weights over the survivors."""
+    return RoundPolicy("fnb", weighting="uniform")
+
+
+def async_policy() -> RoundPolicy:
+    """Round-stale Hogwild: every participant's delta is applied additively
+    to the master copy; all deltas were computed at the round-start params
+    (staleness = one round).  The engine's synchronous-harness model of the
+    async baseline in core/baselines/async_sgd.py."""
+    return RoundPolicy("async", weighting="additive", combine_opt_state=False)
+
+
+def gc_policy(code) -> RoundPolicy:
+    """Gradient coding [Tandon et al. 2017] as an engine policy.
+
+    `code` is a core.baselines.gradient_coding.GradientCode.  Worker v's
+    microbatch stream must present its S+1 assigned blocks in
+    `worker_block_ids` order; step t is scaled by B[v, block_t] and the
+    accumulated coded gradient c_v gets ONE optimizer update.  The per-round
+    decode weights a_v (host lstsq over the received set) are passed to the
+    round as explicit lambdas; the affine combine then reproduces
+    x' = x0 - lr * sum_v a_v c_v exactly.
+    """
+    from repro.core.assignment import worker_block_ids
+
+    n, s = code.n_workers, code.s
+    scales = tuple(
+        tuple(float(code.B[v, j]) for j in worker_block_ids(v, n, s)) for v in range(n)
+    )
+    return RoundPolicy("gradient_coding", weighting="explicit", update="coded",
+                       combine_opt_state=False, s_redundancy=s, step_scales=scales)
+
+
+def generalized_policy(iterate_mode: str = "last") -> RoundPolicy:
+    """Paper Sec. V: keep stepping through the communication window, then
+    self-mix with the Eq.-13 lambda_vt."""
+    return RoundPolicy("generalized", weighting="anytime", iterate_mode=iterate_mode,
+                       generalized=True)
+
+
+POLICIES = {
+    "anytime": anytime_policy,
+    "sync": sync_policy,
+    "fnb": fnb_policy,
+    "async": async_policy,
+    "gradient_coding": gc_policy,
+    "generalized": generalized_policy,
+}
+
+
+# ---------------------------------------------------------------------------
+# Engine state
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EngineState:
+    """Device-resident training state.
+
+    arena     [N] f32 for synchronized policies (all workers share x0), or
+              [W, N] for the generalized policy (unsynchronized workers).
+    opt_arena [No] or [W, No] f32 (size 0 for stateless SGD).
+    rstep     scalar int32 round counter (drives LR schedules).
+    """
+
+    arena: jax.Array
+    opt_arena: jax.Array
+    rstep: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    EngineState, data_fields=["arena", "opt_arena", "rstep"], meta_fields=[]
+)
+
+
+def _mean_loss(lam_w: jax.Array, losses: jax.Array) -> jax.Array:
+    """lambda-weighted loss; normalized so 'additive' (sum lam = |chi|)
+    reports the participant mean.  For sum lam = 1 this is the legacy
+    sum(lam * loss) exactly."""
+    return jnp.sum(lam_w * losses) / jnp.maximum(jnp.sum(lam_w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+class RoundEngine:
+    """Drives rounds of any RoundPolicy over one loss/optimizer pair.
+
+    combine_impl  'einsum'           one fused XLA contraction (default;
+                                     runs everywhere)
+                  'kernel'           Pallas weighted_combine (TPU hot path)
+                  'kernel_interpret' Pallas in interpret mode (CPU tests)
+    """
+
+    def __init__(
+        self,
+        loss_fn: LossFn,
+        opt: Optimizer,
+        n_workers: int,
+        max_local_steps: int,
+        policy: RoundPolicy,
+        max_comm_steps: int = 0,
+        combine_impl: str = "einsum",
+    ):
+        if combine_impl not in ("einsum", "kernel", "kernel_interpret"):
+            raise ValueError(f"bad combine_impl {combine_impl!r}")
+        if policy.generalized and max_comm_steps < 1:
+            raise ValueError("generalized policy needs max_comm_steps >= 1")
+        self.loss_fn = loss_fn
+        self.opt = opt
+        self.n_workers = n_workers
+        self.max_local_steps = max_local_steps
+        self.policy = policy
+        self.max_comm_steps = max_comm_steps
+        self.combine_impl = combine_impl
+        self._scales = (
+            jnp.asarray(policy.step_scales, jnp.float32)
+            if policy.step_scales is not None
+            else None
+        )
+        self.pspec = None  # ArenaSpec, set by init_state
+        self.ospec = None
+        self._driver = None
+        # Observability for the single-compile / zero-host-sync contract:
+        # trace_count increments each time the driver body is TRACED;
+        # dispatch_count increments once per host->device run() dispatch.
+        self.trace_count = 0
+        self.dispatch_count = 0
+
+    # -- weights ------------------------------------------------------------
+    def _weights(self, q: jax.Array, lam_ext: Optional[jax.Array]) -> jax.Array:
+        w = self.policy.weighting
+        if w == "anytime":
+            return anytime_lambdas(q)
+        if w == "uniform":
+            return uniform_lambdas(q > 0)
+        if w == "additive":
+            return (q > 0).astype(jnp.float32)
+        if lam_ext is None:
+            raise ValueError(f"policy {self.policy.name!r} needs explicit lambdas")
+        return lam_ext.astype(jnp.float32)
+
+    # -- per-worker update --------------------------------------------------
+    def _coded_update(self, params, opt_state, mb, q_v, scales, step0):
+        """Gradient-coding worker: c_v = sum_t scale_t grad(x0; mb_t), one
+        optimizer update.  Masked steps contribute nothing; q_v = 0 workers
+        return x0 unchanged (zero gradient -> zero update)."""
+
+        def body(carry, xs):
+            g_acc, loss_acc = carry
+            mb_t, t, sc = xs
+            active = (t < q_v).astype(jnp.float32)
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, mb_t)
+            g_acc = jax.tree.map(
+                lambda a, g: a + (active * sc).astype(g.dtype) * g, g_acc, grads
+            )
+            return (g_acc, loss_acc + active * loss), None
+
+        n_steps = jax.tree.leaves(mb)[0].shape[0]
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (g, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)),
+            (mb, jnp.arange(n_steps), scales[:n_steps]),
+        )
+        updates, _ = self.opt.update(g, opt_state, params, step0)
+        iterate = jax.tree.map(lambda p, u: p + u, params, updates)
+        mean_loss = loss_sum / jnp.maximum(q_v.astype(jnp.float32), 1.0)
+        return iterate, opt_state, iterate, mean_loss
+
+    def _worker_update(self, params, opt_state, mb, q_v, scales, step0):
+        """(p_fin, s_fin, iterate, mean_loss) for ONE worker."""
+        if self.policy.update == "coded":
+            return self._coded_update(params, opt_state, mb, q_v, scales, step0)
+        return local_sgd(
+            self.loss_fn, self.opt, params, opt_state, mb, q_v, step0,
+            self.policy.iterate_mode,
+        )
+
+    def _vmap_workers(self, params, opt_state, batch, q, step0):
+        """Run every worker's update from shared (params, opt_state)."""
+        if self._scales is None:
+            fn = lambda mb, qv: self._worker_update(params, opt_state, mb, qv, None, step0)
+            return jax.vmap(fn)(batch, q)
+        fn = lambda mb, qv, sc: self._worker_update(params, opt_state, mb, qv, sc, step0)
+        return jax.vmap(fn)(batch, q, self._scales)
+
+    # -- tree-layout round (sharding-preserving, pjit path) -----------------
+    def tree_round(self) -> Callable:
+        """Single round over pytrees; legacy `anytime_round` signature.
+
+        Synchronized policies:
+            params', opt_state', metrics = round(params, opt_state, batch,
+                                                 q, step=0, lam=None)
+        Generalized policy:
+            wparams', wopt', metrics = round(wparams, wopt, batch,
+                                             comm_batch, q, q_bar, step=0)
+        """
+        if self.policy.generalized:
+            return self._tree_generalized_round
+
+        def round_fn(params, opt_state, batch, q, step=jnp.zeros((), jnp.int32), lam=None):
+            _, s_stack, x_stack, losses = self._vmap_workers(params, opt_state, batch, q, step)
+            lam_w = self._weights(q, lam)
+            if self.policy.affine:
+                x0_w = 1.0 - jnp.sum(lam_w)
+                weighted = combine_pytrees(x_stack, lam_w)
+                new_params = jax.tree.map(
+                    lambda xs, p0: xs + x0_w.astype(p0.dtype) * p0, weighted, params
+                )
+                new_opt = jax.tree.map(lambda s: s[0], s_stack)
+            else:
+                new_params = combine_pytrees(x_stack, lam_w)
+                if self.policy.combine_opt_state:
+                    new_opt = combine_pytrees(s_stack, lam_w)
+                else:
+                    new_opt = jax.tree.map(lambda s: s[0], s_stack)
+            metrics = {
+                "loss": _mean_loss(lam_w, losses),
+                "lambdas": lam_w,
+                "q_total": jnp.sum(q),
+                "worker_loss": losses,
+            }
+            return new_params, new_opt, metrics
+
+        return round_fn
+
+    def _tree_generalized_round(self, wparams, wopt, batch, comm_batch, q, q_bar,
+                                step=jnp.zeros((), jnp.int32)):
+        """Sec.-V round over worker-stacked pytrees (leaves [W, ...])."""
+        p1, s1, x1, losses = jax.vmap(
+            lambda p, s, mb, qv: self._worker_update(p, s, mb, qv, None, step)
+        )(wparams, wopt, batch, q)
+        lam = anytime_lambdas(q)
+        x_comb = combine_pytrees(x1, lam)
+        p2, s2, _, _ = jax.vmap(
+            lambda p, s, mb, qv: local_sgd(
+                self.loss_fn, self.opt, p, s, mb, qv,
+                step + self.max_local_steps, "last")
+        )(p1, s1, comm_batch, q_bar)
+        mix = generalized_mixing_lambda(jnp.sum(q), q_bar)
+
+        def _mix(xc, xb):
+            m = mix.reshape((-1,) + (1,) * (xb.ndim - 1)).astype(xb.dtype)
+            return m * xc[None] + (1.0 - m) * xb
+
+        new_wparams = jax.tree.map(_mix, x_comb, p2)
+        metrics = {
+            "loss": jnp.sum(lam * losses),
+            "lambdas": lam,
+            "mix": mix,
+            "q_total": jnp.sum(q),
+            "q_bar_total": jnp.sum(q_bar),
+        }
+        return new_wparams, s2, metrics
+
+    # -- arena-layout round (flat hot path) ---------------------------------
+    def _combine_arena(self, stack: jax.Array, wts: jax.Array) -> jax.Array:
+        """[R, N] x [R] -> [N] in ONE contraction (the whole-model combine)."""
+        if stack.shape[1] == 0:
+            return jnp.zeros((0,), jnp.float32)
+        if self.combine_impl == "einsum":
+            return jnp.einsum("wn,w->n", stack, wts)
+        from repro.kernels.weighted_combine import weighted_combine
+
+        return weighted_combine(
+            stack, wts, interpret=(self.combine_impl == "kernel_interpret")
+        )
+
+    def init_state(self, params: PyTree, opt_state: Optional[PyTree] = None) -> EngineState:
+        """Flatten (params, opt_state) into the arena; broadcasts to the
+        per-worker stack for the generalized policy."""
+        if opt_state is None:
+            opt_state = self.opt.init(params)
+        self.pspec = AR.arena_spec(params)
+        self.ospec = AR.arena_spec(opt_state)
+        vec = AR.to_arena(params, self.pspec)
+        ovec = AR.to_arena(opt_state, self.ospec)
+        if self.policy.generalized:
+            vec = AR.broadcast_arena(vec, self.n_workers)
+            ovec = AR.broadcast_arena(ovec, self.n_workers)
+        return EngineState(arena=vec, opt_arena=ovec, rstep=jnp.zeros((), jnp.int32))
+
+    def _arena_round(self, state: EngineState, batch, q, lam=None, comm_batch=None,
+                     q_bar=None) -> tuple[EngineState, dict]:
+        if self.policy.generalized:
+            return self._arena_generalized_round(state, batch, comm_batch, q, q_bar)
+        step0 = state.rstep * self.max_local_steps
+        params = AR.from_arena(state.arena, self.pspec)
+        opt_state = AR.from_arena(state.opt_arena, self.ospec)
+
+        def worker(mb, qv, sc):
+            _, s_fin, it, loss = self._worker_update(params, opt_state, mb, qv, sc, step0)
+            return AR.to_arena(it, self.pspec), AR.to_arena(s_fin, self.ospec), loss
+
+        if self._scales is None:
+            x_rows, s_rows, losses = jax.vmap(lambda mb, qv: worker(mb, qv, None))(batch, q)
+        else:
+            x_rows, s_rows, losses = jax.vmap(worker)(batch, q, self._scales)
+
+        lam_w = self._weights(q, lam)
+        if self.policy.affine:
+            stack = jnp.concatenate([state.arena[None], x_rows], axis=0)
+            wts = jnp.concatenate([(1.0 - jnp.sum(lam_w))[None], lam_w])
+        else:
+            stack, wts = x_rows, lam_w
+        new_arena = self._combine_arena(stack, wts)
+        if self.policy.combine_opt_state and not self.policy.affine:
+            new_opt = self._combine_arena(s_rows, lam_w)
+        else:
+            new_opt = s_rows[0]
+        metrics = {
+            "loss": _mean_loss(lam_w, losses),
+            "lambdas": lam_w,
+            "q_total": jnp.sum(q),
+        }
+        return EngineState(new_arena, new_opt, state.rstep + 1), metrics
+
+    def _arena_generalized_round(self, state, batch, comm_batch, q, q_bar):
+        step0 = state.rstep * (self.max_local_steps + self.max_comm_steps)
+
+        def phase1(row, orow, mb, qv):
+            p = AR.from_arena(row, self.pspec)
+            s = AR.from_arena(orow, self.ospec)
+            p1, s1, it, loss = self._worker_update(p, s, mb, qv, None, step0)
+            return (AR.to_arena(p1, self.pspec), AR.to_arena(s1, self.ospec),
+                    AR.to_arena(it, self.pspec), loss)
+
+        p1_rows, s1_rows, x1_rows, losses = jax.vmap(phase1)(
+            state.arena, state.opt_arena, batch, q)
+        lam = anytime_lambdas(q)
+        x_comb = self._combine_arena(x1_rows, lam)
+
+        def phase2(row, orow, mb, qv):
+            p = AR.from_arena(row, self.pspec)
+            s = AR.from_arena(orow, self.ospec)
+            p2, s2, _, _ = local_sgd(self.loss_fn, self.opt, p, s, mb, qv,
+                                     step0 + self.max_local_steps, "last")
+            return AR.to_arena(p2, self.pspec), AR.to_arena(s2, self.ospec)
+
+        p2_rows, s2_rows = jax.vmap(phase2)(p1_rows, s1_rows, comm_batch, q_bar)
+        mix = generalized_mixing_lambda(jnp.sum(q), q_bar)[:, None]
+        new_rows = mix * x_comb[None] + (1.0 - mix) * p2_rows
+        metrics = {
+            "loss": jnp.sum(lam * losses),
+            "lambdas": lam,
+            "mix": mix[:, 0],
+            "q_total": jnp.sum(q),
+            "q_bar_total": jnp.sum(q_bar),
+        }
+        return EngineState(new_rows, s2_rows, state.rstep + 1), metrics
+
+    def round(self, state: EngineState, batch, q, lam=None, comm_batch=None,
+              q_bar=None) -> tuple[EngineState, dict]:
+        """One arena round (un-jitted building block; prefer `run`)."""
+        return self._arena_round(state, batch, q, lam, comm_batch, q_bar)
+
+    # -- multi-round driver: K rounds, ONE jit, zero host round-trips -------
+    def _make_driver(self):
+        def driver(state, batches, qs, lams, comm_batches, qbars,
+                   batch_per_round, keep_history):
+            self.trace_count += 1  # python side effect: runs once per TRACE
+
+            def body(st, xs):
+                batch = xs["batch"] if batch_per_round else batches
+                new_st, metrics = self._arena_round(
+                    st, batch, xs["q"], xs.get("lam"), xs.get("comm"), xs.get("q_bar")
+                )
+                if keep_history:
+                    metrics = dict(metrics, arena=new_st.arena)
+                return new_st, metrics
+
+            xs = {"q": qs}
+            if batch_per_round:
+                xs["batch"] = batches
+            if lams is not None:
+                xs["lam"] = lams
+            if comm_batches is not None:
+                xs["comm"] = comm_batches
+            if qbars is not None:
+                xs["q_bar"] = qbars
+            return jax.lax.scan(body, state, xs)
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(driver, static_argnames=("batch_per_round", "keep_history"),
+                       donate_argnums=donate)
+
+    def run(self, state: EngineState, batches, qs, lams=None, comm_batches=None,
+            qbars=None, batch_per_round: bool = True, keep_history: bool = False):
+        """Execute qs.shape[0] rounds inside one jit dispatch.
+
+        batches: leaves [K, W, q_max, ...] (or [W, q_max, ...] with
+                 batch_per_round=False for a static per-round batch, e.g.
+                 gradient coding's fixed blocks).
+        qs:      int [K, W] pre-sampled step counts (StragglerModel
+                 .realize_steps_matrix) — no host sync between rounds.
+        lams:    [K, W] explicit weights (policies with weighting='explicit').
+        Returns (state', metrics) with metrics leaves stacked [K, ...]
+        (+ per-round arena history when keep_history=True).
+        """
+        if self._driver is None:
+            self._driver = self._make_driver()
+        self.dispatch_count += 1
+        return self._driver(state, batches, jnp.asarray(qs, jnp.int32), lams,
+                            comm_batches, qbars, batch_per_round, keep_history)
+
+    # -- exits ---------------------------------------------------------------
+    def finalize(self, state: EngineState, q: Optional[jax.Array] = None):
+        """Arena -> (params, opt_state).  For the generalized policy the
+        worker stack is lambda-combined (pass the last round's q, else
+        uniform)."""
+        vec, ovec = state.arena, state.opt_arena
+        if self.policy.generalized:
+            if q is not None:
+                lam = anytime_lambdas(jnp.asarray(q))
+            else:
+                lam = jnp.full((self.n_workers,), 1.0 / self.n_workers, jnp.float32)
+            vec = self._combine_arena(vec, lam)
+            ovec = self._combine_arena(ovec, lam)
+        return AR.from_arena(vec, self.pspec), AR.from_arena(ovec, self.ospec)
+
+    def params_of(self, state: EngineState, q: Optional[jax.Array] = None) -> PyTree:
+        return self.finalize(state, q)[0]
+
+    # -- shard_map backend (explicit-collective production form) -------------
+    def shardmap_round(self, mesh, param_specs) -> Callable:
+        """The explicit psum form of the combine: each program instance IS
+        one worker; the master combine is a weighted all-reduce over the
+        worker mesh axes.  Supports the q-weighted policies (anytime /
+        uniform); coded, additive and generalized rounds have no
+        all-reduce-only form."""
+        from jax.sharding import PartitionSpec as P
+
+        if self.policy.weighting not in ("anytime", "uniform") or \
+                self.policy.update != "sgd" or self.policy.generalized:
+            raise NotImplementedError(
+                f"shard_map backend does not support policy {self.policy.name!r}"
+            )
+        waxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        anytime = self.policy.weighting == "anytime"
+
+        def body(params, opt_state, batch, q, step):
+            my_batch = jax.tree.map(lambda x: x[0], batch)
+            my_q = q[0]
+            _, s_fin, iterate, loss = local_sgd(
+                self.loss_fn, self.opt, params, opt_state, my_batch, my_q, step,
+                self.policy.iterate_mode,
+            )
+            w_v = my_q if anytime else (my_q > 0).astype(jnp.int32)
+            new_params = combine_mean_axis(iterate, w_v, waxes)
+            if self.policy.combine_opt_state:
+                new_opt = combine_mean_axis(s_fin, w_v, waxes)
+            else:
+                new_opt = s_fin
+            q_total = jax.lax.psum(my_q.astype(jnp.float32), waxes)
+            mean_loss = jax.lax.psum(loss * my_q.astype(jnp.float32), waxes) / \
+                jnp.maximum(q_total, 1.0)
+            return new_params, new_opt, {"loss": mean_loss, "q_total": q_total}
+
+        batch_spec = P(waxes)
+
+        def round_fn(params, opt_state, batch, q, step=jnp.zeros((), jnp.int32)):
+            opt_specs = jax.tree.map(lambda _: P(), opt_state)
+            wrapped = _shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(param_specs, opt_specs, batch_spec, P(waxes), P()),
+                out_specs=(param_specs, opt_specs, P()),
+            )
+            return wrapped(params, opt_state, batch, q, step)
+
+        return round_fn

@@ -107,6 +107,29 @@ class StragglerModel:
             q = np.minimum(q, max_steps)
         return q
 
+    def realize_steps_matrix(
+        self,
+        rng: np.random.Generator,
+        n_rounds: int,
+        n_workers: int,
+        budget_t: float,
+        max_steps: Optional[int] = None,
+        worker_speed: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Pre-sample q for a whole multi-round window: int64 [K, W].
+
+        The RoundEngine driver consumes this so K rounds run inside one jit
+        with NO host sync between rounds (every round's q is already on
+        device).  Row k is exactly what realize_steps would have drawn on
+        the k-th call against the same generator.
+        """
+        return np.stack(
+            [
+                self.realize_steps(rng, n_workers, budget_t, max_steps, worker_speed)
+                for _ in range(n_rounds)
+            ]
+        )
+
     # ---- Baselines: fixed work k steps -> variable finishing time ----
     def finishing_times(
         self,

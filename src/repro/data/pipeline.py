@@ -53,6 +53,15 @@ class AnytimeBatcher:
                 out[k].append(arr[idx])
         return {k: np.stack(vs) for k, vs in out.items()}
 
+    def rounds_batch(self, n_rounds: int) -> dict[str, np.ndarray]:
+        """A whole driver window of microbatches: leaves [K, W, q_max, b, ...].
+
+        Pre-gathering K rounds lets the RoundEngine driver run them inside
+        one jit with zero host round-trips between rounds.
+        """
+        rounds = [self.round_batch() for _ in range(n_rounds)]
+        return {k: np.stack([r[k] for r in rounds]) for k in rounds[0]}
+
 
 class TokenBatcher:
     """AnytimeBatcher over an LM token corpus [n_seqs, seq_len]."""
@@ -76,3 +85,6 @@ class TokenBatcher:
 
     def round_batch(self) -> dict[str, np.ndarray]:
         return self.inner.round_batch()
+
+    def rounds_batch(self, n_rounds: int) -> dict[str, np.ndarray]:
+        return self.inner.rounds_batch(n_rounds)

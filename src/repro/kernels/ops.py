@@ -60,6 +60,22 @@ def weighted_combine(stacked: jax.Array, lam: jax.Array, interpret: bool = False
     return _combine_pallas(stacked, lam, interpret=interpret)
 
 
+def arena_combine(worker_params: PyTree, lam: jax.Array, interpret: bool = False) -> PyTree:
+    """Whole-model combine in ONE kernel call via the flat arena.
+
+    Stacks the worker pytree (leaves [W, ...]) into a single [W, N] f32
+    arena matrix (core/arena.py), runs `weighted_combine` once over the
+    full model, and unflattens — the RoundEngine hot path, as opposed to
+    `combine_pytree`'s one-kernel-per-leaf dispatch.
+    """
+    from repro.core import arena as AR
+
+    stacked_spec = AR.arena_spec(jax.tree.map(lambda l: l[0], worker_params))
+    mat = AR.stack_to_arena(worker_params, stacked_spec)
+    out = _combine_pallas(mat, lam, interpret=interpret)
+    return AR.from_arena(out, stacked_spec)
+
+
 def combine_pytree(worker_params: PyTree, lam: jax.Array, interpret: bool = False) -> PyTree:
     """Kernel-backed version of core.combine.combine_pytrees.
 

@@ -23,20 +23,29 @@ BLOCK_N = 4096
 
 
 def _combine_kernel(lam_ref, x_ref, o_ref):
-    # x_ref: [W, BN] tile; lam_ref: [W, 1]; o_ref: [BN]
+    # x_ref: [W, BN] tile (any float dtype); lam_ref: [W, 1] f32; o_ref: [BN].
+    # The multiply-accumulate always runs in f32 regardless of the input
+    # dtype — a bf16 arena stack loses no precision in the reduction.
     x = x_ref[...].astype(jnp.float32)
     lam = lam_ref[...].astype(jnp.float32)  # [W, 1]
-    o_ref[...] = jnp.sum(x * lam, axis=0)
+    o_ref[...] = jnp.sum(x * lam, axis=0).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret", "out_dtype"))
 def weighted_combine(
-    stacked: jax.Array,  # [W, N] flat parameter stack
+    stacked: jax.Array,  # [W, N] flat parameter stack (f32/bf16/f16)
     lam: jax.Array,  # [W]
     block_n: int = BLOCK_N,
     interpret: bool = False,
+    out_dtype=jnp.float32,
 ) -> jax.Array:
-    """sum_v lam_v x_v with VMEM tiling. Returns [N] float32."""
+    """sum_v lam_v x_v with VMEM tiling; f32 accumulate, [N] out_dtype.
+
+    N need not divide block_n: the trailing partial tile is zero-padded
+    (zeros contribute nothing to the sum) and sliced off on return.  The
+    RoundEngine feeds this the whole-model [W, N] arena stack, so one call
+    combines every parameter of the model.
+    """
     w, n = stacked.shape
     pad = (-n) % block_n
     if pad:
@@ -51,7 +60,7 @@ def weighted_combine(
             pl.BlockSpec((w, block_n), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
         interpret=interpret,
-    )(lam.reshape(w, 1), stacked)
+    )(lam.reshape(w, 1).astype(jnp.float32), stacked)
     return out[:n]

@@ -50,7 +50,7 @@ def _named(mesh, tree):
 
 def lower_one(arch: str, shape_name: str, multi_pod: bool, q_max: int = 4,
               mesh_shape=None, kv_quant: bool = False, remat: str = None,
-              generalized: bool = False):
+              generalized: bool = False, layout: str = "auto"):
     """Lower + compile one (arch, shape, mesh). Returns result dict.
 
     mesh_shape: optional (data, model) override — the §Perf resharding
@@ -114,7 +114,10 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool, q_max: int = 4,
                 lowered = jitted.lower(wp_specs, (), batch_specs, comm_specs,
                                        q_spec, q_spec, r_spec)
             else:
-                step = make_train_step(cfg, plan)
+                # engine-backed round; 'tree' layout under model parallelism
+                # keeps leaves sharded, 'arena' lowers the single-contraction
+                # combine (DESIGN.md §5)
+                step = make_train_step(cfg, plan, layout=layout)
                 jitted = jax.jit(
                     step,
                     in_shardings=(p_shard, None, b_shard, q_shard, r_shard),
@@ -202,6 +205,8 @@ def main():
     ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
     ap.add_argument("--generalized", action="store_true",
                     help="lower the Sec.-V generalized round instead of vanilla")
+    ap.add_argument("--layout", default="auto", choices=["auto", "tree", "arena"],
+                    help="RoundEngine state layout for the train round")
     ap.add_argument("--tag", default="", help="suffix for variant result files")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -231,7 +236,8 @@ def main():
                     ms = tuple(int(x) for x in args.mesh_shape.split("x")) if args.mesh_shape else None
                     res = lower_one(arch, shape, mp, q_max=args.q_max,
                                     mesh_shape=ms, kv_quant=args.kv_quant,
-                                    remat=args.remat, generalized=args.generalized)
+                                    remat=args.remat, generalized=args.generalized,
+                                    layout=args.layout)
                 except Exception as e:
                     res = {"status": "fail", "error": f"{type(e).__name__}: {e}",
                            "trace": traceback.format_exc()[-2000:]}

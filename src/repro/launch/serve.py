@@ -59,7 +59,10 @@ def main(argv=None):
     step_fn = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
     t0 = time.time()
     if cfg.family == "encdec" and prefix is not None:
-        logits, cache = M.prefill(params, cfg, prompts, cache, prefix)
+        # jitted like the flash path below — the enc-dec prefill was the one
+        # un-jitted forward left in the server
+        prefill_fn = jax.jit(lambda p, tk, c, pe: M.prefill(p, cfg, tk, c, pe))
+        logits, cache = prefill_fn(params, prompts, cache, prefix)
     elif cfg.family in ("ssm", "hybrid"):
         # recurrent state is inherently serial
         for t in range(args.prompt_len):
@@ -67,6 +70,7 @@ def main(argv=None):
     else:
         # production path: one flash-parallel forward fills the whole cache
         logits, cache = jax.jit(lambda p, tk, c: M.prefill_bulk(p, cfg, tk, c))(params, prompts, cache)
+    jax.block_until_ready(logits)  # async dispatch: wait before timing
     t_prefill = time.time() - t0
 
     out = []
@@ -82,11 +86,15 @@ def main(argv=None):
             tok = jax.random.categorical(sub, logits[..., : cfg.vocab] / args.temperature, axis=-1)[:, None].astype(jnp.int32)
         else:
             tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
     t_gen = time.time() - t0
     gen = np.stack(out, axis=1)
-    print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok in {t_prefill:.2f}s, "
+    prefill_tps = args.batch * args.prompt_len / max(t_prefill, 1e-9)
+    decode_tps = args.batch * args.gen / max(t_gen, 1e-9)
+    print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok/seq x{args.batch} "
+          f"in {t_prefill:.2f}s ({prefill_tps:.1f} tok/s), "
           f"generated {args.gen} tok/seq x{args.batch} in {t_gen:.2f}s "
-          f"({args.batch*args.gen/max(t_gen,1e-9):.1f} tok/s)")
+          f"({decode_tps:.1f} tok/s)")
     print("[serve] sample:", gen[0].tolist())
     return gen
 

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig, input_specs
-from repro.core.anytime import AnytimeConfig, anytime_round
+from repro.core.engine import EngineState, RoundEngine, RoundPolicy, generalized_policy
 from repro.models import model as M
 from repro.models.kvcache import cache_specs
 from repro.optim.optimizers import Optimizer, sgd
@@ -50,27 +50,47 @@ def make_train_step(
     opt: Optional[Optimizer] = None,
     weighting: str = "anytime",
     iterate_mode: str = "last",
+    layout: str = "auto",
 ) -> Callable:
-    """One Anytime round. Signature:
+    """One Anytime round through the RoundEngine. Signature:
 
         params', opt_state', metrics = step(params, opt_state, batch, q, rstep)
 
     batch leaves [W, q_max, b, ...]; q int32[W]; rstep scalar round index.
     The paper's local optimizer is plain SGD (no state) — the default.
+
+    layout (DESIGN.md §5): 'tree' keeps the per-leaf combine, preserving
+    model-parallel shardings (required when cfg.model_parallel > 1 — the
+    flat arena would force an all-gather over the 'model' axes); 'arena'
+    round-trips through the contiguous arena so the combine is one
+    whole-model contraction (pure worker-parallel hot path).  'auto' picks
+    by cfg.model_parallel.
     """
     opt = opt or sgd(3e-4)
-    acfg = AnytimeConfig(
-        n_workers=plan.n_workers,
-        max_local_steps=plan.q_max,
-        weighting=weighting,
-        iterate_mode=iterate_mode,
+    policy = RoundPolicy(
+        name=f"train_{weighting}", weighting=weighting, iterate_mode=iterate_mode
     )
     loss = lambda p, mb: M.loss_fn(p, cfg, mb)
-    rnd = anytime_round(loss, opt, acfg)
+    engine = RoundEngine(loss, opt, plan.n_workers, plan.q_max, policy)
+    if layout == "auto":
+        layout = "tree" if cfg.model_parallel > 1 else "arena"
+    if layout == "tree":
+        rnd = engine.tree_round()
 
-    def step(params, opt_state, batch, q, rstep):
-        return rnd(params, opt_state, batch, q, rstep * plan.q_max)
+        def step(params, opt_state, batch, q, rstep):
+            return rnd(params, opt_state, batch, q, rstep * plan.q_max)
 
+    elif layout == "arena":
+
+        def step(params, opt_state, batch, q, rstep):
+            st = engine.init_state(params, opt_state)
+            st = EngineState(st.arena, st.opt_arena, rstep)
+            st, metrics = engine.round(st, batch, q)
+            new_params, new_opt = engine.finalize(st)
+            return new_params, new_opt, metrics
+
+    else:
+        raise ValueError(f"bad layout {layout!r}")
     return step
 
 
@@ -86,14 +106,16 @@ def make_generalized_step(
         wparams', wopt', metrics = step(wparams, wopt, batch, comm_batch, q, q_bar, rstep)
     wparams leaves carry the worker axis [W, ...] (sharded over pod/data —
     workers are no longer synchronized at round start, paper Sec. V).
+    Runs through the RoundEngine's generalized tree round (the worker-
+    stacked leaves stay sharded; core/generalized.py remains the oracle).
     """
-    from repro.core.generalized import generalized_round
-
     opt = opt or sgd(3e-4)
     qc = max(int(plan.q_max * comm_frac), 1)
-    acfg = AnytimeConfig(n_workers=plan.n_workers, max_local_steps=plan.q_max)
     loss = lambda p, mb: M.loss_fn(p, cfg, mb)
-    rnd = generalized_round(loss, opt, acfg, qc)
+    engine = RoundEngine(
+        loss, opt, plan.n_workers, plan.q_max, generalized_policy(), max_comm_steps=qc
+    )
+    rnd = engine.tree_round()
 
     def step(wparams, wopt, batch, comm_batch, q, q_bar, rstep):
         return rnd(wparams, wopt, batch, comm_batch, q, q_bar, rstep * (plan.q_max + qc))

@@ -1,4 +1,4 @@
-"""End-to-end Anytime-Gradients LM trainer.
+"""End-to-end Anytime-Gradients LM trainer, on the RoundEngine driver.
 
 Runs on whatever devices exist: the CPU smoke path uses the reduced config
 on a degenerate mesh; on a real fleet the same code takes the production
@@ -6,13 +6,18 @@ mesh and the measured per-worker step counts.  The straggler model supplies
 q_v per round (simulated here; measured in deployment — the algorithm is
 identical, DESIGN.md §3).
 
+Rounds are driven in windows of --rounds-per-jit through
+`RoundEngine.run`: the q-matrix for the whole window is pre-sampled
+(StragglerModel.realize_steps_matrix) and the window executes as ONE jit
+dispatch — a lax.scan over rounds with donated arena buffers, zero host
+round-trips between rounds (DESIGN.md §5).
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --rounds 40 --workers 8 --s 1 --persistent-frac 0.125
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -21,10 +26,10 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
+from repro.core.engine import RoundEngine, RoundPolicy
 from repro.core.straggler import StragglerModel
 from repro.data.pipeline import TokenBatcher
 from repro.data.synthetic import synthetic_tokens
-from repro.launch.steps import TrainPlan, make_train_step
 from repro.models import model as M
 from repro.optim import adam, clip_by_global_norm, chain, linear_warmup_cosine, sgd
 
@@ -34,6 +39,8 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true", help="CPU-scale variant")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--rounds-per-jit", type=int, default=8,
+                    help="driver window: rounds executed per jit dispatch")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--q-max", type=int, default=4)
     ap.add_argument("--s", type=int, default=1, help="data replication S")
@@ -77,42 +84,65 @@ def main(argv=None):
     smodel = StragglerModel(kind=args.straggler, persistent_frac=args.persistent_frac)
     speeds = smodel.worker_speed(rng, args.workers)
 
-    plan = TrainPlan(args.workers, args.q_max, args.local_batch)
-    step = jax.jit(make_train_step(cfg, plan, opt, weighting=args.weighting))
+    policy = RoundPolicy(name=f"train_{args.weighting}", weighting=args.weighting,
+                         s_redundancy=args.s)
+    loss_fn = lambda p, mb: M.loss_fn(p, cfg, mb)
+    engine = RoundEngine(loss_fn, opt, args.workers, args.q_max, policy)
+    state = engine.init_state(params, opt_state)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
-    wall = 0.0
-    metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
-    for r in range(args.rounds):
-        q = smodel.realize_steps(rng, args.workers, args.budget_t, args.q_max, speeds)
-        batch = {k: jnp.asarray(v) for k, v in batcher.round_batch().items()}
-        t0 = time.time()
-        params, opt_state, metrics = step(params, opt_state, batch, jnp.asarray(q, jnp.int32), jnp.int32(r))
-        loss = float(metrics["loss"])
-        wall += time.time() - t0
-        if metrics_f:
-            import json as _json
+    def save_ckpt(step_no: int):
+        p, o = engine.finalize(state)
+        ckpt.save(step_no, {"params": p, "opt_state": o})
 
-            lam = np.asarray(metrics["lambdas"], np.float64)
-            ent = float(-(lam[lam > 0] * np.log(lam[lam > 0])).sum())
-            metrics_f.write(_json.dumps({
-                "round": r, "loss": loss, "q": q.tolist(),
-                "q_total": int(metrics["q_total"]),
-                "lambda_entropy": ent, "wall_s": wall,
-            }) + "\n")
-            metrics_f.flush()
-        if r % args.log_every == 0:
-            print(
-                f"round {r:4d} loss {loss:.4f} Q={int(metrics['q_total'])} "
-                f"q={q.tolist()} ({wall:.1f}s)"
-            )
-        if ckpt and (r + 1) % 10 == 0:
-            ckpt.save(r + 1, {"params": params, "opt_state": opt_state})
-    if ckpt:
-        ckpt.save(args.rounds, {"params": params, "opt_state": opt_state})
+    wall = 0.0
+    loss = float("nan")
+    metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
+    window = max(1, args.rounds_per_jit)
+    r = 0
+    last_ckpt = -1
+    while r < args.rounds:
+        kc = min(window, args.rounds - r)
+        q_mat = smodel.realize_steps_matrix(rng, kc, args.workers, args.budget_t,
+                                            args.q_max, speeds)
+        batches = {k: jnp.asarray(v) for k, v in batcher.rounds_batch(kc).items()}
+        t0 = time.time()
+        state, outs = engine.run(state, batches, q_mat)
+        losses = np.asarray(outs["loss"])
+        lambdas = np.asarray(outs["lambdas"], np.float64)
+        q_totals = np.asarray(outs["q_total"])
+        wall += time.time() - t0
+        loss = float(losses[-1])
+        for i in range(kc):
+            rr = r + i
+            if metrics_f:
+                import json as _json
+
+                lam = lambdas[i]
+                ent = float(-(lam[lam > 0] * np.log(lam[lam > 0])).sum())
+                metrics_f.write(_json.dumps({
+                    "round": rr, "loss": float(losses[i]), "q": q_mat[i].tolist(),
+                    "q_total": int(q_totals[i]),
+                    "lambda_entropy": ent, "wall_s": wall,
+                }) + "\n")
+                metrics_f.flush()
+            if rr % args.log_every == 0:
+                print(
+                    f"round {rr:4d} loss {losses[i]:.4f} Q={int(q_totals[i])} "
+                    f"q={q_mat[i].tolist()} ({wall:.1f}s)"
+                )
+        r += kc
+        # checkpoint cadence ~10 rounds; the label always matches the state
+        # (saved AT round r, not back-dated to the crossed multiple)
+        if ckpt and r // 10 > (r - kc) // 10:
+            save_ckpt(r)
+            last_ckpt = r
+    if ckpt and last_ckpt != args.rounds:
+        save_ckpt(args.rounds)
     if metrics_f:
         metrics_f.close()
-    print(f"[train] done: final loss {loss:.4f} wall {wall:.1f}s")
+    print(f"[train] done: final loss {loss:.4f} wall {wall:.1f}s "
+          f"(jit dispatches: {engine.dispatch_count}, traces: {engine.trace_count})")
     return loss
 
 

@@ -667,7 +667,7 @@ def prefill(
     if cfg.family == "encdec" and prefix_embeddings is not None:
         memory = _encode(params, cfg, _project_prefix(params, cfg, prefix_embeddings))
 
-        def fill(lp, _):
+        def fill(_, lp):  # scan calls (carry, xs); the per-layer params are xs
             mk, mv = attn_mod.cross_kv(lp["cross"], cfg, memory)
             return (), (mk, mv)
 

@@ -1,0 +1,291 @@
+"""RoundEngine: every scheme through one driver, validated against the
+legacy reference oracles (anytime_round / baselines / generalized_round),
+plus the single-compile / zero-host-sync driver contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnytimeConfig, anytime_round, stack_from_arena
+from repro.core.anytime import local_sgd
+from repro.core.assignment import block_slices, worker_block_ids
+from repro.core.baselines import fnb_round, gc_round, make_cyclic_code, sync_round
+from repro.core.baselines.gradient_coding import gc_decode_weights
+from repro.core.engine import (
+    RoundEngine,
+    RoundPolicy,
+    anytime_policy,
+    async_policy,
+    fnb_policy,
+    gc_policy,
+    generalized_policy,
+    sync_policy,
+)
+from repro.core.generalized import broadcast_to_workers, generalized_round
+from repro.data.linreg import make_linreg
+from repro.optim import adam, sgd
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+def _batch(data, rng, w, q, b):
+    idx = rng.integers(0, data.m, size=(w, q, b))
+    return (jnp.asarray(data.A[idx], jnp.float32), jnp.asarray(data.y[idx], jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(800, 12, seed=5)
+
+
+W, QMAX, B = 6, 4, 8
+
+
+def _params(rng, d=12):
+    return {"x": jnp.asarray(rng.standard_normal(d), jnp.float32)}
+
+
+# ---------------------------------------------------------------- anytime --
+@pytest.mark.parametrize("weighting", ["anytime", "uniform"])
+@pytest.mark.parametrize("iterate_mode", ["last", "average"])
+def test_anytime_tree_matches_legacy_bitwise(lin, rng, weighting, iterate_mode):
+    """The engine's tree layout runs the identical vmap/combine graph as
+    the legacy round — outputs must match exactly."""
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    q = jnp.asarray([4, 3, 0, 1, 4, 2], jnp.int32)
+    cfg = AnytimeConfig(n_workers=W, max_local_steps=QMAX, weighting=weighting,
+                        iterate_mode=iterate_mode)
+    ref_p, _, ref_m = anytime_round(_loss, sgd(0.01), cfg)(params, (), batch, q)
+    policy = RoundPolicy(name="t", weighting=weighting, iterate_mode=iterate_mode)
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, policy)
+    p, _, m = eng.tree_round()(params, (), batch, q)
+    np.testing.assert_array_equal(np.asarray(p["x"]), np.asarray(ref_p["x"]))
+    np.testing.assert_array_equal(np.asarray(m["loss"]), np.asarray(ref_m["loss"]))
+    np.testing.assert_array_equal(np.asarray(m["lambdas"]), np.asarray(ref_m["lambdas"]))
+
+
+def test_anytime_arena_matches_legacy_float_tol(lin, rng):
+    """Arena layout (flat f32 combine) vs legacy per-leaf combine."""
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    q = jnp.asarray([4, 3, 0, 1, 4, 2], jnp.int32)
+    cfg = AnytimeConfig(n_workers=W, max_local_steps=QMAX)
+    ref_p, _, ref_m = anytime_round(_loss, sgd(0.01), cfg)(params, (), batch, q)
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    st, m = eng.round(eng.init_state(params, ()), batch, q)
+    p, _ = eng.finalize(st)
+    np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(ref_p["x"]),
+                               rtol=1e-6, atol=1e-6)
+    assert abs(float(m["loss"]) - float(ref_m["loss"])) < 1e-6
+
+
+def test_anytime_arena_kernel_combine_matches(lin, rng):
+    """combine_impl='kernel_interpret' routes the combine through the
+    Pallas weighted_combine kernel body."""
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    q = jnp.asarray([2, 1, 4, 0, 3, 4], jnp.int32)
+    eng_e = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    eng_k = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                        combine_impl="kernel_interpret")
+    st_e, _ = eng_e.round(eng_e.init_state(params, ()), batch, q)
+    st_k, _ = eng_k.round(eng_k.init_state(params, ()), batch, q)
+    np.testing.assert_allclose(np.asarray(st_e.arena), np.asarray(st_k.arena),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_arena_with_adam_state(lin, rng):
+    """Stateful optimizer: moments live in the opt arena and are
+    lambda-combined; trajectories must stay finite and descend."""
+    params = _params(rng)
+    eng = RoundEngine(_loss, adam(1e-2), W, QMAX, anytime_policy())
+    st = eng.init_state(params)
+    r = np.random.default_rng(0)
+    losses = []
+    for _ in range(6):
+        q = jnp.asarray(r.integers(0, QMAX + 1, W), jnp.int32)
+        st, m = eng.round(st, _batch(lin, r, W, QMAX, B), q)
+        losses.append(float(m["loss"]))
+    p, o = eng.finalize(st)
+    assert np.all(np.isfinite(np.asarray(p["x"])))
+    assert o["count"].dtype == jnp.int32
+    assert losses[-1] < losses[0]
+
+
+# ------------------------------------------------------------- sync / fnb --
+def test_sync_policy_matches_legacy(lin, rng):
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    ref_p, _, ref_m = sync_round(_loss, sgd(0.01), W, QMAX)(params, (), batch)
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, sync_policy())
+    q = jnp.full((W,), QMAX, jnp.int32)
+    p, _, m = eng.tree_round()(params, (), batch, q)
+    np.testing.assert_array_equal(np.asarray(p["x"]), np.asarray(ref_p["x"]))
+    np.testing.assert_allclose(np.asarray(m["lambdas"]), 1.0 / W, atol=1e-6)
+
+
+def test_fnb_policy_matches_legacy(lin, rng):
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    mask = jnp.asarray([True, True, False, True, False, True])
+    ref_p, _, ref_m = fnb_round(_loss, sgd(0.01), W, QMAX)(params, (), batch, mask)
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, fnb_policy())
+    q = jnp.where(mask, QMAX, 0).astype(jnp.int32)
+    p, _, m = eng.tree_round()(params, (), batch, q)
+    np.testing.assert_array_equal(np.asarray(p["x"]), np.asarray(ref_p["x"]))
+    np.testing.assert_array_equal(np.asarray(m["lambdas"]), np.asarray(ref_m["lambdas"]))
+
+
+# ------------------------------------------------------------------ async --
+def test_async_policy_additive_deltas(lin, rng):
+    """x' = x0 + sum_v (x_v - x0) over participants (round-stale Hogwild)."""
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    q = jnp.asarray([3, 2, 0, 1, 3, 2], jnp.int32)
+    eng = RoundEngine(_loss, sgd(0.001), W, QMAX, async_policy())
+    p, _, m = eng.tree_round()(params, (), batch, q)
+    exp = np.asarray(params["x"], np.float64).copy()
+    for v in range(W):
+        if int(q[v]) == 0:
+            continue
+        _, _, it, _ = local_sgd(_loss, sgd(0.001), params, (),
+                                jax.tree.map(lambda t: t[v], batch),
+                                q[v], jnp.int32(0))
+        exp += np.asarray(it["x"], np.float64) - np.asarray(params["x"], np.float64)
+    np.testing.assert_allclose(np.asarray(p["x"], np.float64), exp, rtol=1e-5, atol=1e-6)
+    # arena path agrees
+    st, _ = eng.round(eng.init_state(params, ()), batch, q)
+    np.testing.assert_allclose(np.asarray(eng.finalize(st)[0]["x"], np.float64), exp,
+                               rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------- gradient coding --
+def test_gc_policy_matches_legacy_oracle(rng):
+    """Engine coded round == host-side gc_round (exact coded GD step).
+    N | m so engine block streams and oracle blocks are identical."""
+    lin = make_linreg(780, 12, seed=5)
+    s = 1
+    code = make_cyclic_code(W, s, seed=0)
+    sls = block_slices(lin.m, W)
+
+    def block_grad(p, j):
+        a, yy = lin.A[sls[j]], lin.y[sls[j]]
+        x = np.asarray(p["x"], np.float64)
+        return {"x": jnp.asarray(2.0 * a.T @ (a @ x - yy) / len(yy), jnp.float32)}
+
+    params = _params(rng)
+    received = np.array([True, True, False, True, True, True])
+    lr = 0.01
+    ref_p, _ = gc_round(block_grad, code, lr)(params, received)
+
+    blk = lin.m // W
+    bA = np.zeros((W, s + 1, blk, lin.d), np.float32)
+    bY = np.zeros((W, s + 1, blk), np.float32)
+    for v in range(W):
+        for t, j in enumerate(worker_block_ids(v, W, s)):
+            bA[v, t] = lin.A[sls[j]][:blk]
+            bY[v, t] = lin.y[sls[j]][:blk]
+    eng = RoundEngine(_loss, sgd(lr), W, s + 1, gc_policy(code))
+    a_dec = jnp.asarray(gc_decode_weights(code, received), jnp.float32)
+    q = jnp.where(jnp.asarray(received), s + 1, 0).astype(jnp.int32)
+    p, _, _ = eng.tree_round()(params, (), (jnp.asarray(bA), jnp.asarray(bY)), q, lam=a_dec)
+    np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(ref_p["x"]),
+                               rtol=1e-4, atol=1e-5)
+    st, _ = eng.round(eng.init_state(params, ()), (jnp.asarray(bA), jnp.asarray(bY)),
+                      q, lam=a_dec)
+    np.testing.assert_allclose(np.asarray(eng.finalize(st)[0]["x"]),
+                               np.asarray(ref_p["x"]), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------ generalized --
+def test_generalized_policy_matches_legacy(lin, rng):
+    qc = 2
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    comm = jax.tree.map(lambda t: t[:, :qc], batch)
+    q = jnp.asarray([3, 2, 0, 1, 3, 2], jnp.int32)
+    qb = jnp.asarray([2, 0, 1, 2, 1, 0], jnp.int32)
+    cfg = AnytimeConfig(n_workers=W, max_local_steps=QMAX)
+    wp = broadcast_to_workers(params, W)
+    ref_wp, _, ref_m = generalized_round(_loss, sgd(0.01), cfg, qc)(wp, (), batch, comm, q, qb)
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, generalized_policy(), max_comm_steps=qc)
+    twp, _, tm = eng.tree_round()(wp, (), batch, comm, q, qb)
+    np.testing.assert_array_equal(np.asarray(twp["x"]), np.asarray(ref_wp["x"]))
+    st, m = eng.round(eng.init_state(params, ()), batch, q, comm_batch=comm, q_bar=qb)
+    gp = stack_from_arena(st.arena, eng.pspec)
+    np.testing.assert_allclose(np.asarray(gp["x"]), np.asarray(ref_wp["x"]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m["mix"]), np.asarray(ref_m["mix"]),
+                               rtol=1e-6)
+
+
+# ----------------------------------------------------------------- driver --
+def test_driver_single_compile_no_per_round_host_sync(lin, rng):
+    """K rounds execute under exactly ONE trace and ONE host dispatch, and
+    reproduce K sequential single-round calls."""
+    K = 7
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    batches = jax.tree.map(lambda t: jnp.broadcast_to(t, (K,) + t.shape), batch)
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    eng = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    st0 = eng.init_state(params, ())
+    st, outs = eng.run(st0, batches, q_mat, keep_history=True)
+    assert eng.trace_count == 1, "driver must compile exactly once for K rounds"
+    assert eng.dispatch_count == 1, "K rounds must be one host dispatch"
+    assert outs["loss"].shape == (K,)
+    assert outs["arena"].shape == (K,) + st.arena.shape
+    # a second window of the same shapes/flags must NOT retrace
+    st, _ = eng.run(st, batches, q_mat, keep_history=True)
+    assert eng.trace_count == 1
+    assert eng.dispatch_count == 2
+    # trajectory parity with per-round stepping
+    st_seq = eng.init_state(params, ())
+    for k in range(K):
+        st_seq, _ = eng.round(st_seq, batch, jnp.asarray(q_mat[k], jnp.int32))
+    np.testing.assert_allclose(np.asarray(outs["arena"][-1]),
+                               np.asarray(st_seq.arena), rtol=1e-6, atol=1e-6)
+    assert int(st_seq.rstep) == K
+
+
+def test_driver_static_batch_mode(lin, rng):
+    """batch_per_round=False reuses one device-resident batch every round
+    (gradient coding's fixed blocks)."""
+    K = 4
+    params = _params(rng)
+    batch = _batch(lin, rng, W, QMAX, B)
+    q_mat = np.full((K, W), QMAX)
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, sync_policy())
+    st, outs = eng.run(eng.init_state(params, ()), batch, q_mat, batch_per_round=False)
+    assert outs["loss"].shape == (K,)
+    assert np.all(np.isfinite(np.asarray(outs["loss"])))
+
+
+def test_driver_rounds_converge(lin):
+    """End-to-end: the driver trains linreg to low error (Fig-3 sanity)."""
+    K, w, qmax = 30, 8, 8
+    r = np.random.default_rng(3)
+    eng = RoundEngine(_loss, sgd(0.02), w, qmax, anytime_policy())
+    batches = _batch(lin, r, w * K, qmax, 16)
+    batches = jax.tree.map(lambda t: t.reshape((K, w) + t.shape[1:]), batches)
+    q_mat = r.integers(1, qmax + 1, size=(K, w))
+    st, _ = eng.run(eng.init_state({"x": jnp.zeros(12, jnp.float32)}, ()), batches, q_mat)
+    err = lin.normalized_error(np.asarray(eng.finalize(st)[0]["x"], np.float64))
+    assert err < 0.1, err
+
+
+# ----------------------------------------------------------------- policy --
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RoundPolicy(name="bad", weighting="nope")
+    with pytest.raises(ValueError):
+        RoundPolicy(name="bad", update="coded")  # needs step_scales
+    with pytest.raises(ValueError):
+        RoundEngine(_loss, sgd(0.1), 2, 2, generalized_policy())  # needs comm steps
+    with pytest.raises(ValueError):
+        RoundEngine(_loss, sgd(0.1), 2, 2, anytime_policy(), combine_impl="bogus")

@@ -14,9 +14,15 @@ from repro.sharding.specs import cache_pspecs, param_pspecs, worker_axes
 
 
 def _mesh(multi_pod=False):
+    # jax < 0.5 takes ((name, size), ...); newer takes (sizes, names)
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        sizes, names = (2, 16, 16), ("pod", "data", "model")
+    else:
+        sizes, names = (16, 16), ("data", "model")
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
 
 
 def _axis_size(mesh, axis):

@@ -1,0 +1,108 @@
+"""kernels/weighted_combine: padding, bf16-input/f32-accumulate, and
+arena-combine equivalence (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arena as AR
+from repro.core.combine import combine_pytrees
+from repro.kernels import ops, ref
+from repro.kernels.weighted_combine import weighted_combine
+
+
+@pytest.mark.parametrize("n", [1, 100, 1023, 1024, 1025, 5000])
+def test_padding_non_divisible_n(n):
+    """N that does not divide block_n exercises the zero-pad + slice path;
+    the pad lanes must contribute nothing."""
+    rng = np.random.default_rng(0)
+    w = 7
+    x = jnp.asarray(rng.standard_normal((w, n)).astype(np.float32))
+    lam = jnp.asarray(rng.random(w).astype(np.float32))
+    out = weighted_combine(x, lam, block_n=1024, interpret=True)
+    exp = ref.weighted_combine_ref(x, lam)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_stack_f32_accumulate():
+    """bf16 input stack: the reduction must run in f32 (an all-bf16
+    accumulate of W=32 near-cancelling terms would visibly drift)."""
+    rng = np.random.default_rng(1)
+    w, n = 32, 700
+    base = rng.standard_normal((w, n)).astype(np.float32)
+    x_bf16 = jnp.asarray(base, jnp.bfloat16)
+    lam = jnp.asarray(rng.random(w).astype(np.float32))
+    out = weighted_combine(x_bf16, lam, block_n=256, interpret=True)
+    assert out.dtype == jnp.float32
+    # oracle: f32 contraction over the bf16-quantized inputs
+    exp = ref.weighted_combine_ref(x_bf16.astype(jnp.float32), lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_out_dtype():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 130)), jnp.bfloat16)
+    lam = jnp.full((4,), 0.25, jnp.float32)
+    out = weighted_combine(x, lam, block_n=64, interpret=True, out_dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    exp = ref.weighted_combine_ref(x.astype(jnp.float32), lam)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp), rtol=1e-2, atol=1e-2
+    )
+
+
+def test_arena_combine_matches_tree_combine():
+    """ONE kernel call over the flat [W, N] arena == per-leaf tree-map."""
+    rng = np.random.default_rng(3)
+    w = 5
+    tree = {
+        "emb": jnp.asarray(rng.standard_normal((w, 33, 7)).astype(np.float32)),
+        "blocks": [
+            {"w1": jnp.asarray(rng.standard_normal((w, 11)).astype(np.float32))}
+            for _ in range(3)
+        ],
+        "scalar": jnp.asarray(rng.standard_normal((w,)).astype(np.float32)),
+    }
+    lam = jnp.asarray(rng.random(w).astype(np.float32))
+    lam = lam / lam.sum()
+    out = ops.arena_combine(tree, lam, interpret=True)
+    exp = combine_pytrees(tree, lam)
+    for o, e in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
+        assert o.shape == e.shape
+        np.testing.assert_allclose(np.asarray(o), np.asarray(e), rtol=1e-5, atol=1e-6)
+
+
+def test_arena_roundtrip_mixed_dtypes():
+    """Arena flatten/unflatten preserves shapes, dtypes and values (ints
+    below 2**24 round-trip exactly through the f32 arena)."""
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+        "b": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+        "c": jnp.asarray(3.0, jnp.float32),
+    }
+    spec = AR.arena_spec(tree)
+    vec = AR.to_arena(tree, spec)
+    assert vec.shape == (6 + 2 + 1,) and vec.dtype == jnp.float32
+    back = AR.from_arena(vec, spec)
+    for o, e in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert o.dtype == e.dtype and o.shape == e.shape
+        np.testing.assert_array_equal(np.asarray(o, np.float32), np.asarray(e, np.float32))
+    # empty tree -> size-0 arena
+    espec = AR.arena_spec(())
+    assert espec.size == 0
+    assert AR.to_arena((), espec).shape == (0,)
+    assert AR.from_arena(jnp.zeros((0,)), espec) == ()
+
+
+def test_stack_arena_roundtrip():
+    rng = np.random.default_rng(4)
+    w = 4
+    tree = {"x": jnp.asarray(rng.standard_normal((w, 5, 2)).astype(np.float32)),
+            "y": jnp.asarray(rng.standard_normal((w, 3)).astype(np.float32))}
+    spec = AR.arena_spec(jax.tree.map(lambda l: l[0], tree))
+    mat = AR.stack_to_arena(tree, spec)
+    assert mat.shape == (w, 13)
+    back = AR.stack_from_arena(mat, spec)
+    for o, e in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(e))
