@@ -1,13 +1,25 @@
 """Shared simulation harness for the paper-figure benchmarks.
 
 Every scheme is driven against the SAME StragglerModel (the paper ran all
-EC2 experiments simultaneously for the same reason) AND the same
-RoundEngine: all epochs of a run execute as ONE jit dispatch
-(`RoundEngine.run` with a pre-sampled q-matrix and keep_history=True), so
-cross-scheme curves compare algorithms, not dispatch overheads — the
-error-runtime confound Dutta et al. (2018) warn about.  Results are
-(wall_clock_seconds, normalized_error) curves + a time-to-target summary,
-printed as CSV rows `name,us_per_call,derived`.
+EC2 experiments simultaneously for the same reason) AND the same engine
+stack.  Since PR 2 the figure runners go through the **SweepEngine**: all
+`n_seeds` independent repetitions of a scheme (an experiment grid) compile
+and execute as ONE jit dispatch, with per-experiment q realizations and
+variance bands falling out of the single [E, K, N] history readback —
+multi-seed bands replace the old single-seed curves, and cross-scheme
+comparisons average out straggler luck instead of inheriting it.
+
+Randomness layout per scheme:
+  * fixed-TIME schemes (anytime / generalized): q is sampled ON DEVICE by
+    core/straggler_jax — [E, K, W] tensors born on the accelerator, zero
+    host syncs per experiment.  Wall-clock is deterministic ((ep+1) * T).
+  * fixed-WORK schemes (sync / FNB / gradient coding): wall-clock is an
+    order statistic of the finishing times, which the HOST needs to build
+    the x-axis anyway, so their per-experiment draws stay on the numpy
+    oracle (one [E, K, W] upload for the whole grid, not one per round).
+  * batches are drawn once and SHARED across the experiment axis
+    (batch_axis=None): bands isolate straggler randomness, and a 16-seed
+    grid costs one batch stack of HBM, not 16.
 
 Scaled-down dims (CPU, single core): the paper's 500k x 1000 matrix is run
 as 50k x 100 by default; every structural parameter (N=10 workers, S, T
@@ -23,8 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import from_arena
 from repro.core.assignment import block_slices, worker_sample_ids
+from repro.core.combine import anytime_lambdas
 from repro.core.baselines import (
     fnb_epoch_time,
     gc_epoch_time,
@@ -41,6 +53,8 @@ from repro.core.engine import (
     sync_policy,
 )
 from repro.core.straggler import StragglerModel
+from repro.core import straggler_jax as sjx
+from repro.core.sweep import SweepEngine
 from repro.data.linreg import LinRegData, make_linreg
 from repro.optim import sgd
 
@@ -82,6 +96,37 @@ class SimSetup:
         return (jnp.asarray(self.data.A[idx], jnp.float32), jnp.asarray(self.data.y[idx], jnp.float32))
 
 
+@dataclasses.dataclass
+class SweepCurves:
+    """Per-experiment (wall_clock, normalized_error) curves + band stats.
+
+    The figure modules consume `mean_curve` where they used to consume the
+    single-seed curve, and report the +-std band in the derived column.
+    """
+
+    curves: list  # [E] lists of (wall, err) tuples, one per epoch
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.curves)
+
+    @property
+    def mean_curve(self):
+        walls = np.mean([[w for w, _ in c] for c in self.curves], axis=0)
+        errs = np.mean([[e for _, e in c] for c in self.curves], axis=0)
+        return list(zip(walls.tolist(), errs.tolist()))
+
+    @property
+    def final(self) -> tuple[float, float]:
+        """(mean, std) of the last-epoch error across experiments."""
+        finals = np.asarray([c[-1][1] for c in self.curves])
+        return float(finals.mean()), float(finals.std())
+
+    def band_label(self) -> str:
+        m, s = self.final
+        return f"final={m:.4e}+-{s:.1e} (seeds={self.n_seeds})"
+
+
 def _zero_params(setup: SimSetup) -> dict:
     return {"x": jnp.zeros(setup.data.d, jnp.float32)}
 
@@ -91,117 +136,180 @@ def _stack_batches(batches: list) -> tuple:
     return (jnp.stack([b[0] for b in batches]), jnp.stack([b[1] for b in batches]))
 
 
-def _error_curve(setup: SimSetup, engine: RoundEngine, history, walls):
-    """Per-epoch normalized error from the driver's arena history [K, N]."""
+def _shared_batches(setup: SimSetup, rng, pools, qmax=None):
+    """One [K, W, q, b(, d)] microbatch stream, shared by every experiment."""
+    return _stack_batches([setup.batch(rng, pools, qmax) for _ in range(setup.epochs)])
+
+
+def _history_x(engine: RoundEngine, hist: np.ndarray) -> np.ndarray:
+    """Slice the single flat 'x' leaf out of host-side history rows.
+
+    The linreg runners all train a one-leaf {'x': [d]} pytree, so the
+    arena layout is a pure offset/shape slice — done in numpy on the
+    already-read-back history instead of a per-point from_arena device
+    round-trip (the tuple unpack asserts the one-leaf assumption)."""
+    (off,), (size,), (shape,) = engine.pspec.offsets, engine.pspec.sizes, engine.pspec.shapes
+    return hist[..., off : off + size].reshape(hist.shape[:-1] + shape)
+
+
+def _sweep_error_curves(setup: SimSetup, engine: RoundEngine, history, walls):
+    """Per-experiment error curves from the sweep history [E, K, N].
+
+    walls: [K] (shared) or [E, K] per-experiment wall-clock grids.
+    """
     hist = np.asarray(history, np.float64)
-    curve = []
-    for ep, wall in enumerate(walls):
-        x = np.asarray(
-            from_arena(jnp.asarray(hist[ep], jnp.float32), engine.pspec)["x"], np.float64
-        )
-        curve.append((wall, setup.data.normalized_error(x)))
-    return curve
+    e_axis, k_axis = hist.shape[0], hist.shape[1]
+    walls = np.broadcast_to(np.asarray(walls, np.float64), (e_axis, k_axis))
+    xs = _history_x(engine, hist)
+    return SweepCurves([
+        [(float(walls[e, k]), setup.data.normalized_error(xs[e, k]))
+         for k in range(k_axis)]
+        for e in range(e_axis)
+    ])
 
 
-def run_anytime(setup: SimSetup, weighting: str = "anytime", fixed_q: Optional[np.ndarray] = None):
+def run_anytime(
+    setup: SimSetup,
+    weighting: str = "anytime",
+    fixed_q: Optional[np.ndarray] = None,
+    n_seeds: int = 4,
+    fused: str | bool = False,
+) -> SweepCurves:
     """Error-vs-wall-clock for Anytime-Gradients (or its uniform ablation).
 
-    All epochs run inside ONE RoundEngine driver dispatch; the q-matrix is
-    pre-sampled in the legacy per-epoch draw order (q then batch) so the
-    stochastic trajectory matches the pre-engine harness."""
+    The n_seeds repetitions run as ONE SweepEngine dispatch; q is sampled
+    on device (straggler_jax) with a fresh heterogeneous fleet per seed —
+    unless fixed_q pins the Fig-2a deterministic skew, which makes every
+    seed identical (callers pass n_seeds=1 there).
+    """
     policy = RoundPolicy(name=f"anytime_{weighting}", weighting=weighting,
                          s_redundancy=setup.s)
-    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax, policy)
-    pools = setup.pools()
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
+                         policy, fused=fused)
+    sweep = SweepEngine(engine)
     r = np.random.default_rng(setup.seed)
-    qs, batches = [], []
-    for ep in range(setup.epochs):
-        q = fixed_q if fixed_q is not None else setup.straggler.realize_steps(
-            r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds)
-        qs.append(np.asarray(q))
-        batches.append(setup.batch(r, pools))
-    state = engine.init_state(_zero_params(setup), ())
-    _, outs = engine.run(state, _stack_batches(batches), np.stack(qs), keep_history=True)
+    batches = _shared_batches(setup, r, setup.pools())
+    if fixed_q is not None:
+        qs = np.broadcast_to(
+            np.asarray(fixed_q, np.int64),
+            (n_seeds, setup.epochs, setup.n_workers),
+        )
+    else:
+        qs = sjx.sample_steps_tensor(
+            setup.straggler, jax.random.PRNGKey(setup.seed), n_seeds,
+            setup.epochs, setup.n_workers, setup.budget_t, setup.qmax,
+        )
+    state = sweep.init_state(_zero_params(setup), n_seeds)
+    _, outs = sweep.run(state, batches, qs, keep_history=True, batch_axis=None)
     walls = [(ep + 1) * setup.budget_t for ep in range(setup.epochs)]
-    return _error_curve(setup, engine, outs["arena"], walls)
+    return _sweep_error_curves(setup, engine, outs["arena"], walls)
 
 
-def run_generalized(setup: SimSetup, comm_frac: float = 0.5):
+def run_generalized(setup: SimSetup, comm_frac: float = 0.5,
+                    n_seeds: int = 4) -> SweepCurves:
     """Sec.-V generalized scheme; comm window = comm_frac * T."""
     qc = max(int(setup.qmax * comm_frac), 1)
     engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
                          generalized_policy(), max_comm_steps=qc)
+    sweep = SweepEngine(engine)
     pools = setup.pools()
     r = np.random.default_rng(setup.seed)
-    qs, qbs, batches, comms = [], [], [], []
-    for ep in range(setup.epochs):
-        qs.append(setup.straggler.realize_steps(
-            r, setup.n_workers, setup.budget_t, setup.qmax, setup.speeds))
-        qbs.append(setup.straggler.realize_steps(
-            r, setup.n_workers, setup.budget_t * comm_frac, qc, setup.speeds))
-        batches.append(setup.batch(r, pools))
-        comms.append(setup.batch(r, pools, qc))
-    state = engine.init_state(_zero_params(setup), ())
-    _, outs = engine.run(state, _stack_batches(batches), np.stack(qs),
-                         comm_batches=_stack_batches(comms),
-                         qbars=jnp.asarray(np.stack(qbs), jnp.int32),
-                         keep_history=True)
-    # history rows are per-worker stacks [K, W, N]; finalize each epoch with
-    # its own Theorem-3 weights (the master's view after epoch t)
+    batches = _shared_batches(setup, r, pools)
+    comms = _shared_batches(setup, r, pools, qc)
+    key_q, key_qb = jax.random.split(jax.random.PRNGKey(setup.seed))
+    qs = sjx.sample_steps_tensor(setup.straggler, key_q, n_seeds, setup.epochs,
+                                 setup.n_workers, setup.budget_t, setup.qmax)
+    qbars = sjx.sample_steps_tensor(setup.straggler, key_qb, n_seeds,
+                                    setup.epochs, setup.n_workers,
+                                    setup.budget_t * comm_frac, qc)
+    state = sweep.init_state(_zero_params(setup), n_seeds)
+    _, outs = sweep.run(state, batches, qs, comm_batches=comms, qbars=qbars,
+                        keep_history=True, batch_axis=None)
+    # history rows are per-worker stacks [E, K, W, N]; finalize each epoch
+    # with its own Theorem-3 weights (the master's view after epoch t) —
+    # the canonical anytime_lambdas, vmapped over the whole grid in one go
     hist = np.asarray(outs["arena"], np.float64)
-    curve = []
-    for ep in range(setup.epochs):
-        q = np.asarray(qs[ep], np.float64)
-        lam = q / q.sum() if q.sum() > 0 else np.full_like(q, 1.0 / len(q))
-        vec = jnp.asarray(lam @ hist[ep], jnp.float32)
-        x = np.asarray(from_arena(vec, engine.pspec)["x"], np.float64)
-        curve.append(((ep + 1) * setup.budget_t * (1.0 + comm_frac),
-                      setup.data.normalized_error(x)))
-    return curve
+    lams = np.asarray(jax.vmap(jax.vmap(anytime_lambdas))(jnp.asarray(qs)),
+                      np.float64)
+    xs = _history_x(engine, np.einsum("ekw,ekwn->ekn", lams, hist))
+    return SweepCurves([
+        [((ep + 1) * setup.budget_t * (1.0 + comm_frac),
+          setup.data.normalized_error(xs[e, ep]))
+         for ep in range(setup.epochs)]
+        for e in range(n_seeds)
+    ])
 
 
-def run_sync(setup: SimSetup):
+def _host_epoch_draws(setup: SimSetup, n_seeds: int, k_epochs: int, per_epoch):
+    """Per-seed host sampling scaffold for the fixed-WORK schemes.
+
+    Seed e gets a fresh fleet (speeds from rng seed+17e) and k_epochs calls
+    of per_epoch(rng, speeds) -> (dt, payload); returns cumulative walls
+    [E, K] and the [E][K] payload lists (scheme-specific: finisher masks,
+    received sets, ...).
+    """
+    walls = np.empty((n_seeds, k_epochs))
+    payloads = []
+    for e in range(n_seeds):
+        rng_e = np.random.default_rng(setup.seed + 17 * e)
+        speeds = setup.straggler.worker_speed(rng_e, setup.n_workers)
+        wall, row = 0.0, []
+        for ep in range(k_epochs):
+            dt, payload = per_epoch(rng_e, speeds)
+            wall += dt
+            walls[e, ep] = wall
+            row.append(payload)
+        payloads.append(row)
+    return walls, payloads
+
+
+def run_sync(setup: SimSetup, n_seeds: int = 4) -> SweepCurves:
     engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
                          sync_policy())
-    pools = setup.pools(0)  # classical sync: no replication
+    sweep = SweepEngine(engine)
     r = np.random.default_rng(setup.seed)
-    walls, batches, wall = [], [], 0.0
-    for ep in range(setup.epochs):
-        wall += sync_epoch_time(setup.straggler, r, setup.n_workers, setup.qmax, setup.speeds)
-        walls.append(wall)
-        batches.append(setup.batch(r, pools))
-    q_mat = np.full((setup.epochs, setup.n_workers), setup.qmax, np.int64)
-    state = engine.init_state(_zero_params(setup), ())
-    _, outs = engine.run(state, _stack_batches(batches), q_mat, keep_history=True)
-    return _error_curve(setup, engine, outs["arena"], walls)
+    batches = _shared_batches(setup, r, setup.pools(0))  # no replication
+    walls, _ = _host_epoch_draws(
+        setup, n_seeds, setup.epochs,
+        lambda rng, speeds: (sync_epoch_time(setup.straggler, rng,
+                                             setup.n_workers, setup.qmax,
+                                             speeds), None),
+    )
+    qs = np.full((n_seeds, setup.epochs, setup.n_workers), setup.qmax, np.int64)
+    state = sweep.init_state(_zero_params(setup), n_seeds)
+    _, outs = sweep.run(state, batches, qs, keep_history=True, batch_axis=None)
+    return _sweep_error_curves(setup, engine, outs["arena"], walls)
 
 
-def run_fnb(setup: SimSetup, n_drop: int):
+def run_fnb(setup: SimSetup, n_drop: int, n_seeds: int = 4) -> SweepCurves:
     engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers, setup.qmax,
                          fnb_policy())
-    pools = setup.pools(0)  # FNB has no replication
+    sweep = SweepEngine(engine)
     r = np.random.default_rng(setup.seed)
-    walls, qs, batches, wall = [], [], [], 0.0
-    for ep in range(setup.epochs):
-        dt, mask = fnb_epoch_time(setup.straggler, r, setup.n_workers, setup.qmax, n_drop, setup.speeds)
-        wall += dt
-        walls.append(wall)
-        qs.append(np.where(mask, setup.qmax, 0))
-        batches.append(setup.batch(r, pools))
-    state = engine.init_state(_zero_params(setup), ())
-    _, outs = engine.run(state, _stack_batches(batches), np.stack(qs), keep_history=True)
-    return _error_curve(setup, engine, outs["arena"], walls)
+    batches = _shared_batches(setup, r, setup.pools(0))  # FNB has no replication
+    walls, masks = _host_epoch_draws(
+        setup, n_seeds, setup.epochs,
+        lambda rng, speeds: fnb_epoch_time(setup.straggler, rng,
+                                           setup.n_workers, setup.qmax,
+                                           n_drop, speeds),
+    )
+    qs = np.where(np.asarray(masks), setup.qmax, 0)
+    state = sweep.init_state(_zero_params(setup), n_seeds)
+    _, outs = sweep.run(state, batches, qs, keep_history=True, batch_axis=None)
+    return _sweep_error_curves(setup, engine, outs["arena"], walls)
 
 
-def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1):
+def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1,
+                        n_seeds: int = 4) -> SweepCurves:
     """GC: one exact full-batch GD step per epoch, fastest N-S wait.
 
     Engine form: worker v's (static) microbatch stream is its S+1 assigned
     blocks; the per-step scales are the code-matrix entries and the per-
-    epoch decode vectors enter as explicit combine weights, so every epoch
-    is the exact coded step x' = x0 - lr * sum_v a_v c_v — through the SAME
-    driver as every other scheme.  Block data never changes, so the driver
-    runs with a static batch (batch_per_round=False).
+    epoch decode vectors enter as explicit combine weights [E, K, W], so
+    every epoch of every seed is the exact coded step
+    x' = x0 - lr * sum_v a_v c_v — through the SAME sweep driver as every
+    other scheme.  Block data never changes, so the grid shares one static
+    batch (batch_per_round=False, batch_axis=None).
     """
     from repro.core.assignment import worker_block_ids
 
@@ -225,22 +333,27 @@ def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1):
             bY[v, t] = y[sls[j]]
 
     engine = RoundEngine(linreg_loss, sgd(setup.lr), w, s + 1, gc_policy(code))
-    r = np.random.default_rng(setup.seed)
+    sweep = SweepEngine(engine)
     # one GC "epoch" costs each worker S+1 block passes; in straggler-model
     # units a block pass ~ (m/N)/local_batch iteration-equivalents
     steps_per_block = max(setup.data.m // setup.n_workers // setup.local_batch, 1)
-    walls, qs, lams, wall = [], [], [], 0.0
-    for ep in range(setup.epochs * epochs_scale):
-        dt, rec = gc_epoch_time(setup.straggler, r, setup.n_workers, setup.s, steps_per_block, setup.speeds)
-        wall += dt
-        walls.append(wall)
-        qs.append(np.where(rec, s + 1, 0))
-        lams.append(gc_decode_weights(code, rec))
-    state = engine.init_state(_zero_params(setup), ())
-    _, outs = engine.run(state, (jnp.asarray(bA), jnp.asarray(bY)), np.stack(qs),
-                         lams=jnp.asarray(np.stack(lams), jnp.float32),
-                         batch_per_round=False, keep_history=True)
-    return _error_curve(setup, engine, outs["arena"], walls)
+    k_epochs = setup.epochs * epochs_scale
+    walls, recs = _host_epoch_draws(
+        setup, n_seeds, k_epochs,
+        lambda rng, speeds: gc_epoch_time(setup.straggler, rng,
+                                          setup.n_workers, setup.s,
+                                          steps_per_block, speeds),
+    )
+    recs = np.asarray(recs)  # [E, K, W] received masks
+    qs = np.where(recs, s + 1, 0)
+    lams = np.stack([
+        [gc_decode_weights(code, rec) for rec in row] for row in recs
+    ]).astype(np.float32)
+    state = sweep.init_state(_zero_params(setup), n_seeds)
+    _, outs = sweep.run(state, (jnp.asarray(bA), jnp.asarray(bY)), qs,
+                        lams=jnp.asarray(lams), batch_per_round=False,
+                        keep_history=True, batch_axis=None)
+    return _sweep_error_curves(setup, engine, outs["arena"], walls)
 
 
 def time_to_target(curve, target: float) -> float:

@@ -34,22 +34,23 @@ def make_msd_like(scale: float, seed: int = 0) -> LinRegData:
     return LinRegData(A=A, y=y, x_star=x_star)
 
 
-def run(scale: float = 0.02, epochs: int = 40):
+def run(scale: float = 0.02, epochs: int = 40, n_seeds: int = 4):
     from repro.core.straggler import StragglerModel
 
     setup = SimSetup(data=make_msd_like(scale), n_workers=10, s=1,
                      qmax=24, epochs=epochs, budget_t=30.0, lr=2e-2,
                      straggler=StragglerModel(kind="pareto", alpha=1.5, hetero_spread=1.0))
-    c_any = run_anytime(setup)
-    c_sync = run_sync(setup)
-    c_fnb = run_fnb(setup, n_drop=2)  # B=8 waited, 2 dropped (Pan et al.)
+    c_any = run_anytime(setup, n_seeds=n_seeds)
+    c_sync = run_sync(setup, n_seeds=n_seeds)
+    c_fnb = run_fnb(setup, n_drop=2, n_seeds=n_seeds)  # B=8 waited, 2 dropped (Pan et al.)
     target = 0.4
     rows = []
     times = {}
-    for name, curve in [("fig5_anytime_s1", c_any), ("fig5_sync_sgd", c_sync), ("fig5_fnb_b8", c_fnb)]:
-        t = time_to_target(curve, target)
+    for name, res in [("fig5_anytime_s1", c_any), ("fig5_sync_sgd", c_sync), ("fig5_fnb_b8", c_fnb)]:
+        t = time_to_target(res.mean_curve, target)
         times[name] = t
-        rows.append((name, f"{curve[-1][1]:.4e}", f"t_to_{target}={t:.0f}s"))
+        rows.append((name, f"{res.final[0]:.4e}",
+                     f"t_to_{target}={t:.0f}s {res.band_label()}"))
     assert times["fig5_anytime_s1"] <= min(times.values()), "Anytime must win on real-shaped data (Fig 5)"
     return rows
 

@@ -49,6 +49,55 @@ def run():
     rows.append(("kernel_weighted_combine_cpu_oracle", f"{us:.0f}",
                  f"tpu_roofline_us={bytes_moved/HBM_BW*1e6:.0f}"))
 
+    # lambda scalar-prefetch delta: the [W] weight vector used to be a
+    # [W, 1] VMEM block RE-FETCHED on every one of the N/BN grid steps;
+    # PrefetchScalarGridSpec fetches it once into SMEM for the whole call.
+    # Tiny-dims interpret run pins both paths to the same result.
+    from repro.kernels.weighted_combine import BLOCK_N, weighted_combine
+
+    xs = jnp.asarray(rng.standard_normal((8, 1024)).astype(np.float32))
+    ls = jnp.asarray(rng.random(8).astype(np.float32))
+    out_p = weighted_combine(xs, ls, block_n=256, interpret=True)
+    out_f = weighted_combine(xs, ls, block_n=256, interpret=True,
+                             scalar_prefetch=False)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_f), rtol=1e-6)
+    grid_steps = n // BLOCK_N
+    lam_bytes_refetch = grid_steps * w * 4
+    rows.append(("kernel_weighted_combine_lam_prefetch", "0",
+                 f"lam_fetch_bytes {lam_bytes_refetch}->{w*4}"
+                 f" ({grid_steps} grid steps, interpret_parity_ok)"))
+
+    # fused round (scan + combine in ONE kernel): tiny-dims interpret parity
+    # + the HBM round-trip the fusion deletes (the [W, D] iterate stack no
+    # longer crosses HBM between the local-SGD scan and the combine)
+    from repro.kernels.fused_round import fused_round, fused_round_ref
+
+    fw, fq, fb, fd = 8, 8, 4, 512
+    fa = jnp.asarray(rng.standard_normal((fw, fq, fb, fd)).astype(np.float32))
+    fy = jnp.asarray(rng.standard_normal((fw, fq, fb)).astype(np.float32))
+    fx0 = jnp.asarray(rng.standard_normal(fd).astype(np.float32))
+    fqv = jnp.asarray(rng.integers(0, fq + 1, fw), jnp.int32)
+    flam = (fqv / jnp.maximum(jnp.sum(fqv), 1)).astype(jnp.float32)
+    xk, lk = fused_round(fa, fy, fx0, fqv, flam, 0.01, interpret=True)
+    xr, lr = fused_round_ref(fa, fy, fx0, fqv, flam, 0.01)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lr), rtol=1e-4,
+                               atol=1e-5)
+    f = jax.jit(lambda *args: fused_round_ref(*args))
+    us = _time(lambda *args: f(*args)[0], fa, fy, fx0, fqv, flam,
+               jnp.full((fq,), 0.01, jnp.float32))
+    batch_bytes = (fw * fq * fb * fd + fw * fq * fb) * 4
+    stack_bytes = 2 * fw * fd * 4  # the write+read the fusion eliminates
+    fused_bytes = batch_bytes + 2 * fd * 4 + fw * 4
+    rows.append(("kernel_fused_round_cpu_oracle", f"{us:.0f}",
+                 f"tpu_roofline_us={fused_bytes/HBM_BW*1e6:.2f}"
+                 f" (interpret_parity_ok)"))
+    rows.append(("kernel_fused_round_stack_hbm_savings",
+                 f"{stack_bytes}",
+                 f"bytes_per_round_saved={stack_bytes/(fused_bytes+stack_bytes):.1%}"
+                 f"_of_unfused_traffic"))
+
     # arena combine vs per-leaf tree combine: same total elements split over
     # a 24-leaf "model" — measures the dispatch/fusion win of ONE [W, N]
     # contraction vs 24 small per-leaf reductions

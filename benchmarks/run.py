@@ -9,22 +9,35 @@
   cor4  variance ~ 1/Q decay                           [paper Cor 4]
   lm    Thm-3 weighting on NON-CONVEX LM training       [beyond-paper ablation]
   kernels  Pallas-kernel oracle timings + TPU roofline bounds
+  sweep    SweepEngine grid vs looped RoundEngine (BENCH_sweep.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
-figure's headline number where a wall-time makes no sense).
+figure's headline number where a wall-time makes no sense).  With
+``--json PATH`` the same rows land in a structured file per suite —
+{"suites": {name: {"ok": bool, "rows": [...], "error"?: str}},
+ "failed": [...]} — so CI and BENCH_*.json generation consume results
+instead of scraping stdout.  Exits nonzero when any suite fails.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` with only src/ on PYTHONPATH: the repo
+# root (the `benchmarks` package parent) rides along explicitly
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset (fig2,fig3,...)")
     ap.add_argument("--scale", type=float, default=None, help="data-size scale override")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write structured per-suite results to PATH")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -37,6 +50,7 @@ def main() -> None:
         kernel_bench,
         lm_ablation,
         roofline_bench,
+        sweep_bench,
         variance_decay,
     )
 
@@ -50,21 +64,31 @@ def main() -> None:
         "cor4": variance_decay.run,
         "lm": lm_ablation.run,
         "kernels": kernel_bench.run,
+        "sweep": sweep_bench.run,
         "roofline": roofline_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
-    failed = []
+    results, failed = {}, []
     for name in chosen:
         try:
-            for row in suites[name]():
-                print(",".join(str(c) for c in row), flush=True)
+            rows = [tuple(str(c) for c in row) for row in suites[name]()]
+            for row in rows:
+                print(",".join(row), flush=True)
+            results[name] = {"ok": True, "rows": rows}
         except Exception as e:
             failed.append(name)
+            results[name] = {"ok": False, "rows": [],
+                             "error": f"{type(e).__name__}: {e}"}
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        pathlib.Path(args.json).write_text(
+            json.dumps({"suites": results, "failed": failed}, indent=2)
+        )
     if failed:
-        raise SystemExit(f"benchmark failures: {failed}")
+        print(f"benchmark failures: {failed}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

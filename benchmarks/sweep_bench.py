@@ -1,0 +1,120 @@
+"""SweepEngine benchmark: one [E]-grid dispatch vs looping RoundEngine.run.
+
+Both paths execute the IDENTICAL per-experiment computation (same engine,
+same shared batch stream, same q realizations): the loop pays, per
+experiment, one host dispatch, one q upload, one init_state and one
+history readback; the sweep pays ONE of each for the whole grid, with the
+q tensor device-sampled (core/straggler_jax) so it never crosses the host
+at all.  Writes experiments/s for both paths + the host-sync accounting to
+BENCH_sweep.json — the "whole figure grid as one jit" contract (ISSUE 2
+acceptance: >= 3x for a >= 16-experiment grid).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SimSetup, _stack_batches, linreg_loss
+from repro.core.engine import RoundEngine, anytime_policy
+from repro.core.straggler import StragglerModel
+from repro.core import straggler_jax as sjx
+from repro.core.sweep import SweepEngine
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+
+
+def run(out_path: str = "BENCH_sweep.json", n_experiments: int = 16,
+        rounds: int = 16, repeats: int = 3):
+    # paper-structural config (N=10 workers) at dispatch-bound dims: the
+    # quantity under test is per-experiment dispatch/upload/readback
+    # overhead, which the sweep amortizes over the whole grid
+    setup = SimSetup(data=make_linreg(20_000, 64, seed=0), n_workers=10,
+                     qmax=8, local_batch=8, epochs=rounds,
+                     straggler=StragglerModel(kind="shifted_exp", rate=1.0),
+                     budget_t=4.0)
+    engine = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers,
+                         setup.qmax, anytime_policy())
+    sweep = SweepEngine(engine)
+    r = np.random.default_rng(0)
+    pools = setup.pools()
+    batches = _stack_batches([setup.batch(r, pools) for _ in range(rounds)])
+    params0 = {"x": jnp.zeros(setup.data.d, jnp.float32)}
+
+    # q for the WHOLE grid, sampled on device: zero host syncs per experiment
+    sampler = jax.jit(lambda key: sjx.sample_steps_tensor(
+        setup.straggler, key, n_experiments, rounds, setup.n_workers,
+        setup.budget_t, setup.qmax))
+    qs = sampler(jax.random.PRNGKey(0))
+    qs.block_until_ready()
+
+    # --- sweep: ONE dispatch for the whole [E] grid ---
+    st0 = sweep.init_state(params0, n_experiments)
+    st, _ = sweep.run(st0, batches, qs, keep_history=True, batch_axis=None)
+    st.arena.block_until_ready()  # compile
+    t_sweep = []
+    for _ in range(repeats):
+        t0 = time.time()
+        _, outs = sweep.run(sweep.init_state(params0, n_experiments), batches,
+                            qs, keep_history=True, batch_axis=None)
+        np.asarray(outs["arena"])  # whole grid history, ONE readback
+        t_sweep.append(time.time() - t0)
+    sweep_s = min(t_sweep)
+
+    # --- loop: one RoundEngine.run dispatch PER experiment ---
+    qs_host = np.asarray(qs)  # the loop path must ferry q through the host
+    st1 = engine.init_state(params0, ())
+    st1, _ = engine.run(st1, batches, qs_host[0], keep_history=True)  # compile
+    st1.arena.block_until_ready()
+    t_loop = []
+    for _ in range(repeats):
+        t0 = time.time()
+        for e in range(n_experiments):
+            q_e = jnp.asarray(qs_host[e], jnp.int32)  # host->device per exp
+            _, outs = engine.run(engine.init_state(params0, ()), batches, q_e,
+                                 keep_history=True)
+            np.asarray(outs["arena"])  # device->host per experiment
+        t_loop.append(time.time() - t0)
+    loop_s = min(t_loop)
+
+    speedup = loop_s / sweep_s
+    result = {
+        "config": {"m": setup.data.m, "d": setup.data.d,
+                   "workers": setup.n_workers, "q_max": setup.qmax,
+                   "rounds": rounds, "experiments": n_experiments,
+                   "repeats": repeats},
+        "sweep_engine": {
+            "experiments_per_s": n_experiments / sweep_s,
+            "wall_s": sweep_s,
+            # one dispatch + one readback for the grid; q device-sampled
+            "host_syncs_per_experiment": 2.0 / n_experiments,
+            "q_host_uploads_per_experiment": 0.0,
+            "jit_traces": sweep.trace_count,
+        },
+        "loop_round_engine": {
+            "experiments_per_s": n_experiments / loop_s,
+            "wall_s": loop_s,
+            # q upload + dispatch + history readback, each experiment
+            "host_syncs_per_experiment": 3.0,
+            "q_host_uploads_per_experiment": 1.0,
+        },
+        "speedup": speedup,
+    }
+    pathlib.Path(out_path).write_text(json.dumps(result, indent=2))
+    return [
+        ("sweep_engine_grid", f"{sweep_s / n_experiments * 1e6:.0f}",
+         f"experiments_per_s={n_experiments / sweep_s:.1f}"),
+        ("sweep_loop_round_engine", f"{loop_s / n_experiments * 1e6:.0f}",
+         f"experiments_per_s={n_experiments / loop_s:.1f}"),
+        ("sweep_speedup", f"{speedup:.2f}", f"written={out_path}"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

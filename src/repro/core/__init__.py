@@ -11,6 +11,9 @@
   engine.py      unified RoundEngine: every scheme as a RoundPolicy over
                  one masked scan + single-jit multi-round driver
   arena.py       flat f32 parameter arena backing the engine's hot combine
+  sweep.py       SweepEngine: the engine driver vmapped over an [E]
+                 experiment axis — a whole figure grid in one jit
+  straggler_jax.py  device-side q sampling ([E, K, W] with zero host syncs)
 """
 
 from repro.core.anytime import AnytimeConfig, anytime_round, local_sgd, reshape_global_batch  # noqa: F401
@@ -44,6 +47,8 @@ from repro.core.engine import (  # noqa: F401
     generalized_policy,
     sync_policy,
 )
+from repro.core.sweep import SweepEngine  # noqa: F401
+from repro.core import straggler_jax  # noqa: F401
 from repro.core.assignment import (  # noqa: F401
     assignment_matrix,
     block_slices,

@@ -226,6 +226,19 @@ class RoundEngine:
                                      runs everywhere)
                   'kernel'           Pallas weighted_combine (TPU hot path)
                   'kernel_interpret' Pallas in interpret mode (CPU tests)
+    fused         False              scan + combine as separate ops (default)
+                  'pallas'           kernels/fused_round: the whole round —
+                                     q_v-masked SGD steps AND the weighted
+                                     combine — as ONE Pallas kernel; the
+                                     [W, N] iterate stack stays VMEM-resident
+                                     instead of round-tripping through HBM
+                  'interpret'        same kernel, interpret mode (CPU tests)
+                  Only valid for the flat-arena linreg workload: params =
+                  one [D] leaf, stateless SGD, a non-affine 'sgd' policy
+                  with iterate_mode='last', batch = (A [W,Q,B,D], y [W,Q,B]).
+                  Structural conditions are validated here and in
+                  init_state; the loss/batch contract is the caller's (it
+                  is pinned by tests/test_fused_round.py).
     """
 
     def __init__(
@@ -237,11 +250,22 @@ class RoundEngine:
         policy: RoundPolicy,
         max_comm_steps: int = 0,
         combine_impl: str = "einsum",
+        fused: str | bool = False,
     ):
         if combine_impl not in ("einsum", "kernel", "kernel_interpret"):
             raise ValueError(f"bad combine_impl {combine_impl!r}")
+        if fused not in (False, "pallas", "interpret"):
+            raise ValueError(f"bad fused {fused!r}")
         if policy.generalized and max_comm_steps < 1:
             raise ValueError("generalized policy needs max_comm_steps >= 1")
+        if fused and (
+            policy.update != "sgd" or policy.generalized or policy.affine
+            or policy.iterate_mode != "last"
+        ):
+            raise ValueError(
+                f"fused round supports non-affine 'sgd' policies with "
+                f"iterate_mode='last'; got policy {policy.name!r}"
+            )
         self.loss_fn = loss_fn
         self.opt = opt
         self.n_workers = n_workers
@@ -249,6 +273,7 @@ class RoundEngine:
         self.policy = policy
         self.max_comm_steps = max_comm_steps
         self.combine_impl = combine_impl
+        self.fused = fused
         self._scales = (
             jnp.asarray(policy.step_scales, jnp.float32)
             if policy.step_scales is not None
@@ -409,6 +434,14 @@ class RoundEngine:
             opt_state = self.opt.init(params)
         self.pspec = AR.arena_spec(params)
         self.ospec = AR.arena_spec(opt_state)
+        if self.fused and (
+            self.pspec.n_leaves != 1 or len(self.pspec.shapes[0]) != 1
+            or self.ospec.size != 0
+        ):
+            raise ValueError(
+                "fused round needs a single flat [D] parameter leaf and a "
+                "stateless optimizer (the arena linreg workload)"
+            )
         vec = AR.to_arena(params, self.pspec)
         ovec = AR.to_arena(opt_state, self.ospec)
         if self.policy.generalized:
@@ -416,10 +449,41 @@ class RoundEngine:
             ovec = AR.broadcast_arena(ovec, self.n_workers)
         return EngineState(arena=vec, opt_arena=ovec, rstep=jnp.zeros((), jnp.int32))
 
+    def _fused_arena_round(self, state: EngineState, batch, q, lam):
+        """The whole round as ONE Pallas kernel (kernels/fused_round): the
+        masked per-worker SGD scan and the lambda-weighted combine share a
+        VMEM-resident [W, D] iterate stack, so the stack never round-trips
+        through HBM between the scan and the combine."""
+        from repro.kernels.fused_round import fused_round
+
+        step0 = state.rstep * self.max_local_steps
+        a, y = batch
+        n_steps = a.shape[1]
+        # per-step learning rates from the optimizer's (linear, stateless)
+        # update map: lr_t = -update(1.0) honors schedules exactly
+        lrs = -jax.vmap(
+            lambda t: self.opt.update(jnp.ones((), jnp.float32), (), None,
+                                      step0 + t)[0]
+        )(jnp.arange(n_steps))
+        lam_w = self._weights(q, lam)
+        new_arena, loss_sums = fused_round(
+            a, y, state.arena, q, lam_w, lrs,
+            interpret=(self.fused == "interpret"),
+        )
+        losses = loss_sums / jnp.maximum(q.astype(jnp.float32), 1.0)
+        metrics = {
+            "loss": _mean_loss(lam_w, losses),
+            "lambdas": lam_w,
+            "q_total": jnp.sum(q),
+        }
+        return EngineState(new_arena, state.opt_arena, state.rstep + 1), metrics
+
     def _arena_round(self, state: EngineState, batch, q, lam=None, comm_batch=None,
                      q_bar=None) -> tuple[EngineState, dict]:
         if self.policy.generalized:
             return self._arena_generalized_round(state, batch, comm_batch, q, q_bar)
+        if self.fused:
+            return self._fused_arena_round(state, batch, q, lam)
         step0 = state.rstep * self.max_local_steps
         params = AR.from_arena(state.arena, self.pspec)
         opt_state = AR.from_arena(state.opt_arena, self.ospec)
@@ -491,30 +555,39 @@ class RoundEngine:
         return self._arena_round(state, batch, q, lam, comm_batch, q_bar)
 
     # -- multi-round driver: K rounds, ONE jit, zero host round-trips -------
+    def _driver_fn(self, state, batches, qs, lams, comm_batches, qbars,
+                   batch_per_round, keep_history):
+        """The raw (un-jitted) K-round scan.  `run` jits it directly; the
+        SweepEngine (core/sweep.py) vmaps it over an experiment axis first —
+        both consume the SAME round semantics, so sweep results are the
+        engine's results by construction."""
+
+        def body(st, xs):
+            batch = xs["batch"] if batch_per_round else batches
+            new_st, metrics = self._arena_round(
+                st, batch, xs["q"], xs.get("lam"), xs.get("comm"), xs.get("q_bar")
+            )
+            if keep_history:
+                metrics = dict(metrics, arena=new_st.arena)
+            return new_st, metrics
+
+        xs = {"q": qs}
+        if batch_per_round:
+            xs["batch"] = batches
+        if lams is not None:
+            xs["lam"] = lams
+        if comm_batches is not None:
+            xs["comm"] = comm_batches
+        if qbars is not None:
+            xs["q_bar"] = qbars
+        return jax.lax.scan(body, state, xs)
+
     def _make_driver(self):
         def driver(state, batches, qs, lams, comm_batches, qbars,
                    batch_per_round, keep_history):
             self.trace_count += 1  # python side effect: runs once per TRACE
-
-            def body(st, xs):
-                batch = xs["batch"] if batch_per_round else batches
-                new_st, metrics = self._arena_round(
-                    st, batch, xs["q"], xs.get("lam"), xs.get("comm"), xs.get("q_bar")
-                )
-                if keep_history:
-                    metrics = dict(metrics, arena=new_st.arena)
-                return new_st, metrics
-
-            xs = {"q": qs}
-            if batch_per_round:
-                xs["batch"] = batches
-            if lams is not None:
-                xs["lam"] = lams
-            if comm_batches is not None:
-                xs["comm"] = comm_batches
-            if qbars is not None:
-                xs["q_bar"] = qbars
-            return jax.lax.scan(body, state, xs)
+            return self._driver_fn(state, batches, qs, lams, comm_batches,
+                                   qbars, batch_per_round, keep_history)
 
         donate = (0,) if jax.default_backend() != "cpu" else ()
         return jax.jit(driver, static_argnames=("batch_per_round", "keep_history"),

@@ -1,0 +1,142 @@
+"""Device-side straggler sampling: `StragglerModel` ported to jax.random.
+
+The SweepEngine (core/sweep.py) runs a whole experiment grid — seeds x
+straggler regimes x T budgets — inside ONE jit.  Feeding it q-tensors from
+the host numpy `StragglerModel` would re-introduce exactly the host sync
+the single-jit driver removed: one `[K, W]` upload per experiment.  This
+module samples the full `[E, K, W]` step-count tensor with `jax.random`,
+so q is BORN on the device and never crosses the host boundary.
+
+The numpy `StragglerModel` remains the statistical oracle: every sampler
+here draws from the SAME distribution family with the same parameters
+(tests/test_straggler_jax.py checks means and tail quantiles against the
+numpy path).  Draws are not bitwise identical — jax uses threefry counters,
+numpy uses PCG — but every modeled quantity matches in distribution:
+
+  constant     slowdown = 0
+  shifted_exp  slowdown ~ Exp(rate)
+  pareto       slowdown ~ Pareto(alpha) - 1   (numpy's Lomax convention;
+               jax.random.pareto has support [1, inf) so we shift by -1)
+  bimodal      slowdown = (slow_factor - 1) w.p. p_slow else 0
+  hetero       per-worker speed multiplier ~ U[1, 1 + spread], drawn ONCE
+               per experiment (fixed machines), broadcast over rounds
+  persistent   the LAST ceil(frac * W) workers have q = 0 every round —
+               the same deterministic id rule as StragglerModel, so sweep
+               results keep the testable "persistent ids are known" contract.
+
+Everything is shape-polymorphic over a leading experiment axis: scalars or
+`[E]` arrays are accepted for the time budget, so a T-budget sweep is one
+extra axis, not E separate sampler calls.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.straggler import StragglerModel
+
+ArrayLike = Union[float, jax.Array]
+
+
+def sample_worker_speed(
+    model: StragglerModel, key: jax.Array, n_workers: int
+) -> jax.Array:
+    """Fixed per-worker speed multipliers, f32 [W] (ones if no spread)."""
+    if model.hetero_spread <= 0:
+        return jnp.ones((n_workers,), jnp.float32)
+    return 1.0 + jax.random.uniform(
+        key, (n_workers,), jnp.float32, maxval=model.hetero_spread
+    )
+
+
+def _sample_slowdown(model: StragglerModel, key: jax.Array, shape) -> jax.Array:
+    """Per-(draw, worker) slowdown with the StragglerModel distribution."""
+    if model.kind == "constant":
+        return jnp.zeros(shape, jnp.float32)
+    if model.kind == "shifted_exp":
+        return jax.random.exponential(key, shape, jnp.float32) / model.rate
+    if model.kind == "pareto":
+        # numpy rng.pareto is Lomax (support [0, inf)); jax.random.pareto is
+        # classical Pareto (support [1, inf)) — shift to match the oracle.
+        return jax.random.pareto(key, model.alpha, shape, jnp.float32) - 1.0
+    if model.kind == "bimodal":
+        slow = jax.random.uniform(key, shape, jnp.float32) < model.p_slow
+        return jnp.where(slow, model.slow_factor - 1.0, 0.0)
+    raise ValueError(f"unknown straggler kind {model.kind!r}")
+
+
+def sample_iter_times(
+    model: StragglerModel,
+    key: jax.Array,
+    n_workers: int,
+    worker_speed: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Seconds/iteration for ONE epoch, f32 [W]; inf marks persistent ids."""
+    t = model.base_iter_time * (1.0 + _sample_slowdown(model, key, (n_workers,)))
+    if worker_speed is not None:
+        t = t * worker_speed
+    k = model.n_persistent(n_workers)
+    if k:
+        t = t.at[n_workers - k :].set(jnp.inf)
+    return t
+
+
+def sample_steps_matrix(
+    model: StragglerModel,
+    key: jax.Array,
+    n_rounds: int,
+    n_workers: int,
+    budget_t: ArrayLike,
+    max_steps: Optional[int] = None,
+    worker_speed: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Pre-sample a whole multi-round q window on device: int32 [K, W].
+
+    The jax analogue of `StragglerModel.realize_steps_matrix` — one call
+    replaces K host draws, and the result never leaves the device.
+    """
+    slow = _sample_slowdown(model, key, (n_rounds, n_workers))
+    t = model.base_iter_time * (1.0 + slow)
+    if worker_speed is not None:
+        t = t * worker_speed[None, :]
+    q = jnp.floor(jnp.asarray(budget_t, jnp.float32) / t)
+    cap = float(max_steps) if max_steps is not None else float(2**30)
+    q = jnp.clip(q, 0.0, cap).astype(jnp.int32)
+    k = model.n_persistent(n_workers)
+    if k:
+        q = q.at[:, n_workers - k :].set(0)
+    return q
+
+
+def sample_steps_tensor(
+    model: StragglerModel,
+    key: jax.Array,
+    n_experiments: int,
+    n_rounds: int,
+    n_workers: int,
+    budget_t: ArrayLike,
+    max_steps: Optional[int] = None,
+) -> jax.Array:
+    """The SweepEngine feed: int32 [E, K, W] sampled entirely on device.
+
+    budget_t may be a scalar (shared T) or an [E] array (a T-budget sweep —
+    experiment e uses budget_t[e] for every round).  Heterogeneous machine
+    speeds are redrawn per EXPERIMENT (each experiment is a fresh fleet)
+    and held fixed across that experiment's rounds, mirroring
+    `SimSetup.speeds` in the benchmark harness.
+    """
+    budgets = jnp.broadcast_to(
+        jnp.asarray(budget_t, jnp.float32), (n_experiments,)
+    )
+    keys = jax.random.split(key, n_experiments)
+
+    def one(k, budget):
+        ks, kq = jax.random.split(k)
+        speed = sample_worker_speed(model, ks, n_workers)
+        return sample_steps_matrix(
+            model, kq, n_rounds, n_workers, budget, max_steps, speed
+        )
+
+    return jax.vmap(one)(keys, budgets)

@@ -1,0 +1,161 @@
+"""SweepEngine: a whole experiment grid as ONE jit (DESIGN.md §6).
+
+The paper's claims are ensemble claims — Figs. 2-6 and Corollary 4 compare
+schemes across many seeds, straggler regimes and T budgets.  PR 1's
+RoundEngine made ONE experiment one dispatch; this layer vmaps the
+engine's K-round arena driver over a new leading experiment axis [E], so
+an entire figure grid compiles and executes as a single jit:
+
+    arenas   [E, N]      (or [E, W, N] for the generalized policy)
+    q        [E, K, W]   (device-sampled: core/straggler_jax.py)
+    lams     [E, K, W]   (optional explicit combine weights)
+    batches  [E, K, W, q_max, ...]  or shared [K, W, q_max, ...]
+             (batch_axis=None broadcasts one microbatch stream to every
+             experiment — bands then isolate STRAGGLER randomness, and
+             the grid costs one batch's worth of HBM, not E)
+    hyper    [E]         (optional per-experiment hyperparameter, mapped
+                          through opt_factory to a per-experiment optimizer
+                          — e.g. a learning-rate sweep)
+
+Variance bands fall out for free: metrics leaves come back stacked
+[E, K, ...], so per-epoch mean/std across experiments is one numpy call on
+the single readback.
+
+What must be STATIC across the grid (it is compiled structure, not data):
+the RoundPolicy, worker count W, q_max envelope, arena layout, and the
+straggler KIND.  What is batched (data): q realizations, combine weights,
+budgets (via the sampler), initial arenas, batches, and any scalar
+hyperparameter routed through `opt_factory`.  Persistent-straggler ids
+stay deterministic under batching because the id rule ("last ceil(frac*W)
+workers") is positional, not sampled — see straggler_jax.
+
+The per-experiment body is exactly `RoundEngine._driver_fn`, so a sweep
+row is bit-for-bit the single-engine result whenever XLA schedules the
+vmapped computation identically, and float-tolerance equal otherwise
+(tests/test_sweep.py pins this against a Python loop of engine.run).
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arena as AR
+from repro.core.engine import EngineState, RoundEngine
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+class SweepEngine:
+    """Batched multi-experiment driver over one RoundEngine.
+
+    engine       the single-experiment RoundEngine (policy, loss, optimizer,
+                 W, q_max, combine/fused implementation choices all come
+                 from it).
+    opt_factory  optional hyper -> Optimizer map.  When `run(..., hyper=h)`
+                 gets an [E] array, experiment e trains under
+                 opt_factory(h[e]) — the factory is traced with a scalar
+                 tracer, so schedules like sgd(lr) that close over the value
+                 work unchanged.  States must keep the engine's opt-state
+                 layout (same ospec): swap values, not structure.
+    """
+
+    def __init__(self, engine: RoundEngine,
+                 opt_factory: Optional[Callable[[jax.Array], Optimizer]] = None):
+        self.engine = engine
+        self.opt_factory = opt_factory
+        self._driver = None
+        # same observability contract as RoundEngine: one trace, then one
+        # dispatch per call regardless of E.
+        self.trace_count = 0
+        self.dispatch_count = 0
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self, params: PyTree, n_experiments: int,
+                   opt_state: Optional[PyTree] = None) -> EngineState:
+        """Replicate one (params, opt_state) into an [E]-stacked state.
+
+        Every experiment starts from the same iterate (the paper's setup);
+        per-experiment starts can be built by stacking engine.init_state
+        results along axis 0 with jax.tree.map.
+        """
+        st = self.engine.init_state(params, opt_state)
+        return EngineState(
+            arena=AR.broadcast_arena(st.arena, n_experiments),
+            opt_arena=AR.broadcast_arena(st.opt_arena, n_experiments),
+            rstep=jnp.zeros((n_experiments,), jnp.int32),
+        )
+
+    # -- driver --------------------------------------------------------------
+    def _engine_for(self, hyper_v):
+        """A shallow engine copy whose optimizer is opt_factory(hyper_v).
+
+        copy.copy is trace-time Python: the copy shares pspec/ospec/policy
+        with the base engine, only `opt` differs (per experiment, traced).
+        """
+        if hyper_v is None:
+            return self.engine
+        eng = copy.copy(self.engine)
+        eng.opt = self.opt_factory(hyper_v)
+        return eng
+
+    def _make_driver(self):
+        def driver(state, batches, qs, lams, comm_batches, qbars, hyper,
+                   batch_per_round, keep_history, batch_axis):
+            self.trace_count += 1  # python side effect: once per TRACE
+
+            def one(st, b, q, lam, comm, qb, hv):
+                eng = self._engine_for(hv)
+                return eng._driver_fn(st, b, q, lam, comm, qb,
+                                      batch_per_round, keep_history)
+
+            in_axes = (0, batch_axis, 0, 0, batch_axis, 0, 0)
+            return jax.vmap(one, in_axes=in_axes)(
+                state, batches, qs, lams, comm_batches, qbars, hyper
+            )
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(
+            driver,
+            static_argnames=("batch_per_round", "keep_history", "batch_axis"),
+            donate_argnums=donate,
+        )
+
+    def run(self, state: EngineState, batches, qs, lams=None, comm_batches=None,
+            qbars=None, hyper=None, batch_per_round: bool = True,
+            keep_history: bool = False, batch_axis: Optional[int] = 0):
+        """Execute E experiments x K rounds in ONE dispatch.
+
+        qs:         int [E, K, W] — device-sampled (straggler_jax) or host
+                    numpy; either way it is uploaded once for the whole grid.
+        batches:    leaves [E, K, W, q_max, ...] (batch_axis=0) or shared
+                    [K, W, q_max, ...] (batch_axis=None).  With
+                    batch_per_round=False drop the K axis (static blocks).
+        lams:       optional [E, K, W] explicit combine weights.
+        hyper:      optional [E] array consumed by opt_factory.
+        Returns (state', metrics) with metrics leaves stacked [E, K, ...]
+        (+ per-round arena history [E, K, N] when keep_history=True).
+        """
+        if hyper is not None and self.opt_factory is None:
+            raise ValueError("hyper given but SweepEngine has no opt_factory")
+        if self._driver is None:
+            self._driver = self._make_driver()
+        self.dispatch_count += 1
+        hyper_in = jnp.asarray(hyper, jnp.float32) if hyper is not None else None
+        return self._driver(
+            state, batches, jnp.asarray(qs, jnp.int32), lams, comm_batches,
+            qbars, hyper_in, batch_per_round, keep_history, batch_axis
+        )
+
+    # -- exits ---------------------------------------------------------------
+    def finalize(self, state: EngineState, e: int):
+        """Experiment e's (params, opt_state) pytrees."""
+        one = EngineState(arena=state.arena[e], opt_arena=state.opt_arena[e],
+                          rstep=state.rstep[e])
+        return self.engine.finalize(one)
+
+    def params_of(self, state: EngineState, e: int) -> PyTree:
+        return self.finalize(state, e)[0]

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
   weighted_combine  the Anytime master combine (Alg 1 l.15) — per-round
-                    full-parameter bandwidth hot-spot
+                    full-parameter bandwidth hot-spot (lambda via scalar
+                    prefetch)
+  fused_round       masked local-SGD steps + weighted combine as ONE kernel
+                    for the arena linreg round: the [W, D] iterate stack
+                    stays VMEM-resident instead of round-tripping HBM
   flash_attention   blockwise prefill/training attention (causal + sliding)
   decode_attention  FlashDecoding-style 1-token attention vs a long cache
   ssm_scan          chunked Mamba selective scan (hymba)

@@ -1,0 +1,194 @@
+"""Pallas TPU kernel: one FUSED Anytime round for the arena linreg workload.
+
+The unfused engine round is two HBM passes over the [W, N] iterate stack:
+the local-SGD scan materializes every worker's final iterate to HBM, and
+`weighted_combine` immediately reads the whole stack back to reduce it —
+2 * W * N * 4 bytes of round-trip traffic per round that exists ONLY
+because the scan and the combine are separate kernels.  This kernel runs
+both phases in one `pallas_call`:
+
+  grid = (q_max,)  — one sequential grid step per local-SGD step t
+  X scratch [W, D] — every worker's iterate, VMEM-RESIDENT for the whole
+                     round; initialized from x0 at t == 0
+  step t           — stream this step's microbatch tile A_t [W, B, D],
+                     y_t [W, B] from HBM, compute the linreg gradient
+                     g_v = (2/B) A_t^T (A_t x_v - y_t), and apply the
+                     q_v-MASKED update x_v -= lr_t * g_v (workers with
+                     t >= q_v "ran out of time": identity, Alg 2)
+  epilogue         — at t == q_max-1 reduce the resident stack with the
+                     Theorem-3 weights: out = sum_v lam_v x_v (Alg 1 l.15)
+
+HBM traffic: the microbatch stream (unavoidable; read once), x0 (D), the
+combined iterate out (D), and per-worker loss sums (W).  The [W, N] stack
+never touches HBM.  q, lambda and the per-step learning rates ride in SMEM
+via scalar prefetch (`pltpu.PrefetchScalarGridSpec`) so no grid step
+re-fetches them from HBM; `scalar_prefetch=False` is the interpret-safe
+fallback (the same kernel body with the scalars as plain inputs) for
+environments without scalar-prefetch support.  Both paths run under
+interpret=True in the CPU tests.
+
+This is workload-specialized by design: it assumes the flat-arena linreg
+round (params = one [D] vector, loss = mean squared residual, stateless
+SGD).  `RoundEngine(fused=...)` validates exactly those conditions and
+falls back loudly otherwise; parity with the unfused engine round is
+pinned by tests/test_fused_round.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _round_kernel(b_real: int,
+                  q_ref, lam_ref, lrs_ref,        # scalar-prefetch / SMEM
+                  x0_ref, a_ref, y_ref,           # tensor inputs
+                  xout_ref, loss_ref,             # outputs
+                  X):                             # VMEM scratch [W, D]
+    t = pl.program_id(0)
+    n_steps = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _init():
+        X[...] = jnp.broadcast_to(x0_ref[...][None, :], X.shape)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = X[...]                                    # [W, D]
+    a = a_ref[...][:, 0]                          # [W, B, D]
+    yb = y_ref[...][:, 0]                         # [W, B]
+    active = (t < q_ref[...]).astype(jnp.float32)  # [W]
+
+    # linreg residual/gradient at the CURRENT iterate (loss is measured
+    # before the update, matching local_sgd's value_and_grad ordering)
+    r = jnp.einsum("wbd,wd->wb", a, x, preferred_element_type=jnp.float32) - yb
+    loss_t = jnp.sum(r * r, axis=1) / b_real
+    g = (2.0 / b_real) * jnp.einsum(
+        "wb,wbd->wd", r, a, preferred_element_type=jnp.float32
+    )
+
+    lr_t = lrs_ref[t]
+    X[...] = x - (active * lr_t)[:, None] * g
+    loss_ref[...] += active * loss_t
+
+    @pl.when(t == n_steps - 1)
+    def _epilogue():
+        lam = lam_ref[...].astype(jnp.float32)    # [W]
+        xout_ref[...] = jnp.sum(lam[:, None] * X[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "scalar_prefetch"))
+def fused_round(
+    a: jax.Array,     # [W, Q, B, D] f32 microbatch design blocks
+    y: jax.Array,     # [W, Q, B]    f32 microbatch targets
+    x0: jax.Array,    # [D]          f32 round-start iterate
+    q: jax.Array,     # [W]          int32 realized step counts
+    lam: jax.Array,   # [W]          f32 combine weights (sum to 1)
+    lrs: jax.Array,   # [Q] or scalar f32 per-step learning rates
+    interpret: bool = False,
+    scalar_prefetch: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused masked-SGD + weighted-combine round.
+
+    Returns (x_out [D] f32, loss_sums [W] f32) where loss_sums[v] is the
+    sum of worker v's ACTIVE per-step mean-squared losses (divide by
+    max(q_v, 1) for the local_sgd mean-loss convention).
+
+    Compiled-path padding: D -> x128 lanes, B -> x8 sublanes, W -> x8.
+    Zero-padded batch rows produce exactly zero residual and gradient, pad
+    workers carry q = lam = 0, and pad lanes of x0 are zero, so padding
+    changes no result bit; outputs are sliced back to true shapes.
+    """
+    w, n_steps, b, d = a.shape
+    lrs = jnp.broadcast_to(jnp.asarray(lrs, jnp.float32), (n_steps,))
+    if not interpret:
+        wp, bp, dp = _round_up(w, 8), _round_up(b, 8), _round_up(d, 128)
+        a = jnp.pad(a, ((0, wp - w), (0, 0), (0, bp - b), (0, dp - d)))
+        y = jnp.pad(y, ((0, wp - w), (0, 0), (0, bp - b)))
+        x0 = jnp.pad(x0, (0, dp - d))
+        q = jnp.pad(q, (0, wp - w))
+        lam = jnp.pad(lam, (0, wp - w))
+    wp, _, bp, dp = a.shape
+
+    kernel = functools.partial(_round_kernel, b)
+    out_shape = (
+        jax.ShapeDtypeStruct((dp,), jnp.float32),
+        jax.ShapeDtypeStruct((wp,), jnp.float32),
+    )
+    scratch = [pltpu.VMEM((wp, dp), jnp.float32)]
+    tensor_specs = dict(
+        in_specs=[
+            pl.BlockSpec((dp,), lambda t, *refs: (0,)),
+            pl.BlockSpec((wp, 1, bp, dp), lambda t, *refs: (0, t, 0, 0)),
+            pl.BlockSpec((wp, 1, bp), lambda t, *refs: (0, t, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((dp,), lambda t, *refs: (0,)),
+            pl.BlockSpec((wp,), lambda t, *refs: (0,)),
+        ),
+    )
+
+    q32 = q.astype(jnp.int32)
+    lam32 = lam.astype(jnp.float32)
+    if not scalar_prefetch:
+        # interpret-safe fallback: scalars as plain (whole-array) inputs;
+        # the shared index maps take (t, *scalar_refs) and *refs is simply
+        # empty here.
+        x_out, losses = pl.pallas_call(
+            kernel,
+            grid=(n_steps,),
+            in_specs=[
+                pl.BlockSpec((wp,), lambda t: (0,)),
+                pl.BlockSpec((wp,), lambda t: (0,)),
+                pl.BlockSpec((n_steps,), lambda t: (0,)),
+                *tensor_specs["in_specs"],
+            ],
+            out_specs=tensor_specs["out_specs"],
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(q32, lam32, lrs, x0, a, y)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_steps,),
+            in_specs=tensor_specs["in_specs"],
+            out_specs=tensor_specs["out_specs"],
+            scratch_shapes=scratch,
+        )
+        x_out, losses = pl.pallas_call(
+            kernel, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(q32, lam32, lrs, x0, a, y)
+    return x_out[:d], losses[:w]
+
+
+def fused_round_ref(a, y, x0, q, lam, lrs):
+    """Pure-jnp oracle: the same masked scan + combine, unfused."""
+    n_steps, b = a.shape[1], a.shape[2]
+    lrs = jnp.broadcast_to(jnp.asarray(lrs, jnp.float32), (n_steps,))
+
+    def worker(a_v, y_v, q_v):
+        def body(carry, xs):
+            x, loss_acc = carry
+            a_t, y_t, t, lr_t = xs
+            act = (t < q_v).astype(jnp.float32)
+            r = a_t @ x - y_t
+            loss = jnp.sum(r * r) / b
+            g = (2.0 / b) * (a_t.T @ r)
+            return (x - act * lr_t * g, loss_acc + act * loss), None
+
+        (x_fin, loss_sum), _ = jax.lax.scan(
+            body, (x0, jnp.zeros((), jnp.float32)),
+            (a_v, y_v, jnp.arange(n_steps), lrs),
+        )
+        return x_fin, loss_sum
+
+    xs, losses = jax.vmap(worker)(a, y, q)
+    return jnp.einsum("w,wd->d", lam.astype(jnp.float32), xs), losses

@@ -10,6 +10,15 @@ scaled-add passes (which would read the output W times).
 
 Tile budget: W<=32 workers x BN=4096 lanes x 4B = 512 KiB in VMEM — well
 under the ~16 MiB/core budget, leaving room for double buffering.
+
+Lambda placement: the weights are W floats consumed identically by every
+grid step, so the default path rides them in via SCALAR PREFETCH
+(`pltpu.PrefetchScalarGridSpec` -> SMEM) — fetched once for the whole
+kernel instead of a [W, 1] VMEM block re-fetched on each of the N/BN grid
+steps.  `scalar_prefetch=False` is the interpret-safe fallback: the same
+kernel body with lambda as a plain input, for environments whose Pallas
+interpreter (or backend) lacks scalar-prefetch support.  Both paths run
+under interpret=True here (CPU tests cover both).
 """
 from __future__ import annotations
 
@@ -18,26 +27,31 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_N = 4096
 
 
 def _combine_kernel(lam_ref, x_ref, o_ref):
-    # x_ref: [W, BN] tile (any float dtype); lam_ref: [W, 1] f32; o_ref: [BN].
-    # The multiply-accumulate always runs in f32 regardless of the input
-    # dtype — a bf16 arena stack loses no precision in the reduction.
+    # x_ref: [W, BN] tile (any float dtype); lam_ref: [W] f32 (SMEM when
+    # scalar-prefetched, VMEM in the fallback); o_ref: [BN].  The multiply-
+    # accumulate always runs in f32 regardless of the input dtype — a bf16
+    # arena stack loses no precision in the reduction.
     x = x_ref[...].astype(jnp.float32)
-    lam = lam_ref[...].astype(jnp.float32)  # [W, 1]
+    lam = lam_ref[...].reshape(-1, 1).astype(jnp.float32)  # [W, 1]
     o_ref[...] = jnp.sum(x * lam, axis=0).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret", "out_dtype"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "out_dtype", "scalar_prefetch")
+)
 def weighted_combine(
     stacked: jax.Array,  # [W, N] flat parameter stack (f32/bf16/f16)
     lam: jax.Array,  # [W]
     block_n: int = BLOCK_N,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    scalar_prefetch: bool = True,
 ) -> jax.Array:
     """sum_v lam_v x_v with VMEM tiling; f32 accumulate, [N] out_dtype.
 
@@ -52,15 +66,30 @@ def weighted_combine(
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
     n_pad = n + pad
     grid = (n_pad // block_n,)
-    out = pl.pallas_call(
-        _combine_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((w, 1), lambda i: (0, 0)),
-            pl.BlockSpec((w, block_n), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
-        interpret=interpret,
-    )(lam.reshape(w, 1).astype(jnp.float32), stacked)
+    lam_f32 = lam.reshape(w).astype(jnp.float32)
+    if not scalar_prefetch:
+        out = pl.pallas_call(
+            _combine_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((w,), lambda i: (0,)),
+                pl.BlockSpec((w, block_n), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
+            interpret=interpret,
+        )(lam_f32, stacked)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((w, block_n), lambda i, lam_ref: (0, i))],
+            out_specs=pl.BlockSpec((block_n,), lambda i, lam_ref: (i,)),
+        )
+        out = pl.pallas_call(
+            _combine_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((n_pad,), out_dtype),
+            interpret=interpret,
+        )(lam_f32, stacked)
     return out[:n]

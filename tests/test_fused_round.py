@@ -1,0 +1,152 @@
+"""Fused round kernel (kernels/fused_round) vs the unfused engine round.
+
+All Pallas execution is interpret-mode (CPU); the contract under test is
+semantic: one fused kernel == masked local_sgd scan + weighted_combine,
+including q_v masking, q_v = 0 dropouts, LR schedules, and the K-round
+driver / SweepEngine integrations behind RoundEngine(fused=...)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import RoundEngine, anytime_policy, async_policy, sync_policy
+from repro.core.sweep import SweepEngine
+from repro.data.linreg import make_linreg
+from repro.kernels.fused_round import fused_round, fused_round_ref
+from repro.optim import adam, sgd
+
+W, QMAX, B, D = 6, 5, 8, 12
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(600, D, seed=7)
+
+
+def _batch(lin, rng, w=W, q=QMAX, b=B, k=None):
+    shape = (w, q, b) if k is None else (k, w, q, b)
+    idx = rng.integers(0, lin.m, size=shape)
+    return (jnp.asarray(lin.A[idx], jnp.float32), jnp.asarray(lin.y[idx], jnp.float32))
+
+
+def _params(rng):
+    return {"x": jnp.asarray(rng.standard_normal(D), jnp.float32)}
+
+
+def test_kernel_matches_ref(lin, rng):
+    """Interpret-mode kernel == pure-jnp scan oracle, with q=0 workers."""
+    a, y = _batch(lin, rng)
+    x0 = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    q = jnp.asarray([5, 3, 0, 1, 4, 2], jnp.int32)
+    lam = q / jnp.maximum(jnp.sum(q), 1)
+    lrs = jnp.full((QMAX,), 0.01, jnp.float32)
+    x_k, l_k = fused_round(a, y, x0, q, lam, lrs, interpret=True)
+    x_r, l_r = fused_round_ref(a, y, x0, q, lam, lrs)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r), rtol=1e-5, atol=1e-6)
+    # q = 0 worker accumulated zero loss and (weight 0) no combine mass
+    assert float(l_k[2]) == 0.0
+
+
+def test_kernel_scalar_prefetch_fallback_agrees(lin, rng):
+    """scalar_prefetch=False (plain-input fallback) == prefetch path."""
+    a, y = _batch(lin, rng)
+    x0 = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    q = jnp.asarray([2, 5, 1, 0, 3, 4], jnp.int32)
+    lam = q / jnp.maximum(jnp.sum(q), 1)
+    x_p, l_p = fused_round(a, y, x0, q, lam, 0.01, interpret=True)
+    x_f, l_f = fused_round(a, y, x0, q, lam, 0.01, interpret=True,
+                           scalar_prefetch=False)
+    np.testing.assert_allclose(np.asarray(x_p), np.asarray(x_f), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_f), rtol=1e-6)
+
+
+def test_fused_engine_round_matches_unfused(lin, rng):
+    """RoundEngine(fused='interpret') round == default engine round."""
+    params = _params(rng)
+    batch = _batch(lin, rng)
+    q = jnp.asarray([4, 2, 0, 5, 1, 3], jnp.int32)
+    eng_u = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    eng_f = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                        fused="interpret")
+    st_u, m_u = eng_u.round(eng_u.init_state(params, ()), batch, q)
+    st_f, m_f = eng_f.round(eng_f.init_state(params, ()), batch, q)
+    np.testing.assert_allclose(np.asarray(st_f.arena), np.asarray(st_u.arena),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m_f["loss"]), float(m_u["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_f["lambdas"]),
+                               np.asarray(m_u["lambdas"]), rtol=1e-6)
+
+
+def test_fused_uniform_weighting(lin, rng):
+    """Sync-style uniform weights route through the same fused kernel."""
+    params = _params(rng)
+    batch = _batch(lin, rng)
+    q = jnp.full((W,), QMAX, jnp.int32)
+    eng_u = RoundEngine(_loss, sgd(0.02), W, QMAX, sync_policy())
+    eng_f = RoundEngine(_loss, sgd(0.02), W, QMAX, sync_policy(), fused="interpret")
+    st_u, _ = eng_u.round(eng_u.init_state(params, ()), batch, q)
+    st_f, _ = eng_f.round(eng_f.init_state(params, ()), batch, q)
+    np.testing.assert_allclose(np.asarray(st_f.arena), np.asarray(st_u.arena),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_lr_schedule(lin, rng):
+    """Per-step LR schedules flow into the kernel via the lrs vector and
+    advance with the round counter across driver rounds."""
+    sched = lambda step: 0.02 / (1.0 + 0.1 * step.astype(jnp.float32))
+    K = 3
+    params = _params(rng)
+    batches = _batch(lin, rng, k=K)
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    eng_u = RoundEngine(_loss, sgd(sched), W, QMAX, anytime_policy())
+    eng_f = RoundEngine(_loss, sgd(sched), W, QMAX, anytime_policy(),
+                        fused="interpret")
+    _, out_u = eng_u.run(eng_u.init_state(params, ()), batches, q_mat,
+                         keep_history=True)
+    _, out_f = eng_f.run(eng_f.init_state(params, ()), batches, q_mat,
+                         keep_history=True)
+    np.testing.assert_allclose(np.asarray(out_f["arena"]),
+                               np.asarray(out_u["arena"]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_f["loss"]),
+                               np.asarray(out_u["loss"]), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_through_sweep_engine(lin, rng):
+    """fused= composes with the [E]-batched SweepEngine driver."""
+    E, K = 3, 4
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(E, K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    eng_u = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    eng_f = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                        fused="interpret")
+    sw_u, sw_f = SweepEngine(eng_u), SweepEngine(eng_f)
+    _, out_u = sw_u.run(sw_u.init_state(params, E), batches, qs, keep_history=True)
+    _, out_f = sw_f.run(sw_f.init_state(params, E), batches, qs, keep_history=True)
+    np.testing.assert_allclose(np.asarray(out_f["arena"]),
+                               np.asarray(out_u["arena"]), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_validation():
+    with pytest.raises(ValueError):
+        RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy(), fused="bogus")
+    with pytest.raises(ValueError):  # affine policy has no fused form
+        RoundEngine(_loss, sgd(0.1), W, QMAX, async_policy(), fused="interpret")
+    with pytest.raises(ValueError):  # stateful optimizer
+        eng = RoundEngine(_loss, adam(0.1), W, QMAX, anytime_policy(),
+                          fused="interpret")
+        eng.init_state({"x": jnp.zeros(D, jnp.float32)})
+    with pytest.raises(ValueError):  # multi-leaf params
+        eng = RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy(),
+                          fused="interpret")
+        eng.init_state({"x": jnp.zeros(D), "b": jnp.zeros(1)}, ())

@@ -1,0 +1,107 @@
+"""Device-side q sampling (core/straggler_jax.py) vs the numpy oracle.
+
+jax and numpy use different bit generators, so the contract is
+DISTRIBUTIONAL: means and tail quantiles of the realized step counts must
+agree, and the structural rules (persistent ids, clipping, hetero speeds
+fixed per experiment) must hold exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.straggler import StragglerModel
+from repro.core import straggler_jax as sjx
+
+KINDS = ["constant", "shifted_exp", "pareto", "bimodal"]
+
+
+def _oracle_q(model, n_draws, n_workers, budget, max_steps, seed=0):
+    rng = np.random.default_rng(seed)
+    return model.realize_steps_matrix(rng, n_draws, n_workers, budget, max_steps)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_q_distribution_matches_numpy_oracle(kind):
+    """Mean and upper-tail quantiles of q match the host StragglerModel."""
+    model = StragglerModel(kind=kind, rate=1.0, alpha=2.5, p_slow=0.2)
+    budget, qmax, w = 12.0, 24, 8
+    dev = np.asarray(
+        sjx.sample_steps_matrix(
+            model, jax.random.PRNGKey(0), 4000, w, budget, qmax
+        )
+    ).ravel()
+    ora = _oracle_q(model, 4000, w, budget, qmax).ravel()
+    assert dev.min() >= 0 and dev.max() <= qmax
+    np.testing.assert_allclose(dev.mean(), ora.mean(), rtol=0.05)
+    for pct in (50, 90, 99):
+        d, o = np.percentile(dev, pct), np.percentile(ora, pct)
+        assert abs(d - o) <= max(1.0, 0.05 * o), (pct, d, o)
+
+
+def test_persistent_ids_deterministic_and_zero():
+    """The last ceil(frac*W) workers never step — same id rule as numpy."""
+    model = StragglerModel(kind="shifted_exp", persistent_frac=0.25)
+    w = 10
+    k = model.n_persistent(w)
+    q = np.asarray(
+        sjx.sample_steps_tensor(model, jax.random.PRNGKey(1), 6, 20, w, 50.0, 30)
+    )
+    assert q.shape == (6, 20, w)
+    assert np.all(q[..., w - k :] == 0)
+    assert np.all(q[..., : w - k].mean(axis=(1, 2)) > 0)
+
+
+def test_hetero_speed_fixed_per_experiment():
+    """worker_speed in [1, 1+spread]; constant-kind q depends only on the
+    per-experiment speed, so it must be identical across rounds."""
+    model = StragglerModel(kind="constant", hetero_spread=2.0)
+    s = np.asarray(sjx.sample_worker_speed(model, jax.random.PRNGKey(2), 64))
+    assert np.all(s >= 1.0) and np.all(s <= 3.0)
+    q = np.asarray(
+        sjx.sample_steps_tensor(model, jax.random.PRNGKey(3), 4, 8, 6, 20.0, 100)
+    )
+    # same fleet all rounds within an experiment...
+    assert np.all(q == q[:, :1, :])
+    # ...but a fresh fleet per experiment
+    assert any(not np.array_equal(q[0], q[e]) for e in range(1, 4))
+
+
+def test_budget_array_is_a_t_sweep():
+    """[E] budgets: each experiment realizes its own T; q is monotone in T
+    for the constant kind (same fleet, more time, never fewer steps)."""
+    model = StragglerModel(kind="constant")
+    budgets = jnp.asarray([2.0, 4.0, 8.0], jnp.float32)
+    q = np.asarray(
+        sjx.sample_steps_tensor(model, jax.random.PRNGKey(4), 3, 5, 4, budgets, 100)
+    )
+    assert q.shape == (3, 5, 4)
+    np.testing.assert_array_equal(q[0], np.full((5, 4), 2))
+    np.testing.assert_array_equal(q[2], np.full((5, 4), 8))
+
+
+def test_max_steps_clip_and_jit():
+    """The sampler jits cleanly (the whole grid draw is one dispatch) and
+    respects the max_steps envelope."""
+    model = StragglerModel(kind="pareto", alpha=1.1)
+    f = jax.jit(
+        lambda key: sjx.sample_steps_tensor(model, key, 8, 16, 10, 100.0, 24)
+    )
+    q = np.asarray(f(jax.random.PRNGKey(5)))
+    assert q.shape == (8, 16, 10)
+    assert q.min() >= 0 and q.max() <= 24
+    # heavy-tail sanity: with T=100 and base 1s some workers hit the cap
+    assert (q == 24).any()
+
+
+def test_iter_times_persistent_inf():
+    model = StragglerModel(kind="shifted_exp", persistent_frac=0.5)
+    t = np.asarray(sjx.sample_iter_times(model, jax.random.PRNGKey(6), 4))
+    assert np.isinf(t[2:]).all() and np.isfinite(t[:2]).all()
+
+
+def test_unknown_kind_raises():
+    model = StragglerModel(kind="constant")
+    object.__setattr__(model, "kind", "bogus")
+    with pytest.raises(ValueError):
+        sjx.sample_steps_matrix(model, jax.random.PRNGKey(0), 2, 2, 1.0, 4)

@@ -1,0 +1,219 @@
+"""SweepEngine semantics: the vmapped [E]-grid must agree with a Python
+loop of RoundEngine.run per experiment to float tolerance, run as ONE
+trace / ONE dispatch, and support shared batches, explicit lambdas,
+per-experiment hyperparameters and the generalized policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    RoundEngine,
+    anytime_policy,
+    fnb_policy,
+    generalized_policy,
+)
+from repro.core.straggler import StragglerModel
+from repro.core import straggler_jax as sjx
+from repro.core.sweep import SweepEngine
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+
+W, QMAX, B, D = 6, 4, 8, 12
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(800, D, seed=5)
+
+
+def _batches(lin, rng, e, k, w=W, q=QMAX, b=B):
+    """Per-experiment microbatch streams, leaves [E, K, W, q, b(, d)]."""
+    idx = rng.integers(0, lin.m, size=(e, k, w, q, b))
+    return (jnp.asarray(lin.A[idx], jnp.float32), jnp.asarray(lin.y[idx], jnp.float32))
+
+
+def _params(rng):
+    return {"x": jnp.asarray(rng.standard_normal(D), jnp.float32)}
+
+
+def _loop_reference(engine, params, batches, qs, lams=None, **kw):
+    """E sequential engine.run calls — the dispatch-per-experiment oracle."""
+    arenas, losses = [], []
+    e = np.asarray(qs).shape[0]
+    for i in range(e):
+        st = engine.init_state(params, ())
+        b_i = jax.tree.map(lambda t: t[i], batches)
+        lam_i = None if lams is None else lams[i]
+        st, outs = engine.run(st, b_i, np.asarray(qs)[i], lams=lam_i,
+                              keep_history=True, **kw)
+        arenas.append(np.asarray(outs["arena"]))
+        losses.append(np.asarray(outs["loss"]))
+    return np.stack(arenas), np.stack(losses)
+
+
+def test_sweep_matches_engine_loop(lin, rng):
+    """[E]-vmapped grid == Python loop of RoundEngine.run, per experiment."""
+    E, K = 3, 5
+    params = _params(rng)
+    batches = _batches(lin, rng, E, K)
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    st, outs = sweep.run(sweep.init_state(params, E), batches, qs,
+                         keep_history=True)
+    ref_arena, ref_loss = _loop_reference(engine, params, batches, qs)
+    assert outs["arena"].shape == (E, K, D)
+    np.testing.assert_allclose(np.asarray(outs["arena"]), ref_arena,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(outs["loss"]), ref_loss,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st.rstep), np.full(E, K))
+
+
+def test_sweep_single_trace_single_dispatch(lin, rng):
+    E, K = 4, 3
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    params = _params(rng)
+    batches = _batches(lin, rng, E, K)
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    st, _ = sweep.run(sweep.init_state(params, E), batches, qs)
+    assert sweep.trace_count == 1, "E experiments must compile once"
+    assert sweep.dispatch_count == 1, "E experiments must be one dispatch"
+    st, _ = sweep.run(st, batches, qs)
+    assert sweep.trace_count == 1 and sweep.dispatch_count == 2
+
+
+def test_shared_batches_broadcast(lin, rng):
+    """batch_axis=None: one [K, W, ...] stream feeds every experiment —
+    identical to physically replicating it E times."""
+    E, K = 3, 4
+    params = _params(rng)
+    shared = jax.tree.map(lambda t: t[0], _batches(lin, rng, 1, K))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    st_s, outs_s = sweep.run(sweep.init_state(params, E), shared, qs,
+                             keep_history=True, batch_axis=None)
+    replicated = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (E,) + t.shape), shared)
+    st_r, outs_r = sweep.run(sweep.init_state(params, E), replicated, qs,
+                             keep_history=True)
+    np.testing.assert_allclose(np.asarray(outs_s["arena"]),
+                               np.asarray(outs_r["arena"]), rtol=1e-6, atol=1e-7)
+
+
+def test_per_experiment_lams_explicit_policy(lin, rng):
+    """Explicit combine weights batch over the experiment axis (the
+    gradient-coding decode-vector path)."""
+    from repro.core.engine import RoundPolicy
+
+    E, K = 2, 3
+    params = _params(rng)
+    batches = _batches(lin, rng, E, K)
+    qs = rng.integers(1, QMAX + 1, size=(E, K, W))
+    lams = jnp.asarray(rng.random((E, K, W)) * 0.3, jnp.float32)
+    policy = RoundPolicy(name="exp", weighting="explicit")
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, policy)
+    sweep = SweepEngine(engine)
+    st, outs = sweep.run(sweep.init_state(params, E), batches, qs, lams=lams,
+                         keep_history=True)
+    ref_arena, _ = _loop_reference(engine, params, batches, qs, lams=lams)
+    np.testing.assert_allclose(np.asarray(outs["arena"]), ref_arena,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_hyper_lr_sweep(lin, rng):
+    """opt_factory: per-experiment learning rates inside one jit == E
+    engines each built with its own sgd(lr)."""
+    E, K = 3, 4
+    lrs = np.asarray([0.005, 0.02, 0.08], np.float32)
+    params = _params(rng)
+    batches = _batches(lin, rng, E, K)
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine, opt_factory=lambda lr: sgd(lr))
+    st, outs = sweep.run(sweep.init_state(params, E), batches, qs, hyper=lrs,
+                         keep_history=True)
+    for i, lr in enumerate(lrs):
+        eng_i = RoundEngine(_loss, sgd(float(lr)), W, QMAX, anytime_policy())
+        st_i = eng_i.init_state(params, ())
+        b_i = jax.tree.map(lambda t: t[i], batches)
+        _, ref = eng_i.run(st_i, b_i, np.asarray(qs)[i], keep_history=True)
+        np.testing.assert_allclose(np.asarray(outs["arena"][i]),
+                                   np.asarray(ref["arena"]),
+                                   rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        SweepEngine(engine).run(sweep.init_state(params, E), batches, qs,
+                                hyper=lrs)
+
+
+def test_fnb_policy_sweep(lin, rng):
+    """Uniform-weight policy batches too (q carries the drop mask)."""
+    E, K = 2, 3
+    params = _params(rng)
+    batches = _batches(lin, rng, E, K)
+    masks = rng.random((E, K, W)) > 0.3
+    qs = np.where(masks, QMAX, 0)
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, fnb_policy())
+    sweep = SweepEngine(engine)
+    _, outs = sweep.run(sweep.init_state(params, E), batches, qs,
+                        keep_history=True)
+    ref_arena, _ = _loop_reference(engine, params, batches, qs)
+    np.testing.assert_allclose(np.asarray(outs["arena"]), ref_arena,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_generalized_policy_sweep(lin, rng):
+    """The [E, W, N] stacked-arena layout of the Sec.-V policy vmaps."""
+    E, K, QC = 2, 3, 2
+    params = _params(rng)
+    batches = _batches(lin, rng, E, K)
+    comms = _batches(lin, rng, E, K, q=QC)
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    qbars = jnp.asarray(rng.integers(0, QC + 1, size=(E, K, W)), jnp.int32)
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, generalized_policy(),
+                         max_comm_steps=QC)
+    sweep = SweepEngine(engine)
+    st, outs = sweep.run(sweep.init_state(params, E), batches, qs,
+                         comm_batches=comms, qbars=qbars, keep_history=True)
+    assert outs["arena"].shape == (E, K, W, D)
+    for i in range(E):
+        st_i = engine.init_state(params, ())
+        b_i = jax.tree.map(lambda t: t[i], batches)
+        c_i = jax.tree.map(lambda t: t[i], comms)
+        _, ref = engine.run(st_i, b_i, np.asarray(qs)[i], comm_batches=c_i,
+                            qbars=qbars[i], keep_history=True)
+        np.testing.assert_allclose(np.asarray(outs["arena"][i]),
+                                   np.asarray(ref["arena"]),
+                                   rtol=1e-5, atol=1e-6)
+    p0, _ = sweep.finalize(st, 0)
+    assert p0["x"].shape == (D,)
+
+
+def test_device_sampled_qs_feed_sweep(lin, rng):
+    """End-to-end zero-host-sync path: q born on device (straggler_jax),
+    consumed by the sweep without ever crossing the host."""
+    E, K = 4, 6
+    model = StragglerModel(kind="shifted_exp", rate=1.0)
+    qs = sjx.sample_steps_tensor(model, jax.random.PRNGKey(0), E, K, W,
+                                 budget_t=3.0, max_steps=QMAX)
+    assert isinstance(qs, jax.Array)
+    params = _params(rng)
+    shared = jax.tree.map(lambda t: t[0], _batches(lin, rng, 1, K))
+    engine = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    st, outs = sweep.run(sweep.init_state(params, E), shared, qs,
+                         keep_history=True, batch_axis=None)
+    assert sweep.dispatch_count == 1
+    assert np.isfinite(np.asarray(outs["loss"])).all()
+    # different straggler realizations -> experiments genuinely diverge
+    final = np.asarray(outs["arena"][:, -1])
+    assert np.ptp(final, axis=0).max() > 0

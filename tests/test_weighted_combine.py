@@ -52,6 +52,21 @@ def test_bf16_out_dtype():
     )
 
 
+@pytest.mark.parametrize("scalar_prefetch", [True, False])
+def test_lambda_scalar_prefetch_paths_agree(scalar_prefetch):
+    """The PrefetchScalarGridSpec path (lam in SMEM, fetched once) and the
+    interpret-safe plain-input fallback compute the same combine."""
+    rng = np.random.default_rng(5)
+    w, n = 9, 3000  # 3 grid steps at block_n=1024: lam reused across steps
+    x = jnp.asarray(rng.standard_normal((w, n)).astype(np.float32))
+    lam = jnp.asarray(rng.random(w).astype(np.float32))
+    out = weighted_combine(x, lam, block_n=1024, interpret=True,
+                           scalar_prefetch=scalar_prefetch)
+    exp = ref.weighted_combine_ref(x, lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)
+
+
 def test_arena_combine_matches_tree_combine():
     """ONE kernel call over the flat [W, N] arena == per-leaf tree-map."""
     rng = np.random.default_rng(3)
