@@ -17,9 +17,14 @@ Randomness layout per scheme:
     order statistic of the finishing times, which the HOST needs to build
     the x-axis anyway, so their per-experiment draws stay on the numpy
     oracle (one [E, K, W] upload for the whole grid, not one per round).
-  * batches are drawn once and SHARED across the experiment axis
-    (batch_axis=None): bands isolate straggler randomness, and a 16-seed
-    grid costs one batch stack of HBM, not 16.
+  * batches are INDEX-SOURCED (DESIGN.md §7): the linreg corpus lives on
+    device once (SimSetup.corpus) and each scheme ships one shared
+    [K, W, q, b] int32 id stream (batch_axis=None) — bands isolate
+    straggler randomness, the grid costs index bytes of upload, and the
+    scan body gathers each round's microbatches inside the jit.  The ids
+    are the SAME numpy rng.choice draws the materialized path made, so
+    curves are unchanged.  Gradient coding keeps materialized stacks: its
+    static per-worker block tensors are the layout, not a sample draw.
 
 Scaled-down dims (CPU, single core): the paper's 500k x 1000 matrix is run
 as 50k x 100 by default; every structural parameter (N=10 workers, S, T
@@ -55,6 +60,7 @@ from repro.core.engine import (
 from repro.core.straggler import StragglerModel
 from repro.core import straggler_jax as sjx
 from repro.core.sweep import SweepEngine
+from repro.data.device import DeviceCorpus, IndexedBatches
 from repro.data.linreg import LinRegData, make_linreg
 from repro.optim import sgd
 
@@ -79,6 +85,9 @@ class SimSetup:
     )
     budget_t: float = 12.0  # seconds per anytime epoch (base_iter_time = 1)
     seed: int = 0
+    _corpus: Optional["DeviceCorpus"] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def speeds(self):
@@ -90,9 +99,27 @@ class SimSetup:
         s = self.s if s is None else s
         return [worker_sample_ids(v, self.data.m, self.n_workers, s) for v in range(self.n_workers)]
 
-    def batch(self, rng, pools, qmax=None):
+    @property
+    def corpus(self) -> DeviceCorpus:
+        """The (A, y) corpus on device — uploaded once per setup, shared by
+        every scheme's index stream (the loss takes (a, y) tuples)."""
+        if self._corpus is None:
+            self._corpus = DeviceCorpus((
+                jnp.asarray(self.data.A, jnp.float32),
+                jnp.asarray(self.data.y, jnp.float32),
+            ))
+        return self._corpus
+
+    def batch_indices(self, rng, pools, qmax=None) -> np.ndarray:
+        """One round's sample ids [W, q, b] (Algorithm 2 l.6 uniform draw)."""
         qmax = qmax or self.qmax
-        idx = np.stack([rng.choice(pools[v], size=(qmax, self.local_batch)) for v in range(self.n_workers)])
+        return np.stack([
+            rng.choice(pools[v], size=(qmax, self.local_batch))
+            for v in range(self.n_workers)
+        ])
+
+    def batch(self, rng, pools, qmax=None):
+        idx = self.batch_indices(rng, pools, qmax)
         return (jnp.asarray(self.data.A[idx], jnp.float32), jnp.asarray(self.data.y[idx], jnp.float32))
 
 
@@ -136,9 +163,18 @@ def _stack_batches(batches: list) -> tuple:
     return (jnp.stack([b[0] for b in batches]), jnp.stack([b[1] for b in batches]))
 
 
-def _shared_batches(setup: SimSetup, rng, pools, qmax=None):
-    """One [K, W, q, b(, d)] microbatch stream, shared by every experiment."""
-    return _stack_batches([setup.batch(rng, pools, qmax) for _ in range(setup.epochs)])
+def _shared_index_source(setup: SimSetup, rng, pools, qmax=None) -> IndexedBatches:
+    """One shared [K, W, q, b] id stream over the device-resident corpus.
+
+    The ids come from the same `batch_indices` draw `setup.batch` gathers
+    on host (per epoch, per worker), so an index-sourced run IS the
+    materialized run with the gather moved inside the jit — the engine
+    pins that bit-identity in tests/test_device_data.py.
+    """
+    idx = np.stack([
+        setup.batch_indices(rng, pools, qmax) for _ in range(setup.epochs)
+    ])
+    return setup.corpus.source(idx)
 
 
 def _history_x(engine: RoundEngine, hist: np.ndarray) -> np.ndarray:
@@ -188,7 +224,7 @@ def run_anytime(
                          policy, fused=fused)
     sweep = SweepEngine(engine)
     r = np.random.default_rng(setup.seed)
-    batches = _shared_batches(setup, r, setup.pools())
+    batches = _shared_index_source(setup, r, setup.pools())
     if fixed_q is not None:
         qs = np.broadcast_to(
             np.asarray(fixed_q, np.int64),
@@ -214,8 +250,8 @@ def run_generalized(setup: SimSetup, comm_frac: float = 0.5,
     sweep = SweepEngine(engine)
     pools = setup.pools()
     r = np.random.default_rng(setup.seed)
-    batches = _shared_batches(setup, r, pools)
-    comms = _shared_batches(setup, r, pools, qc)
+    batches = _shared_index_source(setup, r, pools)
+    comms = _shared_index_source(setup, r, pools, qc)
     key_q, key_qb = jax.random.split(jax.random.PRNGKey(setup.seed))
     qs = sjx.sample_steps_tensor(setup.straggler, key_q, n_seeds, setup.epochs,
                                  setup.n_workers, setup.budget_t, setup.qmax)
@@ -268,7 +304,7 @@ def run_sync(setup: SimSetup, n_seeds: int = 4) -> SweepCurves:
                          sync_policy())
     sweep = SweepEngine(engine)
     r = np.random.default_rng(setup.seed)
-    batches = _shared_batches(setup, r, setup.pools(0))  # no replication
+    batches = _shared_index_source(setup, r, setup.pools(0))  # no replication
     walls, _ = _host_epoch_draws(
         setup, n_seeds, setup.epochs,
         lambda rng, speeds: (sync_epoch_time(setup.straggler, rng,
@@ -286,7 +322,7 @@ def run_fnb(setup: SimSetup, n_drop: int, n_seeds: int = 4) -> SweepCurves:
                          fnb_policy())
     sweep = SweepEngine(engine)
     r = np.random.default_rng(setup.seed)
-    batches = _shared_batches(setup, r, setup.pools(0))  # FNB has no replication
+    batches = _shared_index_source(setup, r, setup.pools(0))  # FNB has no replication
     walls, masks = _host_epoch_draws(
         setup, n_seeds, setup.epochs,
         lambda rng, speeds: fnb_epoch_time(setup.straggler, rng,
@@ -309,7 +345,9 @@ def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1,
     every epoch of every seed is the exact coded step
     x' = x0 - lr * sum_v a_v c_v — through the SAME sweep driver as every
     other scheme.  Block data never changes, so the grid shares one static
-    batch (batch_per_round=False, batch_axis=None).
+    batch (batch_per_round=False, batch_axis=None) — the materialized-path
+    case of DESIGN.md §7: the [W, S+1, blk, ...] block tensors ARE the
+    code's layout, not a per-round sample draw.
     """
     from repro.core.assignment import worker_block_ids
 

@@ -1,0 +1,179 @@
+"""Data-plane benchmark: index-sourced vs materialized batch stacks.
+
+Quantifies DESIGN.md §7's contract at the LM trainer's workload shape:
+
+  * host->device bytes per round — the materialized path uploads the full
+    [K, W, q_max, b, seq] token/label/mask stack every window; the index
+    path uploads the corpus ONCE and then [K, W, q_max, b] int32 ids.
+  * max feasible driver window K under a fixed batch-plane HBM budget —
+    the materialized stack's memory scales with K, the index plane's is
+    K ids + ONE transient gathered round inside the scan.
+  * round-for-round parity + wall time on the linreg engine workload:
+    the same sample ids through both paths must produce bit-identical
+    trajectories (the gather moves inside the jit; the math is unchanged).
+
+Writes BENCH_data.json.  Acceptance (ISSUE 3): steady-state bytes/round
+ratio >= 10x at the LM shape — asserted here so CI bench-smoke catches a
+data-plane regression.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import RoundEngine, anytime_policy
+from repro.core.straggler import StragglerModel
+from repro.data.device import DeviceCorpus, sample_index_stream
+from repro.data.linreg import make_linreg
+from repro.data.pipeline import TokenBatcher
+from repro.data.synthetic import synthetic_tokens
+from repro.optim import sgd
+
+
+def _linreg_loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+def _lm_shape_accounting(n_seqs=2048, seq_len=128, workers=8, q_max=4,
+                         local_batch=4, window=8, budget_rounds=40,
+                         hbm_budget=2 << 30):
+    """Byte accounting at the reduced LM trainer's shape (no model run)."""
+    rng = np.random.default_rng(0)
+    toks = synthetic_tokens(rng, n_seqs, seq_len, vocab=256)
+    bt = TokenBatcher(toks, workers, 1, q_max, local_batch, seed=0)
+
+    stack = bt.rounds_batch(window)
+    mat_bytes = sum(v.nbytes for v in stack.values())
+    mat_per_round = mat_bytes / window
+
+    idx = bt.rounds_indices(window).astype(np.int32)
+    idx_per_round = idx.nbytes / window
+    corpus_bytes = sum(v.nbytes for v in bt.inner.arrays.values())
+
+    ratio = mat_per_round / idx_per_round
+    # rounds until the one-time corpus upload has paid for itself
+    break_even = corpus_bytes / (mat_per_round - idx_per_round)
+    amortized = (corpus_bytes / budget_rounds + idx_per_round)
+    # max driver window K inside the HBM budget: the materialized stack is
+    # resident for the whole window; the index plane keeps the corpus, the
+    # id stream, and ONE gathered round (freed each scan iteration)
+    max_k_mat = int(hbm_budget // mat_per_round)
+    max_k_idx = int((hbm_budget - corpus_bytes - mat_per_round) // idx_per_round)
+    return {
+        "shape": {"n_seqs": n_seqs, "seq_len": seq_len, "workers": workers,
+                  "q_max": q_max, "local_batch": local_batch, "window": window},
+        "materialized_bytes_per_round": mat_per_round,
+        "index_bytes_per_round": idx_per_round,
+        "bytes_per_round_ratio": ratio,
+        "corpus_bytes_once": corpus_bytes,
+        "corpus_break_even_rounds": break_even,
+        "amortized_index_bytes_per_round_at_budget": amortized,
+        "amortized_ratio_at_budget": mat_per_round / amortized,
+        "budget_rounds": budget_rounds,
+        "hbm_budget_bytes": hbm_budget,
+        "max_feasible_k_materialized": max_k_mat,
+        "max_feasible_k_indexed": max_k_idx,
+    }
+
+
+def _engine_parity_and_timing(m=50_000, d=64, workers=10, q_max=8,
+                              local_batch=8, rounds=16, s=1, repeats=3):
+    """Same ids through both planes: bit-identical rounds, timed walls."""
+    lin = make_linreg(m, d, seed=0)
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    idx = sample_index_stream(jax.random.PRNGKey(0), m, workers, s, rounds,
+                              q_max, local_batch)
+    idx.block_until_ready()
+    qs = StragglerModel(kind="shifted_exp", rate=1.0).realize_steps_matrix(
+        np.random.default_rng(0), rounds, workers, 4.0, q_max)
+    params = {"x": jnp.zeros(d, jnp.float32)}
+
+    eng_i = RoundEngine(_linreg_loss, sgd(5e-3), workers, q_max, anytime_policy())
+    eng_m = RoundEngine(_linreg_loss, sgd(5e-3), workers, q_max, anytime_policy())
+
+    hidx = np.asarray(idx)
+
+    def run_indexed():
+        src = corpus.source(idx)
+        st, outs = eng_i.run(eng_i.init_state(params, ()), src, qs)
+        return np.asarray(st.arena), np.asarray(outs["loss"])
+
+    def run_materialized():
+        # the stack is built AND uploaded per call — that is the cost the
+        # index plane deletes
+        mat = (jnp.asarray(lin.A[hidx], jnp.float32),
+               jnp.asarray(lin.y[hidx], jnp.float32))
+        st, outs = eng_m.run(eng_m.init_state(params, ()), mat, qs)
+        return np.asarray(st.arena), np.asarray(outs["loss"])
+
+    a_i, l_i = run_indexed()  # compile
+    a_m, l_m = run_materialized()
+    bit_identical = bool(np.array_equal(a_i, a_m) and np.array_equal(l_i, l_m))
+    max_loss_delta = float(np.max(np.abs(l_i - l_m)))
+
+    t_i = min(_timed(run_indexed) for _ in range(repeats))
+    t_m = min(_timed(run_materialized) for _ in range(repeats))
+    mat_upload = lin.A[hidx].nbytes + lin.y[hidx].nbytes
+    return {
+        "config": {"m": m, "d": d, "workers": workers, "q_max": q_max,
+                   "local_batch": local_batch, "rounds": rounds,
+                   "repeats": repeats},
+        "bit_identical": bit_identical,
+        "max_abs_loss_delta": max_loss_delta,
+        "indexed_wall_s": t_i,
+        "materialized_wall_s": t_m,
+        "indexed_upload_bytes_per_dispatch": int(np.asarray(idx).nbytes),
+        "materialized_upload_bytes_per_dispatch": int(mat_upload),
+    }
+
+
+def _timed(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0
+
+
+def run(out_path: str = "BENCH_data.json"):
+    lm = _lm_shape_accounting()
+    eng = _engine_parity_and_timing()
+    result = {"lm_workload": lm, "linreg_engine": eng}
+    pathlib.Path(out_path).write_text(json.dumps(result, indent=2))
+
+    ratio = lm["bytes_per_round_ratio"]
+    assert ratio >= 10.0, f"bytes/round ratio {ratio:.1f}x < 10x"
+    assert eng["bit_identical"], (
+        f"index-sourced round diverged: max|dloss|={eng['max_abs_loss_delta']}"
+    )
+    return [
+        ("data_bytes_per_round_materialized",
+         f"{lm['materialized_bytes_per_round']:.0f}", "bytes (LM shape)"),
+        ("data_bytes_per_round_indexed",
+         f"{lm['index_bytes_per_round']:.0f}",
+         f"corpus_once={lm['corpus_bytes_once']}B "
+         f"break_even={lm['corpus_break_even_rounds']:.1f}rounds"),
+        ("data_bytes_ratio", f"{ratio:.0f}",
+         f"amortized@{lm['budget_rounds']}rounds="
+         f"{lm['amortized_ratio_at_budget']:.1f}x"),
+        ("data_max_window_k", f"{lm['max_feasible_k_indexed']}",
+         f"vs materialized {lm['max_feasible_k_materialized']} "
+         f"(budget={lm['hbm_budget_bytes'] >> 30}GiB)"),
+        ("data_engine_indexed", f"{eng['indexed_wall_s'] * 1e6:.0f}",
+         f"bit_identical={eng['bit_identical']}"),
+        ("data_engine_materialized", f"{eng['materialized_wall_s'] * 1e6:.0f}",
+         f"upload={eng['materialized_upload_bytes_per_dispatch']}B vs "
+         f"{eng['indexed_upload_bytes_per_dispatch']}B written={out_path}"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

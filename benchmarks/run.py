@@ -10,6 +10,7 @@
   lm    Thm-3 weighting on NON-CONVEX LM training       [beyond-paper ablation]
   kernels  Pallas-kernel oracle timings + TPU roofline bounds
   sweep    SweepEngine grid vs looped RoundEngine (BENCH_sweep.json)
+  data     index-sourced vs materialized data plane   (BENCH_data.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
@@ -41,6 +42,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        data_bench,
         fig1_tail,
         fig2_weighting,
         fig3_vs_sync,
@@ -65,6 +67,7 @@ def main() -> None:
         "lm": lm_ablation.run,
         "kernels": kernel_bench.run,
         "sweep": sweep_bench.run,
+        "data": data_bench.run,
         "roofline": roofline_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)

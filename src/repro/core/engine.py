@@ -56,6 +56,7 @@ from repro.core.combine import (
     generalized_mixing_lambda,
     uniform_lambdas,
 )
+from repro.data.device import IndexedBatches
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
@@ -552,6 +553,10 @@ class RoundEngine:
     def round(self, state: EngineState, batch, q, lam=None, comm_batch=None,
               q_bar=None) -> tuple[EngineState, dict]:
         """One arena round (un-jitted building block; prefer `run`)."""
+        if isinstance(batch, IndexedBatches):
+            batch = batch.gather()
+        if isinstance(comm_batch, IndexedBatches):
+            comm_batch = comm_batch.gather()
         return self._arena_round(state, batch, q, lam, comm_batch, q_bar)
 
     # -- multi-round driver: K rounds, ONE jit, zero host round-trips -------
@@ -560,12 +565,31 @@ class RoundEngine:
         """The raw (un-jitted) K-round scan.  `run` jits it directly; the
         SweepEngine (core/sweep.py) vmaps it over an experiment axis first —
         both consume the SAME round semantics, so sweep results are the
-        engine's results by construction."""
+        engine's results by construction.
+
+        `batches` (and `comm_batches`) may be an `IndexedBatches` source:
+        the scan body then gathers each round's microbatches from the
+        device-resident corpus INSIDE the jit, so only int32 sample ids
+        ride through the scan — the materialized [K, W, q_max, ...] stack
+        never exists (DESIGN.md §7)."""
+        b_indexed = isinstance(batches, IndexedBatches)
+        c_indexed = isinstance(comm_batches, IndexedBatches)
+        # static indexed batch: gather ONCE outside the scan (the gathered
+        # batch is live every iteration anyway; don't rely on XLA hoisting
+        # the loop-invariant take)
+        static_batch = batches.gather() if b_indexed and not batch_per_round \
+            else batches
 
         def body(st, xs):
-            batch = xs["batch"] if batch_per_round else batches
+            if b_indexed:
+                batch = batches.gather(xs["idx"]) if batch_per_round \
+                    else static_batch
+            else:
+                batch = xs["batch"] if batch_per_round else batches
+            comm = comm_batches.gather(xs["comm_idx"]) if c_indexed \
+                else xs.get("comm")
             new_st, metrics = self._arena_round(
-                st, batch, xs["q"], xs.get("lam"), xs.get("comm"), xs.get("q_bar")
+                st, batch, xs["q"], xs.get("lam"), comm, xs.get("q_bar")
             )
             if keep_history:
                 metrics = dict(metrics, arena=new_st.arena)
@@ -573,11 +597,17 @@ class RoundEngine:
 
         xs = {"q": qs}
         if batch_per_round:
-            xs["batch"] = batches
+            if b_indexed:
+                xs["idx"] = batches.idx
+            else:
+                xs["batch"] = batches
         if lams is not None:
             xs["lam"] = lams
         if comm_batches is not None:
-            xs["comm"] = comm_batches
+            if c_indexed:
+                xs["comm_idx"] = comm_batches.idx
+            else:
+                xs["comm"] = comm_batches
         if qbars is not None:
             xs["q_bar"] = qbars
         return jax.lax.scan(body, state, xs)
@@ -597,9 +627,14 @@ class RoundEngine:
             qbars=None, batch_per_round: bool = True, keep_history: bool = False):
         """Execute qs.shape[0] rounds inside one jit dispatch.
 
-        batches: leaves [K, W, q_max, ...] (or [W, q_max, ...] with
-                 batch_per_round=False for a static per-round batch, e.g.
-                 gradient coding's fixed blocks).
+        batches: EITHER materialized leaves [K, W, q_max, ...] (or
+                 [W, q_max, ...] with batch_per_round=False for a static
+                 per-round batch, e.g. gradient coding's fixed blocks), OR
+                 an `IndexedBatches` source (data/device.py) whose corpus
+                 is device-resident and whose idx is int32 [K, W, q_max, b]
+                 ([W, q_max, b] with batch_per_round=False) — each round's
+                 microbatches are then gathered inside the jit and the
+                 window costs index bytes, not batch bytes, of upload.
         qs:      int [K, W] pre-sampled step counts (StragglerModel
                  .realize_steps_matrix) — no host sync between rounds.
         lams:    [K, W] explicit weights (policies with weighting='explicit').

@@ -12,7 +12,10 @@ an entire figure grid compiles and executes as a single jit:
     batches  [E, K, W, q_max, ...]  or shared [K, W, q_max, ...]
              (batch_axis=None broadcasts one microbatch stream to every
              experiment — bands then isolate STRAGGLER randomness, and
-             the grid costs one batch's worth of HBM, not E)
+             the grid costs one batch's worth of HBM, not E); or an
+             IndexedBatches source with [E, K, W, q_max, b] index streams
+             over ONE shared device corpus (data/device.py) — per-
+             experiment DATA randomness at index cost, not E data copies
     hyper    [E]         (optional per-experiment hyperparameter, mapped
                           through opt_factory to a per-experiment optimizer
                           — e.g. a learning-rate sweep)
@@ -44,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core import arena as AR
 from repro.core.engine import EngineState, RoundEngine
+from repro.data.device import IndexedBatches
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
@@ -107,14 +111,25 @@ class SweepEngine:
                    batch_per_round, keep_history, batch_axis):
             self.trace_count += 1  # python side effect: once per TRACE
 
+            # IndexedBatches sources vmap over the INDEX tensor only: the
+            # corpus is closed over (unmapped), so the whole grid shares
+            # ONE device-resident copy and per-experiment data randomness
+            # costs [E, K, W, q, b] int32 ids, not E corpus replicas.
+            b_indexed = isinstance(batches, IndexedBatches)
+            c_indexed = isinstance(comm_batches, IndexedBatches)
+            b_arg = batches.idx if b_indexed else batches
+            c_arg = comm_batches.idx if c_indexed else comm_batches
+
             def one(st, b, q, lam, comm, qb, hv):
                 eng = self._engine_for(hv)
-                return eng._driver_fn(st, b, q, lam, comm, qb,
+                bb = IndexedBatches(batches.corpus, b) if b_indexed else b
+                cc = IndexedBatches(comm_batches.corpus, comm) if c_indexed else comm
+                return eng._driver_fn(st, bb, q, lam, cc, qb,
                                       batch_per_round, keep_history)
 
             in_axes = (0, batch_axis, 0, 0, batch_axis, 0, 0)
             return jax.vmap(one, in_axes=in_axes)(
-                state, batches, qs, lams, comm_batches, qbars, hyper
+                state, b_arg, qs, lams, c_arg, qbars, hyper
             )
 
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -134,6 +149,11 @@ class SweepEngine:
         batches:    leaves [E, K, W, q_max, ...] (batch_axis=0) or shared
                     [K, W, q_max, ...] (batch_axis=None).  With
                     batch_per_round=False drop the K axis (static blocks).
+                    An `IndexedBatches` source applies batch_axis to its
+                    idx tensor only ([E, K, W, q_max, b] per-experiment
+                    streams, or shared [K, W, q_max, b] with
+                    batch_axis=None); the corpus is ALWAYS shared — the
+                    grid's data randomness costs indices, not E copies.
         lams:       optional [E, K, W] explicit combine weights.
         hyper:      optional [E] array consumed by opt_factory.
         Returns (state', metrics) with metrics leaves stacked [E, K, ...]

@@ -1,3 +1,11 @@
+from repro.data.device import (  # noqa: F401
+    DeviceCorpus,
+    IndexedBatches,
+    gather_pytree,
+    sample_index_stream,
+    sample_index_tensor,
+    sample_round_ids,
+)
 from repro.data.linreg import LinRegData, make_linreg  # noqa: F401
 from repro.data.pipeline import AnytimeBatcher, TokenBatcher  # noqa: F401
 from repro.data.synthetic import synthetic_tokens  # noqa: F401

@@ -1,0 +1,214 @@
+"""Device-resident data plane: corpus uploaded once, batches as indices.
+
+Pre-refactor every batch crossed the host->device boundary as a
+materialized ``[K, W, q_max, b, ...]`` stack built by numpy
+(data/pipeline.py), so the data plane dominated upload bytes and capped
+the driver window K — for LM training the batch stack, not the model, was
+the HBM ceiling.  The paper's Table-I placement is a pure index map
+(worker v owns blocks ``{v..v+S} mod N``), so batch sourcing is
+arithmetic + gather (DESIGN.md §7):
+
+  * `DeviceCorpus` — the sample-major arrays, uploaded ONCE.
+  * `sample_index_stream` / `sample_index_tensor` — jax.random samplers
+    drawing ``[K, W, q_max, b]`` (or ``[E, K, W, q_max, b]``) int32 GLOBAL
+    sample ids, uniform over each worker's Table-I pool, via a closed-form
+    modular index map.  The numpy pools (`core.assignment.worker_sample_ids`)
+    remain the distributional oracle (tests/test_device_data.py).
+  * `IndexedBatches` — the engine-facing `BatchSource`: a (corpus, idx)
+    pytree.  The RoundEngine driver's scan body gathers each round's
+    microbatches from the corpus INSIDE the jit (`jnp.take` along the
+    sample axis), so a round costs ``W*q_max*b`` int32 indices of upload
+    instead of the full microbatch stack, and the SweepEngine runs
+    per-experiment index streams over ONE shared corpus.
+
+The materialized path stays available for gradient coding's fixed block
+stacks and for sharding layouts that pre-place batch leaves (see §7 for
+when each is required).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def gather_pytree(corpus: PyTree, idx: jax.Array) -> PyTree:
+    """Gather microbatch leaves from sample-major corpus leaves.
+
+    idx int [..., b] global sample ids -> leaves ``idx.shape + leaf.shape[1:]``.
+    mode='clip': samplers guarantee in-range ids, so skip the fill-value
+    select XLA would otherwise emit.
+    """
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0, mode="clip"), corpus)
+
+
+@dataclasses.dataclass
+class IndexedBatches:
+    """An engine BatchSource: device corpus + per-round sample indices.
+
+    corpus  pytree of sample-major arrays, shared leading dim m (typically
+            `DeviceCorpus.arrays` — uploaded once, referenced by many runs).
+    idx     int32 global sample ids: [W, q_max, b] (one static round),
+            [K, W, q_max, b] (a driver window), or [E, K, W, q_max, b]
+            (a sweep's per-experiment streams over the ONE shared corpus).
+    """
+
+    corpus: PyTree
+    idx: jax.Array
+
+    def gather(self, idx: Optional[jax.Array] = None) -> PyTree:
+        return gather_pytree(self.corpus, self.idx if idx is None else idx)
+
+    @property
+    def index_nbytes(self) -> int:
+        return int(self.idx.nbytes)
+
+
+jax.tree_util.register_dataclass(
+    IndexedBatches, data_fields=["corpus", "idx"], meta_fields=[]
+)
+
+
+class DeviceCorpus:
+    """Sample-major arrays uploaded to the device once.
+
+    Any pytree of arrays with a shared leading sample dim works: the LM
+    trainer uses ``{"tokens", "labels", "loss_mask"}`` dicts, the linreg
+    benchmarks use ``(A, y)`` tuples (matching their loss signatures).
+    """
+
+    def __init__(self, arrays: PyTree):
+        leaves = jax.tree.leaves(arrays)
+        if not leaves:
+            raise ValueError("empty corpus")
+        lead = {l.shape[0] for l in leaves}
+        if len(lead) != 1:
+            raise ValueError(f"inconsistent sample counts: {sorted(lead)}")
+        self.arrays = jax.tree.map(jnp.asarray, arrays)
+        self.m = leaves[0].shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        """One-time upload cost of the corpus."""
+        return sum(l.nbytes for l in jax.tree.leaves(self.arrays))
+
+    def gather(self, idx) -> PyTree:
+        return gather_pytree(self.arrays, jnp.asarray(idx))
+
+    def source(self, idx) -> IndexedBatches:
+        """Wrap an index tensor into the engine-facing BatchSource.
+
+        Host-planned (numpy) ids are range-checked here: the in-jit gather
+        clips, so a plan built against the wrong corpus would otherwise
+        train on silently-clamped samples.  Device-born ids (the
+        data/device samplers) are in-range by construction and skip the
+        check — validating them would force a device->host sync.
+        """
+        if not isinstance(idx, jax.Array):
+            idx = np.asarray(idx)
+            if idx.size and (idx.min() < 0 or idx.max() >= self.m):
+                raise ValueError(
+                    f"sample ids out of range for corpus m={self.m}: "
+                    f"[{idx.min()}, {idx.max()}]"
+                )
+        return IndexedBatches(self.arrays, jnp.asarray(idx, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Table-I index sampling: uniform over each worker's replicated pool
+# ---------------------------------------------------------------------------
+def _pool_tables(m: int, n_workers: int, s: int):
+    """Per-worker block tables for the Table-I pools, tiny host constants.
+
+    starts [W, S+1]  global start of worker v's j-th assigned block
+    cum    [W, S+2]  cumulative LOCAL offset of each block inside v's pool
+                     (cum[v, -1] is v's pool size, == m(S+1)/N when N | m)
+    """
+    # lazy: core.__init__ imports the engine, which imports this module —
+    # a module-level core import here would close that cycle
+    from repro.core.assignment import block_slices, worker_block_ids
+
+    sls = block_slices(m, n_workers)
+    starts = np.zeros((n_workers, s + 1), np.int32)
+    sizes = np.zeros((n_workers, s + 1), np.int32)
+    for v in range(n_workers):
+        for j, b in enumerate(worker_block_ids(v, n_workers, s)):
+            starts[v, j] = sls[b].start
+            sizes[v, j] = sls[b].stop - sls[b].start
+    cum = np.zeros((n_workers, s + 2), np.int32)
+    cum[:, 1:] = np.cumsum(sizes, axis=1)
+    return starts, cum
+
+
+def pool_sizes(m: int, n_workers: int, s: int) -> np.ndarray:
+    """[W] pool sizes (== worker_sample_ids(v).size, the numpy oracle)."""
+    return _pool_tables(m, n_workers, s)[1][:, -1].copy()
+
+
+def local_to_global(u: jax.Array, m: int, n_workers: int, s: int) -> jax.Array:
+    """Map per-worker LOCAL pool indices to GLOBAL sample ids.
+
+    u int [..., W, q, b] with the worker axis third-from-last; u[..., v, :, :]
+    indexes into worker v's concatenated Table-I pool.
+
+    Uniform blocks (N | m) use the closed-form modular map of the circular
+    placement: ``id = ((v + u // blk) % N) * blk + u % blk``.  Ragged m
+    falls back to the per-worker block tables (still pure arithmetic: a
+    rank vs. S+1 boundaries and a one-hot contraction over tiny tables).
+    """
+    u = jnp.asarray(u, jnp.int32)
+    if m % n_workers == 0:
+        blk = m // n_workers
+        v = jnp.arange(n_workers, dtype=jnp.int32).reshape(n_workers, 1, 1)
+        return ((v + u // blk) % n_workers) * blk + u % blk
+    starts, cum = _pool_tables(m, n_workers, s)
+    s1 = s + 1
+    bshape = (n_workers, 1, 1, s1)
+    inner = jnp.asarray(cum[:, 1:s1], jnp.int32).reshape(n_workers, 1, 1, s1 - 1)
+    j = jnp.sum(u[..., None] >= inner, axis=-1)  # [..., W, q, b] block rank
+    oh = jax.nn.one_hot(j, s1, dtype=jnp.int32)
+    g0 = jnp.sum(oh * jnp.asarray(starts, jnp.int32).reshape(bshape), axis=-1)
+    off = jnp.sum(oh * jnp.asarray(cum[:, :s1], jnp.int32).reshape(bshape), axis=-1)
+    return g0 + (u - off)
+
+
+def _sample_ids(key: jax.Array, prefix: tuple, m: int, n_workers: int, s: int,
+                q_max: int, local_batch: int) -> jax.Array:
+    """int32 [*prefix, W, q_max, b] global ids, uniform per Table-I pool."""
+    shape = (*prefix, n_workers, q_max, local_batch)
+    maxval = jnp.asarray(pool_sizes(m, n_workers, s), jnp.int32).reshape(
+        n_workers, 1, 1
+    )
+    u = jax.random.randint(key, shape, 0, maxval, dtype=jnp.int32)
+    return local_to_global(u, m, n_workers, s)
+
+
+def sample_round_ids(key: jax.Array, m: int, n_workers: int, s: int,
+                     q_max: int, local_batch: int) -> jax.Array:
+    """One round of sample ids: int32 [W, q_max, b]."""
+    return _sample_ids(key, (), m, n_workers, s, q_max, local_batch)
+
+
+def sample_index_stream(key: jax.Array, m: int, n_workers: int, s: int,
+                        n_rounds: int, q_max: int, local_batch: int) -> jax.Array:
+    """A driver window of sample ids: int32 [K, W, q_max, b].
+
+    The device analogue of `AnytimeBatcher.rounds_indices` — Algorithm 2
+    line 6's uniform draw from bar{A}_v, born on the accelerator.
+    """
+    return _sample_ids(key, (n_rounds,), m, n_workers, s, q_max, local_batch)
+
+
+def sample_index_tensor(key: jax.Array, m: int, n_workers: int, s: int,
+                        n_experiments: int, n_rounds: int, q_max: int,
+                        local_batch: int) -> jax.Array:
+    """The SweepEngine feed: int32 [E, K, W, q_max, b] per-experiment index
+    streams over ONE shared corpus — data randomness across an experiment
+    grid costs indices, not E corpus copies."""
+    return _sample_ids(key, (n_experiments, n_rounds), m, n_workers, s,
+                       q_max, local_batch)

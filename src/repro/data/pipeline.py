@@ -7,14 +7,23 @@ replicated shard (Algorithm 2 line 6).  Workers therefore never touch data
 they were not assigned, and up to S persistent stragglers lose nothing.
 
 TokenBatcher: the same contract over a token corpus for LM training.
+
+Since the device-resident data plane (DESIGN.md §7) the batchers are
+INDEX PLANNERS first: `round_indices` / `rounds_indices` emit int sample
+ids, `device_corpus()` uploads the arrays once, and `rounds_source`
+combines the two into the engine's `IndexedBatches` — the materialized
+`round_batch` / `rounds_batch` stacks remain as the host-gather of the
+same index plan (back-compat, and the layout gradient coding's fixed
+blocks still require).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core.assignment import worker_sample_ids
+from repro.data.device import DeviceCorpus, IndexedBatches
 
 
 class AnytimeBatcher:
@@ -38,33 +47,75 @@ class AnytimeBatcher:
         self.s = s_redundancy
         self.q_max = max_local_steps
         self.b = local_batch
-        self.rng = np.random.default_rng(seed)
+        # one independent stream per worker: a worker's draws advance in
+        # ROUND order regardless of how the run is cut into driver windows,
+        # so rounds_indices(a) ++ rounds_indices(b) == rounds_indices(a+b)
+        # — the plan (and therefore training) is window-partition invariant
+        self.rngs = [
+            np.random.default_rng(ss) for ss in np.random.SeedSequence(seed).spawn(n_workers)
+        ]
         # Table I: per-worker sample index pools (size m(S+1)/N each)
         self.pools = [
             worker_sample_ids(v, self.m, n_workers, s_redundancy) for v in range(n_workers)
         ]
+        self._corpus: Optional[DeviceCorpus] = None
 
+    # -- index planning ------------------------------------------------------
+    def round_indices(self) -> np.ndarray:
+        """One round's sample ids: int [W, q_max, b], uniform per pool."""
+        return self.rounds_indices(1)[0]
+
+    def rounds_indices(self, n_rounds: int) -> np.ndarray:
+        """A driver window's sample ids: int [K, W, q_max, b].
+
+        ONE rng.choice draw per worker covers the whole window (no
+        per-round Python loop); uploading these ids instead of the
+        materialized stack is what keeps the data plane off the
+        host->device path.
+        """
+        return np.stack([
+            self.rngs[v].choice(self.pools[v], size=(n_rounds, self.q_max, self.b),
+                                replace=True)
+            for v in range(self.n_workers)
+        ], axis=1)
+
+    def gather(self, idx: np.ndarray) -> dict[str, np.ndarray]:
+        """Host gather of an index plan (the materialized layout)."""
+        return {k: arr[idx] for k, arr in self.arrays.items()}
+
+    # -- device-resident source ---------------------------------------------
+    def device_corpus(self) -> DeviceCorpus:
+        """The sample-major arrays on device — uploaded once, then cached."""
+        if self._corpus is None:
+            self._corpus = DeviceCorpus(self.arrays)
+        return self._corpus
+
+    def rounds_source(self, n_rounds: int) -> IndexedBatches:
+        """A window's batches as corpus + int32 ids (engine BatchSource)."""
+        return self.device_corpus().source(self.rounds_indices(n_rounds))
+
+    # -- materialized layout (back-compat / fixed-block schemes) ------------
     def round_batch(self) -> dict[str, np.ndarray]:
         """One round's microbatches: leaves [W, q_max, b, ...]."""
-        out = {k: [] for k in self.arrays}
-        for v in range(self.n_workers):
-            idx = self.rng.choice(self.pools[v], size=(self.q_max, self.b), replace=True)
-            for k, arr in self.arrays.items():
-                out[k].append(arr[idx])
-        return {k: np.stack(vs) for k, vs in out.items()}
+        return self.gather(self.round_indices())
 
     def rounds_batch(self, n_rounds: int) -> dict[str, np.ndarray]:
         """A whole driver window of microbatches: leaves [K, W, q_max, b, ...].
 
         Pre-gathering K rounds lets the RoundEngine driver run them inside
-        one jit with zero host round-trips between rounds.
+        one jit with zero host round-trips between rounds; prefer
+        `rounds_source` unless the consumer needs host arrays.
         """
-        rounds = [self.round_batch() for _ in range(n_rounds)]
-        return {k: np.stack([r[k] for r in rounds]) for k in rounds[0]}
+        return self.gather(self.rounds_indices(n_rounds))
 
 
 class TokenBatcher:
-    """AnytimeBatcher over an LM token corpus [n_seqs, seq_len]."""
+    """AnytimeBatcher over an LM token corpus [n_seqs, seq_len].
+
+    Labels are the next token via np.roll, which wraps the FINAL position's
+    label around to the sequence's first token — `loss_mask` zeroes that
+    position out of the LM loss (models.model.loss_fn consumes it).
+    """
 
     def __init__(
         self,
@@ -76,12 +127,30 @@ class TokenBatcher:
         seed: int = 0,
         prefix: Optional[np.ndarray] = None,  # [n_seqs, P, src] vlm/audio stub
     ):
-        arrays = {"tokens": tokens, "labels": np.roll(tokens, -1, axis=-1)}
+        mask = np.ones(tokens.shape, np.uint8)
+        mask[..., -1] = 0  # np.roll wraps the last label — never score it
+        arrays = {
+            "tokens": tokens,
+            "labels": np.roll(tokens, -1, axis=-1),
+            "loss_mask": mask,
+        }
         if prefix is not None:
             arrays["prefix_embeddings"] = prefix
         self.inner = AnytimeBatcher(
             arrays, n_workers, s_redundancy, max_local_steps, local_batch, seed
         )
+
+    def round_indices(self) -> np.ndarray:
+        return self.inner.round_indices()
+
+    def rounds_indices(self, n_rounds: int) -> np.ndarray:
+        return self.inner.rounds_indices(n_rounds)
+
+    def device_corpus(self) -> DeviceCorpus:
+        return self.inner.device_corpus()
+
+    def rounds_source(self, n_rounds: int) -> IndexedBatches:
+        return self.inner.rounds_source(n_rounds)
 
     def round_batch(self) -> dict[str, np.ndarray]:
         return self.inner.round_batch()

@@ -28,6 +28,12 @@ def synthetic_tokens(
 
 
 def lm_batch(tokens: np.ndarray) -> dict[str, np.ndarray]:
-    """Next-token-prediction batch: labels[t] = tokens[t+1] (last = first)."""
+    """Next-token-prediction batch: labels[t] = tokens[t+1].
+
+    np.roll wraps the final position's label to the sequence's FIRST
+    token; loss_mask zeroes it out of the loss (model.loss_fn honors it).
+    """
     labels = np.roll(tokens, -1, axis=-1)
-    return {"tokens": tokens, "labels": labels}
+    mask = np.ones(tokens.shape, np.uint8)
+    mask[..., -1] = 0
+    return {"tokens": tokens, "labels": labels, "loss_mask": mask}

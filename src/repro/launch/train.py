@@ -6,11 +6,14 @@ mesh and the measured per-worker step counts.  The straggler model supplies
 q_v per round (simulated here; measured in deployment — the algorithm is
 identical, DESIGN.md §3).
 
-Rounds are driven in windows of --rounds-per-jit through
-`RoundEngine.run`: the q-matrix for the whole window is pre-sampled
-(StragglerModel.realize_steps_matrix) and the window executes as ONE jit
-dispatch — a lax.scan over rounds with donated arena buffers, zero host
-round-trips between rounds (DESIGN.md §5).
+Data plane (DESIGN.md §7): with ``--data-plane index`` (default) the token
+corpus is uploaded ONCE (`TokenBatcher.device_corpus`) and each driver
+window ships only int32 sample ids [K, W, q_max, b] — the scan body
+gathers its round's microbatches on device, so the whole run fits in ONE
+jit dispatch by default (window = all rounds).  ``--data-plane
+materialized`` keeps the legacy host-built [K, W, q_max, b, ...] stacks,
+windowed by --rounds-per-jit (default 8) because the stack's HBM cost
+scales with K.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --rounds 40 --workers 8 --s 1 --persistent-frac 0.125
@@ -18,6 +21,8 @@ round-trips between rounds (DESIGN.md §5).
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 import time
 
 import jax
@@ -39,8 +44,14 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true", help="CPU-scale variant")
     ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--rounds-per-jit", type=int, default=8,
-                    help="driver window: rounds executed per jit dispatch")
+    ap.add_argument("--data-plane", choices=["index", "materialized"], default="index",
+                    help="index: corpus uploaded once, batches as int32 sample "
+                         "ids gathered on device; materialized: legacy "
+                         "host-built [K, W, q_max, b, ...] stacks")
+    ap.add_argument("--rounds-per-jit", type=int, default=0,
+                    help="driver window: rounds executed per jit dispatch "
+                         "(0 = auto: the WHOLE run for the index plane, 8 "
+                         "for materialized stacks)")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--q-max", type=int, default=4)
     ap.add_argument("--s", type=int, default=1, help="data replication S")
@@ -95,54 +106,78 @@ def main(argv=None):
         p, o = engine.finalize(state)
         ckpt.save(step_no, {"params": p, "opt_state": o})
 
+    indexed = args.data_plane == "index"
+    if args.rounds_per_jit > 0:
+        window = args.rounds_per_jit
+    elif indexed:
+        # whole run as ONE dispatch — unless checkpointing is on, where a
+        # window-spanning dispatch would collapse the ~10-round save
+        # cadence to a single end-of-run save (training is window-partition
+        # invariant, so the cap changes durability, not results)
+        window = min(args.rounds, 10) if ckpt else args.rounds
+    else:
+        window = 8
+    window = max(1, window)
+    upload_bytes = 0
+    if indexed:
+        corpus = batcher.device_corpus()  # ONE upload for the whole run
+        upload_bytes += corpus.nbytes
+        print(f"[train] data plane=index corpus={corpus.nbytes / 1e6:.1f}MB "
+              f"(uploaded once), window={window} rounds/dispatch")
+    else:
+        print(f"[train] data plane=materialized window={window} rounds/dispatch")
+
     wall = 0.0
     loss = float("nan")
-    metrics_f = open(args.metrics_file, "a") if args.metrics_file else None
-    window = max(1, args.rounds_per_jit)
-    r = 0
-    last_ckpt = -1
-    while r < args.rounds:
-        kc = min(window, args.rounds - r)
-        q_mat = smodel.realize_steps_matrix(rng, kc, args.workers, args.budget_t,
-                                            args.q_max, speeds)
-        batches = {k: jnp.asarray(v) for k, v in batcher.rounds_batch(kc).items()}
-        t0 = time.time()
-        state, outs = engine.run(state, batches, q_mat)
-        losses = np.asarray(outs["loss"])
-        lambdas = np.asarray(outs["lambdas"], np.float64)
-        q_totals = np.asarray(outs["q_total"])
-        wall += time.time() - t0
-        loss = float(losses[-1])
-        for i in range(kc):
-            rr = r + i
-            if metrics_f:
-                import json as _json
-
-                lam = lambdas[i]
-                ent = float(-(lam[lam > 0] * np.log(lam[lam > 0])).sum())
-                metrics_f.write(_json.dumps({
-                    "round": rr, "loss": float(losses[i]), "q": q_mat[i].tolist(),
-                    "q_total": int(q_totals[i]),
-                    "lambda_entropy": ent, "wall_s": wall,
-                }) + "\n")
-                metrics_f.flush()
-            if rr % args.log_every == 0:
-                print(
-                    f"round {rr:4d} loss {losses[i]:.4f} Q={int(q_totals[i])} "
-                    f"q={q_mat[i].tolist()} ({wall:.1f}s)"
-                )
-        r += kc
-        # checkpoint cadence ~10 rounds; the label always matches the state
-        # (saved AT round r, not back-dated to the crossed multiple)
-        if ckpt and r // 10 > (r - kc) // 10:
-            save_ckpt(r)
-            last_ckpt = r
-    if ckpt and last_ckpt != args.rounds:
-        save_ckpt(args.rounds)
-    if metrics_f:
-        metrics_f.close()
+    metrics_cm = open(args.metrics_file, "a") if args.metrics_file \
+        else contextlib.nullcontext()
+    with metrics_cm as metrics_f:
+        r = 0
+        last_ckpt = -1
+        while r < args.rounds:
+            kc = min(window, args.rounds - r)
+            q_mat = smodel.realize_steps_matrix(rng, kc, args.workers, args.budget_t,
+                                                args.q_max, speeds)
+            if indexed:
+                batches = batcher.rounds_source(kc)
+                upload_bytes += batches.index_nbytes
+            else:
+                batches = {k: jnp.asarray(v) for k, v in batcher.rounds_batch(kc).items()}
+                upload_bytes += sum(v.nbytes for v in batches.values())
+            t0 = time.time()
+            state, outs = engine.run(state, batches, q_mat)
+            losses = np.asarray(outs["loss"])
+            lambdas = np.asarray(outs["lambdas"], np.float64)
+            q_totals = np.asarray(outs["q_total"])
+            wall += time.time() - t0
+            loss = float(losses[-1])
+            for i in range(kc):
+                rr = r + i
+                if metrics_f:
+                    lam = lambdas[i]
+                    ent = float(-(lam[lam > 0] * np.log(lam[lam > 0])).sum())
+                    metrics_f.write(json.dumps({
+                        "round": rr, "loss": float(losses[i]), "q": q_mat[i].tolist(),
+                        "q_total": int(q_totals[i]),
+                        "lambda_entropy": ent, "wall_s": wall,
+                    }) + "\n")
+                    metrics_f.flush()
+                if rr % args.log_every == 0:
+                    print(
+                        f"round {rr:4d} loss {losses[i]:.4f} Q={int(q_totals[i])} "
+                        f"q={q_mat[i].tolist()} ({wall:.1f}s)"
+                    )
+            r += kc
+            # checkpoint cadence ~10 rounds; the label always matches the state
+            # (saved AT round r, not back-dated to the crossed multiple)
+            if ckpt and r // 10 > (r - kc) // 10:
+                save_ckpt(r)
+                last_ckpt = r
+        if ckpt and last_ckpt != args.rounds:
+            save_ckpt(args.rounds)
     print(f"[train] done: final loss {loss:.4f} wall {wall:.1f}s "
-          f"(jit dispatches: {engine.dispatch_count}, traces: {engine.trace_count})")
+          f"(jit dispatches: {engine.dispatch_count}, traces: {engine.trace_count}, "
+          f"data uploaded: {upload_bytes / 1e6:.1f}MB)")
     return loss
 
 

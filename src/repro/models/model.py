@@ -406,10 +406,15 @@ def _mask_padded_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 
 def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict) -> jax.Array:
-    """Mean next-token CE (+ MoE aux). batch: tokens, labels[, prefix_embeddings]."""
+    """Mean next-token CE (+ MoE aux).
+
+    batch: tokens, labels[, loss_mask, prefix_embeddings].  loss_mask
+    (0/1 per position) drops positions with no valid next token — e.g.
+    the final position, whose np.roll label wraps to the sequence start.
+    """
     logits, aux = apply(params, cfg, batch["tokens"], batch.get("prefix_embeddings"))
     logits = _mask_padded_vocab(logits, cfg)
-    ce = softmax_cross_entropy(logits, batch["labels"])
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
     return ce + aux["moe_aux"] + aux["moe_z"]
 
 

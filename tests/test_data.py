@@ -36,6 +36,46 @@ def test_batcher_rejects_mismatched_arrays():
         AnytimeBatcher({"a": np.zeros((10, 2)), "b": np.zeros((11,))}, 2, 0, 2, 2)
 
 
+def test_rounds_batch_vectorized_shapes_and_placement(rng):
+    """The one-choice-per-worker window plan: [K, W, q, b, ...] leaves, and
+    every worker still only ever sees its Table-I pool."""
+    m, w, s, qm, b, k = 120, 6, 1, 3, 4, 5
+    data = np.arange(m)[:, None].astype(float)
+    bt = AnytimeBatcher({"ids": data}, w, s, qm, b, seed=2)
+    idx = bt.rounds_indices(k)
+    assert idx.shape == (k, w, qm, b)
+    batch = bt.rounds_batch(k)
+    assert batch["ids"].shape == (k, w, qm, b, 1)
+    for v in range(w):
+        seen = set(batch["ids"][:, v].reshape(-1).astype(int).tolist())
+        allowed = set(worker_sample_ids(v, m, w, s).tolist())
+        assert seen <= allowed, f"worker {v} saw foreign samples"
+
+
+def test_index_plan_window_partition_invariant():
+    """Cutting a run into different driver windows must not change the
+    plan: rounds_indices(2) ++ rounds_indices(3) == rounds_indices(5)."""
+    m, w, s, qm, b = 120, 6, 1, 3, 4
+    data = np.arange(m)[:, None].astype(float)
+    one = AnytimeBatcher({"ids": data}, w, s, qm, b, seed=9)
+    two = AnytimeBatcher({"ids": data}, w, s, qm, b, seed=9)
+    whole = one.rounds_indices(5)
+    split = np.concatenate([two.rounds_indices(2), two.rounds_indices(3)])
+    np.testing.assert_array_equal(whole, split)
+
+
+def test_rounds_source_matches_rounds_batch(rng):
+    """The IndexedBatches source and the materialized stack are the same
+    plan: gathering the source's ids on host reproduces rounds_batch."""
+    toks = synthetic_tokens(rng, 40, 16, vocab=50)
+    a = TokenBatcher(toks, 4, 1, 2, 3, seed=7)
+    b = TokenBatcher(toks, 4, 1, 2, 3, seed=7)
+    src = a.rounds_source(3)
+    stack = b.rounds_batch(3)
+    for key, leaf in src.gather().items():
+        np.testing.assert_array_equal(np.asarray(leaf), stack[key])
+
+
 def test_token_batcher_labels_shifted(rng):
     toks = synthetic_tokens(rng, 40, 16, vocab=50)
     tb = TokenBatcher(toks, n_workers=4, s_redundancy=1, max_local_steps=2, local_batch=3)
@@ -44,6 +84,43 @@ def test_token_batcher_labels_shifted(rng):
     np.testing.assert_array_equal(
         batch["labels"][..., :-1], batch["tokens"][..., 1:]
     )
+
+
+def test_token_batcher_masks_wrapped_label(rng):
+    """np.roll wraps the final label to the sequence start; the loss_mask
+    must zero exactly that position, and the masked CE must be invariant
+    to whatever the wrapped label is."""
+    from repro.models.layers import softmax_cross_entropy
+
+    toks = synthetic_tokens(rng, 40, 16, vocab=50)
+    tb = TokenBatcher(toks, n_workers=4, s_redundancy=1, max_local_steps=2, local_batch=3)
+    batch = tb.round_batch()
+    mask = batch["loss_mask"]
+    assert mask.shape == batch["tokens"].shape
+    np.testing.assert_array_equal(mask[..., -1], 0)
+    np.testing.assert_array_equal(mask[..., :-1], 1)
+    # wrapped position is really the wrap: labels[..., -1] == tokens[..., 0]
+    np.testing.assert_array_equal(batch["labels"][..., -1], batch["tokens"][..., 0])
+
+    logits = jnp.asarray(rng.standard_normal(batch["labels"].shape + (50,)), jnp.float32)
+    labels = jnp.asarray(batch["labels"])
+    ce = softmax_cross_entropy(logits, labels, jnp.asarray(mask))
+    corrupted = labels.at[..., -1].set((labels[..., -1] + 7) % 50)
+    ce2 = softmax_cross_entropy(logits, corrupted, jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(ce), np.asarray(ce2))
+    # and the unmasked CE does depend on it (the bug the mask fixes)
+    assert not np.array_equal(
+        np.asarray(softmax_cross_entropy(logits, labels)),
+        np.asarray(softmax_cross_entropy(logits, corrupted)),
+    )
+
+
+def test_lm_batch_has_loss_mask(rng):
+    from repro.data.synthetic import lm_batch as _lm
+
+    out = _lm(synthetic_tokens(rng, 4, 8, vocab=16))
+    np.testing.assert_array_equal(out["loss_mask"][..., -1], 0)
+    np.testing.assert_array_equal(out["loss_mask"][..., :-1], 1)
 
 
 def test_synthetic_tokens_structured(rng):

@@ -1,0 +1,266 @@
+"""Device-resident data plane (data/device.py, DESIGN.md §7).
+
+The numpy Table-I pools (`core.assignment.worker_sample_ids`) are the
+distributional oracle for the jax.random index sampler: every id a worker
+receives must live in its S+1 replicated blocks, and draws must be uniform
+over the pool.  At the engine level, index-sourced and materialized
+batches carrying the SAME sample ids must produce bit-identical rounds —
+the gather moves inside the jit, the math does not change.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.assignment import worker_sample_ids
+from repro.core.engine import RoundEngine, anytime_policy, generalized_policy
+from repro.core.sweep import SweepEngine
+from repro.data.device import (
+    DeviceCorpus,
+    IndexedBatches,
+    local_to_global,
+    pool_sizes,
+    sample_index_stream,
+    sample_index_tensor,
+    sample_round_ids,
+)
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+# ----------------------------------------------------------- sampler oracle --
+@pytest.mark.parametrize("m,w,s", [(120, 6, 1), (60, 6, 0), (100, 8, 3),
+                                   (97, 5, 2), (43, 4, 1)])
+def test_sampled_ids_land_in_table_i_pool(m, w, s):
+    """Every drawn id must be in the worker's numpy-oracle pool — uniform
+    AND ragged m (the closed-form map vs the block-table fallback)."""
+    ids = np.asarray(sample_index_stream(jax.random.PRNGKey(3), m, w, s,
+                                         n_rounds=6, q_max=3, local_batch=5))
+    assert ids.shape == (6, w, 3, 5)
+    assert ids.dtype == np.int32
+    for v in range(w):
+        pool = worker_sample_ids(v, m, w, s)
+        assert np.isin(ids[:, v], pool).all(), f"worker {v} saw foreign ids"
+
+
+@pytest.mark.parametrize("m,w,s", [(120, 6, 1), (97, 5, 2)])
+def test_pool_sizes_match_oracle(m, w, s):
+    sizes = pool_sizes(m, w, s)
+    for v in range(w):
+        assert sizes[v] == worker_sample_ids(v, m, w, s).size
+
+
+@pytest.mark.parametrize("m,w,s", [(60, 6, 1), (97, 5, 2)])
+def test_local_to_global_enumerates_pool(m, w, s):
+    """Mapping local ids 0..pool_size-1 must enumerate the oracle pool in
+    its concatenated-block order (u is shaped [W, q, b] = [W, 1, size])."""
+    sizes = pool_sizes(m, w, s)
+    u = np.zeros((w, 1, sizes.max()), np.int32)
+    for v in range(w):
+        u[v, 0, : sizes[v]] = np.arange(sizes[v])
+    g = np.asarray(local_to_global(jnp.asarray(u), m, w, s))
+    for v in range(w):
+        np.testing.assert_array_equal(g[v, 0, : sizes[v]],
+                                      worker_sample_ids(v, m, w, s))
+
+
+def test_sampler_uniform_over_pool():
+    """Frequency over each worker's pool ~ uniform (4-sigma binomial band),
+    and every pool element is reachable."""
+    m, w, s = 60, 6, 1
+    ids = np.asarray(sample_index_stream(jax.random.PRNGKey(7), m, w, s,
+                                         n_rounds=200, q_max=4, local_batch=5))
+    for v in range(w):
+        pool = worker_sample_ids(v, m, w, s)
+        n, p = ids[:, v].size, 1.0 / pool.size
+        counts = np.asarray([(ids[:, v] == g).sum() for g in pool])
+        assert counts.sum() == n  # nothing outside the pool
+        assert counts.min() > 0, "pool element never drawn"
+        tol = 4.0 * np.sqrt(n * p * (1 - p))
+        assert np.abs(counts - n * p).max() < tol, counts
+
+
+def test_distinct_keys_distinct_draws():
+    a = sample_round_ids(jax.random.PRNGKey(0), 120, 6, 1, 4, 8)
+    b = sample_round_ids(jax.random.PRNGKey(1), 120, 6, 1, 4, 8)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ corpus/source --
+def test_device_corpus_rejects_mismatched_leading_dim():
+    with pytest.raises(ValueError):
+        DeviceCorpus({"a": np.zeros((10, 2)), "b": np.zeros((11,))})
+
+
+def test_source_rejects_out_of_range_host_ids():
+    """The in-jit gather clips, so host-planned ids from the wrong corpus
+    must fail loudly at source() instead of training on clamped samples."""
+    corpus = DeviceCorpus({"a": np.zeros((10, 2))})
+    with pytest.raises(ValueError):
+        corpus.source(np.array([[0, 9], [3, 10]]))
+    with pytest.raises(ValueError):
+        corpus.source(np.array([-1, 0]))
+    corpus.source(np.array([[0, 9]]))  # in-range is fine
+
+
+def test_corpus_gather_matches_host_gather(rng):
+    lin = make_linreg(80, 4, seed=1)
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    idx = rng.integers(0, lin.m, size=(3, 2, 5))
+    a_dev, y_dev = corpus.gather(idx)
+    np.testing.assert_array_equal(np.asarray(a_dev),
+                                  lin.A[idx].astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(y_dev),
+                                  lin.y[idx].astype(np.float32))
+
+
+# ------------------------------------------------- engine-level bit parity --
+W, QMAX, B, K = 6, 4, 8, 5
+
+
+def _both_paths(lin, idx, s_redundancy=1):
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    hidx = np.asarray(idx)
+    mat = (jnp.asarray(lin.A[hidx], jnp.float32),
+           jnp.asarray(lin.y[hidx], jnp.float32))
+    return corpus.source(idx), mat
+
+
+def test_engine_indexed_vs_materialized_bit_identical():
+    """The driver-window contract: gathering inside the jit must reproduce
+    the materialized stack's rounds BIT-identically (same ids, same math)."""
+    lin = make_linreg(240, 8, seed=0)
+    idx = sample_index_stream(jax.random.PRNGKey(1), lin.m, W, 1, K, QMAX, B)
+    src, mat = _both_paths(lin, idx)
+    qs = np.random.default_rng(0).integers(0, QMAX + 1, (K, W))
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    e_i = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    e_m = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    st_i, out_i = e_i.run(e_i.init_state(params, ()), src, qs)
+    st_m, out_m = e_m.run(e_m.init_state(params, ()), mat, qs)
+    np.testing.assert_array_equal(np.asarray(st_i.arena), np.asarray(st_m.arena))
+    np.testing.assert_array_equal(np.asarray(out_i["loss"]), np.asarray(out_m["loss"]))
+    np.testing.assert_array_equal(np.asarray(out_i["lambdas"]),
+                                  np.asarray(out_m["lambdas"]))
+
+
+def test_engine_indexed_static_batch():
+    """batch_per_round=False with an index source: one [W, q, b] id tensor
+    re-gathered every round."""
+    lin = make_linreg(240, 8, seed=0)
+    idx = sample_round_ids(jax.random.PRNGKey(2), lin.m, W, 1, QMAX, B)
+    src, mat = _both_paths(lin, idx)
+    qs = np.random.default_rng(1).integers(0, QMAX + 1, (K, W))
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    e_i = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    e_m = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    st_i, _ = e_i.run(e_i.init_state(params, ()), src, qs, batch_per_round=False)
+    st_m, _ = e_m.run(e_m.init_state(params, ()), mat, qs, batch_per_round=False)
+    np.testing.assert_array_equal(np.asarray(st_i.arena), np.asarray(st_m.arena))
+
+
+def test_engine_single_round_accepts_source():
+    lin = make_linreg(240, 8, seed=0)
+    idx = sample_round_ids(jax.random.PRNGKey(4), lin.m, W, 1, QMAX, B)
+    src, mat = _both_paths(lin, idx)
+    q = jnp.asarray([4, 3, 0, 1, 4, 2], jnp.int32)
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    st_i, _ = eng.round(eng.init_state(params, ()), src, q)
+    st_m, _ = eng.round(eng.init_state(params, ()), mat, q)
+    np.testing.assert_array_equal(np.asarray(st_i.arena), np.asarray(st_m.arena))
+
+
+def test_generalized_indexed_comm_batches():
+    """The Sec.-V two-phase round sources BOTH phases from the corpus."""
+    lin = make_linreg(240, 8, seed=0)
+    qc = 2
+    idx = sample_index_stream(jax.random.PRNGKey(5), lin.m, W, 1, K, QMAX, B)
+    cidx = sample_index_stream(jax.random.PRNGKey(6), lin.m, W, 1, K, qc, B)
+    src, mat = _both_paths(lin, idx)
+    csrc, cmat = _both_paths(lin, cidx)
+    rng = np.random.default_rng(2)
+    qs = rng.integers(0, QMAX + 1, (K, W))
+    qbars = rng.integers(0, qc + 1, (K, W))
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    e_i = RoundEngine(_loss, sgd(0.01), W, QMAX, generalized_policy(),
+                      max_comm_steps=qc)
+    e_m = RoundEngine(_loss, sgd(0.01), W, QMAX, generalized_policy(),
+                      max_comm_steps=qc)
+    st_i, _ = e_i.run(e_i.init_state(params, ()), src, qs,
+                      comm_batches=csrc, qbars=qbars)
+    st_m, _ = e_m.run(e_m.init_state(params, ()), mat, qs,
+                      comm_batches=cmat, qbars=qbars)
+    np.testing.assert_array_equal(np.asarray(st_i.arena), np.asarray(st_m.arena))
+
+
+# --------------------------------------------------------- sweep-level grid --
+def test_sweep_per_experiment_index_streams():
+    """[E, K, W, q, b] id streams over ONE shared corpus must match a host
+    loop of per-experiment materialized engine runs."""
+    lin = make_linreg(240, 8, seed=0)
+    E = 3
+    idx = sample_index_tensor(jax.random.PRNGKey(8), lin.m, W, 1, E, K, QMAX, B)
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    qs = np.random.default_rng(3).integers(0, QMAX + 1, (E, K, W))
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    engine = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    st, outs = sweep.run(sweep.init_state(params, E), corpus.source(idx), qs,
+                         keep_history=True)
+    assert outs["arena"].shape == (E, K, lin.d)
+    hidx = np.asarray(idx)
+    ref = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    for e in range(E):
+        mat = (jnp.asarray(lin.A[hidx[e]], jnp.float32),
+               jnp.asarray(lin.y[hidx[e]], jnp.float32))
+        st_e, _ = ref.run(ref.init_state(params, ()), mat, qs[e])
+        np.testing.assert_allclose(np.asarray(st.arena[e]),
+                                   np.asarray(st_e.arena),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_sweep_shared_index_stream_broadcasts():
+    """batch_axis=None shares one [K, W, q, b] id stream: with identical q
+    rows every experiment's trajectory is identical."""
+    lin = make_linreg(240, 8, seed=0)
+    E = 3
+    idx = sample_index_stream(jax.random.PRNGKey(9), lin.m, W, 1, K, QMAX, B)
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    q_row = np.random.default_rng(4).integers(0, QMAX + 1, (K, W))
+    qs = np.broadcast_to(q_row, (E, K, W))
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    engine = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    st, _ = sweep.run(sweep.init_state(params, E), corpus.source(idx), qs,
+                      batch_axis=None)
+    arenas = np.asarray(st.arena)
+    for e in range(1, E):
+        np.testing.assert_array_equal(arenas[0], arenas[e])
+
+
+def test_sweep_one_trace_one_dispatch_indexed():
+    """Index sourcing must not break the sweep's single-jit contract."""
+    lin = make_linreg(240, 8, seed=0)
+    E = 4
+    idx = sample_index_tensor(jax.random.PRNGKey(10), lin.m, W, 1, E, K, QMAX, B)
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    qs = np.random.default_rng(5).integers(0, QMAX + 1, (E, K, W))
+    params = {"x": jnp.zeros(lin.d, jnp.float32)}
+    engine = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    for _ in range(3):
+        sweep.run(sweep.init_state(params, E), corpus.source(idx), qs)
+    assert sweep.trace_count == 1
+    assert sweep.dispatch_count == 3
