@@ -158,6 +158,21 @@ def _zero_params(setup: SimSetup) -> dict:
     return {"x": jnp.zeros(setup.data.d, jnp.float32)}
 
 
+def _require_materialized(batches, scheme: str):
+    """Gate for schemes whose batch LAYOUT is the algorithm (gradient
+    coding: worker v's [W, S+1, blk, ...] stacks in worker_block_ids order
+    ARE the code, not a sample draw — DESIGN.md §7).  Wraps the batches
+    actually handed to sweep.run, so a future data-plane change that swaps
+    in an index source fails loudly instead of silently resampling."""
+    assert not isinstance(batches, IndexedBatches), (
+        f"{scheme} requires the materialized block-stack source; an index "
+        f"stream would resample the code's block layout")
+    for leaf in jax.tree.leaves(batches):
+        assert isinstance(leaf, (jax.Array, np.ndarray)), (
+            f"{scheme} batch leaves must be concrete arrays, got {type(leaf)}")
+    return batches
+
+
 def _stack_batches(batches: list) -> tuple:
     """[(A, y)] per epoch -> ([K, W, q, b, d], [K, W, q, b])."""
     return (jnp.stack([b[0] for b in batches]), jnp.stack([b[1] for b in batches]))
@@ -372,6 +387,8 @@ def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1,
 
     engine = RoundEngine(linreg_loss, sgd(setup.lr), w, s + 1, gc_policy(code))
     sweep = SweepEngine(engine)
+    gc_blocks = _require_materialized((jnp.asarray(bA), jnp.asarray(bY)),
+                                      "gradient coding")
     # one GC "epoch" costs each worker S+1 block passes; in straggler-model
     # units a block pass ~ (m/N)/local_batch iteration-equivalents
     steps_per_block = max(setup.data.m // setup.n_workers // setup.local_batch, 1)
@@ -388,7 +405,7 @@ def run_gradient_coding(setup: SimSetup, epochs_scale: int = 1,
         [gc_decode_weights(code, rec) for rec in row] for row in recs
     ]).astype(np.float32)
     state = sweep.init_state(_zero_params(setup), n_seeds)
-    _, outs = sweep.run(state, (jnp.asarray(bA), jnp.asarray(bY)), qs,
+    _, outs = sweep.run(state, gc_blocks, qs,
                         lams=jnp.asarray(lams), batch_per_round=False,
                         keep_history=True, batch_axis=None)
     return _sweep_error_curves(setup, engine, outs["arena"], walls)

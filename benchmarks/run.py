@@ -11,6 +11,7 @@
   kernels  Pallas-kernel oracle timings + TPU roofline bounds
   sweep    SweepEngine grid vs looped RoundEngine (BENCH_sweep.json)
   data     index-sourced vs materialized data plane   (BENCH_data.json)
+  tree     tree-layout driver vs per-round/arena      (BENCH_tree.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
@@ -53,6 +54,7 @@ def main() -> None:
         lm_ablation,
         roofline_bench,
         sweep_bench,
+        tree_bench,
         variance_decay,
     )
 
@@ -68,6 +70,7 @@ def main() -> None:
         "kernels": kernel_bench.run,
         "sweep": sweep_bench.run,
         "data": data_bench.run,
+        "tree": tree_bench.run,
         "roofline": roofline_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)

@@ -1,0 +1,159 @@
+"""Tree-layout driver benchmark: the model-parallel path on the unified
+K-round engine (DESIGN.md §8) vs the legacy per-round `tree_round()` loop
+and the arena layout.
+
+What BENCH_tree.json pins:
+  * dispatches per K-round window — the unified tree driver is ONE jit
+    dispatch where the legacy per-round path paid K (plus K q/batch
+    uploads and K metric readbacks);
+  * host->device bytes per window — the tree path now rides the index
+    plane (corpus once + int32 ids) instead of materialized
+    [K, W, q_max, b, ...] stacks (DESIGN.md §7 exception 2, closed);
+  * rounds/s for the tree vs arena layouts through the SAME driver (the
+    layout cost at model_parallel=1 — on a real mesh the tree layout is
+    the only legal one, this is its single-host overhead).
+
+Runs at the reduced LM trainer's shape so the CI bench-smoke matrix keeps
+the unified-layout contract from rotting.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.straggler import StragglerModel
+from repro.data.pipeline import TokenBatcher
+from repro.data.synthetic import synthetic_tokens
+from repro.launch.steps import TrainPlan, make_train_engine
+from repro.models import model as M
+from repro.optim import sgd
+
+
+def _timed(fn, repeats):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(out_path: str = "BENCH_tree.json", rounds: int = 8, repeats: int = 3):
+    cfg = get_config("qwen2-0.5b").reduced()
+    w, qmax, b, seq = 4, 2, 2, 32
+    rng = np.random.default_rng(0)
+    toks = synthetic_tokens(rng, 256, seq, cfg.vocab)
+    bt = TokenBatcher(toks, w, 1, qmax, b, seed=0)
+    corpus = bt.device_corpus()
+    idx = bt.rounds_indices(rounds)
+    src = corpus.source(idx)
+    hidx = np.asarray(idx)
+    qs = StragglerModel(kind="shifted_exp").realize_steps_matrix(
+        np.random.default_rng(1), rounds, w, 3.0, qmax)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    plan = TrainPlan(w, qmax, b)
+    opt = sgd(1e-3)
+
+    # -- unified tree driver: K rounds, ONE dispatch, index-sourced --
+    tree_eng = make_train_engine(cfg, plan, opt=opt, layout="tree")
+
+    def fresh_params():
+        # the driver donates its state buffers on accelerators; every run
+        # must start from copies or the first dispatch deletes `params`
+        return jax.tree.map(jnp.array, params)
+
+    def run_tree():
+        st, _ = tree_eng.run(tree_eng.init_state(fresh_params(), ()), src, qs)
+        jax.block_until_ready(st.arena)
+        return st
+
+    st_tree = run_tree()  # compile
+    t_tree = _timed(run_tree, repeats)
+    tree_dispatches = 1  # per window, by construction — asserted below
+
+    # -- legacy per-round tree_round loop: K dispatches, materialized --
+    oracle = make_train_engine(cfg, plan, opt=opt, layout="tree")
+    rnd = jax.jit(oracle.tree_round())
+
+    def run_per_round():
+        p, o = params, ()
+        for k in range(rounds):
+            mb = {kk: jnp.asarray(v[hidx[k]]) for kk, v in bt.inner.arrays.items()}
+            p, o, _ = rnd(p, o, mb, jnp.asarray(qs[k], jnp.int32),
+                          jnp.asarray(k * qmax, jnp.int32))
+        jax.block_until_ready(p)
+        return p
+
+    p_loop = run_per_round()  # compile
+    t_loop = _timed(run_per_round, repeats)
+
+    # parity guard: the two paths must agree (same plan, same q-matrix)
+    max_d = max(jax.tree.leaves(jax.tree.map(
+        lambda a, c: float(jnp.max(jnp.abs(a - c))) if a.size else 0.0,
+        st_tree.arena, p_loop)))
+
+    # -- arena driver, same index source (the worker-parallel layout) --
+    arena_eng = make_train_engine(cfg, plan, opt=opt, layout="arena")
+
+    def run_arena():
+        st, _ = arena_eng.run(arena_eng.init_state(fresh_params(), ()), src, qs)
+        jax.block_until_ready(st.arena)
+
+    run_arena()  # compile
+    t_arena = _timed(run_arena, repeats)
+
+    # -- upload accounting per window --
+    mat_bytes = int(sum(v[hidx].nbytes for v in bt.inner.arrays.values()))
+    idx_bytes = int(hidx.astype(np.int32).nbytes)
+    corpus_bytes = int(corpus.nbytes)
+
+    assert tree_eng.dispatch_count == repeats + 1  # ONE dispatch per window
+    assert tree_eng.trace_count == 1
+    byte_ratio = mat_bytes / idx_bytes
+    assert byte_ratio > 10.0, f"index plane ratio {byte_ratio:.1f}x"
+    assert max_d == 0.0, f"tree driver diverged from per-round oracle: {max_d}"
+
+    result = {
+        "config": {"arch": cfg.name, "workers": w, "q_max": qmax,
+                   "local_batch": b, "seq_len": seq, "rounds": rounds,
+                   "repeats": repeats},
+        "dispatches_per_window": {"tree_driver": 1, "per_round_legacy": rounds},
+        "upload_bytes_per_window": {
+            "indexed": idx_bytes, "materialized": mat_bytes,
+            "corpus_once": corpus_bytes, "ratio": byte_ratio,
+        },
+        "rounds_per_s": {
+            "tree_driver": rounds / t_tree,
+            "per_round_legacy": rounds / t_loop,
+            "arena_driver": rounds / t_arena,
+        },
+        "driver_vs_per_round_speedup": t_loop / t_tree,
+        "tree_vs_arena_wall_ratio": t_tree / t_arena,
+        "max_abs_param_delta_vs_per_round": max_d,
+    }
+    pathlib.Path(out_path).write_text(json.dumps(result, indent=2))
+    return [
+        ("tree_driver", f"{t_tree * 1e6:.0f}",
+         f"rounds_per_s={rounds / t_tree:.2f} dispatches=1"),
+        ("tree_per_round_legacy", f"{t_loop * 1e6:.0f}",
+         f"rounds_per_s={rounds / t_loop:.2f} dispatches={rounds} "
+         f"speedup={t_loop / t_tree:.2f}x"),
+        ("tree_arena_driver", f"{t_arena * 1e6:.0f}",
+         f"rounds_per_s={rounds / t_arena:.2f} tree/arena="
+         f"{t_tree / t_arena:.2f}x"),
+        ("tree_upload_bytes", f"{idx_bytes}",
+         f"materialized={mat_bytes} ratio={byte_ratio:.0f}x "
+         f"corpus_once={corpus_bytes} written={out_path}"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

@@ -12,6 +12,12 @@ in `RoundEngine.shardmap_round` (core/engine.py) and this wrapper only
 adapts the legacy (loss_fn, opt, cfg, mesh, param_specs) signature.  Both
 forms are numerically identical (tests/test_distributed.py,
 tests/test_shardmap_round.py).
+
+`make_shardmap_engine` goes one step further (DESIGN.md §8): it returns a
+tree-layout RoundEngine whose round body IS the shard_map form, so K
+rounds of the explicit-collective round scan inside ONE jit through the
+same `_driver_fn` window driver as every other layout — pre-sampled
+[K, W] q, donated state, in-jit IndexedBatches gathers included.
 """
 from __future__ import annotations
 
@@ -24,6 +30,18 @@ from repro.core.engine import RoundEngine, RoundPolicy
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
+
+
+def _shardmap_policy(cfg: AnytimeConfig) -> RoundPolicy:
+    """The one policy both shard_map builders share — keep the per-round
+    oracle and the window engine describing the SAME scheme."""
+    return RoundPolicy(
+        name=f"shardmap_{cfg.weighting}",
+        weighting=cfg.weighting,
+        iterate_mode=cfg.iterate_mode,
+        combine_opt_state=cfg.combine_opt_state,
+        s_redundancy=cfg.s_redundancy,
+    )
 
 
 def make_shardmap_round(
@@ -40,12 +58,27 @@ def make_shardmap_round(
     param_specs (replicated over the worker axes); output params identical
     on every worker (psum-combined).
     """
-    policy = RoundPolicy(
-        name=f"shardmap_{cfg.weighting}",
-        weighting=cfg.weighting,
-        iterate_mode=cfg.iterate_mode,
-        combine_opt_state=cfg.combine_opt_state,
-        s_redundancy=cfg.s_redundancy,
-    )
-    engine = RoundEngine(loss_fn, opt, cfg.n_workers, cfg.max_local_steps, policy)
+    engine = RoundEngine(loss_fn, opt, cfg.n_workers, cfg.max_local_steps,
+                         _shardmap_policy(cfg))
     return engine.shardmap_round(mesh, param_specs)
+
+
+def make_shardmap_engine(
+    loss_fn: Callable,
+    opt: Optimizer,
+    cfg: AnytimeConfig,
+    mesh: Mesh,
+    param_specs: PyTree,
+) -> RoundEngine:
+    """The shard_map form on the unified window driver.
+
+    Returns a tree-layout RoundEngine whose per-round body is the explicit
+    psum-pair combine: `engine.init_state(params, opt_state)` then
+    `engine.run(state, batches, qs)` executes a whole [K, W] q-matrix of
+    shard_map rounds as ONE jit dispatch (batches may be an IndexedBatches
+    source — the gather happens inside the jit, before the shard_map body).
+    The per-round `make_shardmap_round` form stays as the parity oracle.
+    """
+    engine = RoundEngine(loss_fn, opt, cfg.n_workers, cfg.max_local_steps,
+                         _shardmap_policy(cfg), layout="tree")
+    return engine.use_shardmap(mesh, param_specs)

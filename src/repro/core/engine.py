@@ -21,18 +21,24 @@ algorithms.  This module is the single substrate (DESIGN.md §5):
     gradient coding (x' = x0 - lr * sum_v a_v c_v), and with lam_v = 1 on
     participants it is round-stale Hogwild async (every delta applied to
     the master copy, all computed against the stale round-start params).
-  * Two state layouts share the policy logic:
+  * Two state layouts share the policy logic AND the multi-round driver
+    (DESIGN.md §8 — layout is a constructor parameter, not a code fork):
       - 'arena': the whole model lives in one contiguous f32 vector
         (core/arena.py); the combine is ONE [R, N] x [R] contraction that
         lowers to `kernels/weighted_combine` (or a fused XLA einsum)
-        instead of a per-leaf tree-map.  This is the hot path and the only
-        layout the multi-round driver uses.
-      - 'tree': per-leaf combine that preserves model-parallel shardings
-        (the pjit path in launch/steps.py keeps leaves sharded over the
-        'model' mesh axes; flattening would force an all-gather).
+        instead of a per-leaf tree-map.  This is the worker-parallel hot
+        path.
+      - 'tree': `EngineState.arena` holds the params PYTREE itself and the
+        combine is per-leaf, preserving model-parallel shardings (the pjit
+        path in launch/steps.py keeps leaves sharded over the 'model' mesh
+        axes; flattening would force an all-gather).  The same `_driver_fn`
+        scans K rounds of this state with donated buffers and in-jit
+        `IndexedBatches` gathers — `tree_round()` remains the per-round
+        parity oracle.
   * `run()` drives K rounds inside ONE jax.jit via lax.scan with buffer
     donation, consuming a pre-sampled [K, W] q-matrix from StragglerModel:
-    zero host round-trips between rounds, one compile for any K.
+    zero host round-trips between rounds, one compile for any K — for
+    EITHER layout.
 
 The legacy `core.anytime.anytime_round` / `core.generalized` /
 `core.baselines.*` entry points remain as reference oracles; tests compare
@@ -192,11 +198,16 @@ POLICIES = {
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class EngineState:
-    """Device-resident training state.
+    """Device-resident training state (either layout).
 
-    arena     [N] f32 for synchronized policies (all workers share x0), or
-              [W, N] for the generalized policy (unsynchronized workers).
-    opt_arena [No] or [W, No] f32 (size 0 for stateless SGD).
+    arena     layout='arena': [N] f32 for synchronized policies (all
+              workers share x0), or [W, N] for the generalized policy
+              (unsynchronized workers).
+              layout='tree': the params PYTREE itself (leaves keep their
+              shapes, dtypes and mesh shardings; generalized policies
+              carry a leading [W] worker axis on every leaf).
+    opt_arena [No] / [W, No] f32 (size 0 for stateless SGD), or the
+              opt-state pytree under the tree layout.
     rstep     scalar int32 round counter (drives LR schedules).
     """
 
@@ -223,6 +234,12 @@ def _mean_loss(lam_w: jax.Array, losses: jax.Array) -> jax.Array:
 class RoundEngine:
     """Drives rounds of any RoundPolicy over one loss/optimizer pair.
 
+    layout        'arena'  flat f32 state, whole-model contraction combine
+                           (worker-parallel hot path; required for fused)
+                  'tree'   pytree state, per-leaf combine that preserves
+                           model-parallel leaf shardings (the
+                           cfg.model_parallel > 1 path).  Both layouts run
+                           through the SAME single-jit K-round driver.
     combine_impl  'einsum'           one fused XLA contraction (default;
                                      runs everywhere)
                   'kernel'           Pallas weighted_combine (TPU hot path)
@@ -252,11 +269,16 @@ class RoundEngine:
         max_comm_steps: int = 0,
         combine_impl: str = "einsum",
         fused: str | bool = False,
+        layout: str = "arena",
     ):
         if combine_impl not in ("einsum", "kernel", "kernel_interpret"):
             raise ValueError(f"bad combine_impl {combine_impl!r}")
         if fused not in (False, "pallas", "interpret"):
             raise ValueError(f"bad fused {fused!r}")
+        if layout not in ("arena", "tree"):
+            raise ValueError(f"bad layout {layout!r}")
+        if fused and layout != "arena":
+            raise ValueError("fused round requires the arena layout")
         if policy.generalized and max_comm_steps < 1:
             raise ValueError("generalized policy needs max_comm_steps >= 1")
         if fused and (
@@ -267,6 +289,7 @@ class RoundEngine:
                 f"fused round supports non-affine 'sgd' policies with "
                 f"iterate_mode='last'; got policy {policy.name!r}"
             )
+        self.layout = layout
         self.loss_fn = loss_fn
         self.opt = opt
         self.n_workers = n_workers
@@ -280,8 +303,9 @@ class RoundEngine:
             if policy.step_scales is not None
             else None
         )
-        self.pspec = None  # ArenaSpec, set by init_state
+        self.pspec = None  # ArenaSpec, set by init_state (arena layout only)
         self.ospec = None
+        self._shardmap_fn = None  # tree-layout round override (use_shardmap)
         self._driver = None
         # Observability for the single-compile / zero-host-sync contract:
         # trace_count increments each time the driver body is TRACED;
@@ -361,30 +385,57 @@ class RoundEngine:
             return self._tree_generalized_round
 
         def round_fn(params, opt_state, batch, q, step=jnp.zeros((), jnp.int32), lam=None):
-            _, s_stack, x_stack, losses = self._vmap_workers(params, opt_state, batch, q, step)
-            lam_w = self._weights(q, lam)
-            if self.policy.affine:
-                x0_w = 1.0 - jnp.sum(lam_w)
-                weighted = combine_pytrees(x_stack, lam_w)
-                new_params = jax.tree.map(
-                    lambda xs, p0: xs + x0_w.astype(p0.dtype) * p0, weighted, params
-                )
-                new_opt = jax.tree.map(lambda s: s[0], s_stack)
-            else:
-                new_params = combine_pytrees(x_stack, lam_w)
-                if self.policy.combine_opt_state:
-                    new_opt = combine_pytrees(s_stack, lam_w)
-                else:
-                    new_opt = jax.tree.map(lambda s: s[0], s_stack)
-            metrics = {
-                "loss": _mean_loss(lam_w, losses),
-                "lambdas": lam_w,
-                "q_total": jnp.sum(q),
-                "worker_loss": losses,
-            }
-            return new_params, new_opt, metrics
+            return self._tree_plain_round(params, opt_state, batch, q, step, lam)
 
         return round_fn
+
+    def _tree_plain_round(self, params, opt_state, batch, q, step, lam=None):
+        """One synchronized round over pytrees (per-leaf combine — the body
+        `tree_round()` wraps and the tree-layout driver scans)."""
+        _, s_stack, x_stack, losses = self._vmap_workers(params, opt_state, batch, q, step)
+        lam_w = self._weights(q, lam)
+        if self.policy.affine:
+            x0_w = 1.0 - jnp.sum(lam_w)
+            weighted = combine_pytrees(x_stack, lam_w)
+            new_params = jax.tree.map(
+                lambda xs, p0: xs + x0_w.astype(p0.dtype) * p0, weighted, params
+            )
+            new_opt = jax.tree.map(lambda s: s[0], s_stack)
+        else:
+            new_params = combine_pytrees(x_stack, lam_w)
+            if self.policy.combine_opt_state:
+                new_opt = combine_pytrees(s_stack, lam_w)
+            else:
+                new_opt = jax.tree.map(lambda s: s[0], s_stack)
+        metrics = {
+            "loss": _mean_loss(lam_w, losses),
+            "lambdas": lam_w,
+            "q_total": jnp.sum(q),
+            "worker_loss": losses,
+        }
+        return new_params, new_opt, metrics
+
+    def _tree_state_round(self, state: EngineState, batch, q, lam=None,
+                          comm_batch=None, q_bar=None) -> tuple[EngineState, dict]:
+        """One tree-layout round over `EngineState` — the same driver-facing
+        signature as `_arena_round`, so `_driver_fn` scans either layout.
+        `state.arena` IS the params pytree (worker-stacked for generalized
+        policies); leaf shardings pass through the per-leaf combine."""
+        if self._shardmap_fn is not None:
+            step0 = state.rstep * self.max_local_steps
+            p, o, metrics = self._shardmap_fn(state.arena, state.opt_arena,
+                                              batch, q, step0)
+            return EngineState(p, o, state.rstep + 1), metrics
+        if self.policy.generalized:
+            step0 = state.rstep * (self.max_local_steps + self.max_comm_steps)
+            p, o, metrics = self._tree_generalized_round(
+                state.arena, state.opt_arena, batch, comm_batch, q, q_bar, step0
+            )
+            return EngineState(p, o, state.rstep + 1), metrics
+        step0 = state.rstep * self.max_local_steps
+        p, o, metrics = self._tree_plain_round(state.arena, state.opt_arena,
+                                               batch, q, step0, lam)
+        return EngineState(p, o, state.rstep + 1), metrics
 
     def _tree_generalized_round(self, wparams, wopt, batch, comm_batch, q, q_bar,
                                 step=jnp.zeros((), jnp.int32)):
@@ -428,11 +479,44 @@ class RoundEngine:
             stack, wts, interpret=(self.combine_impl == "kernel_interpret")
         )
 
-    def init_state(self, params: PyTree, opt_state: Optional[PyTree] = None) -> EngineState:
-        """Flatten (params, opt_state) into the arena; broadcasts to the
-        per-worker stack for the generalized policy."""
+    def init_state(self, params: PyTree, opt_state: Optional[PyTree] = None,
+                   step=None, worker_stacked: bool = False) -> EngineState:
+        """(params, opt_state) -> EngineState in the engine's layout.
+
+        layout='arena': flattens into the contiguous f32 arena; broadcasts
+        to the per-worker stack for the generalized policy.
+        layout='tree': stores the pytrees as-is — leaves keep their dtypes
+        and mesh shardings (nothing is copied or reflattened).
+
+        step           optional round counter (traced or concrete) so
+                       callers resuming or driving per-round steps stop
+                       reconstructing `EngineState(st.arena, st.opt_arena,
+                       rstep)` by hand.
+        worker_stacked leaves already carry the generalized policy's
+                       leading [W] worker axis (e.g. the Sec.-V production
+                       step's sharded wparams) — skip the broadcast.
+        """
         if opt_state is None:
             opt_state = self.opt.init(params)
+        rstep = jnp.zeros((), jnp.int32) if step is None \
+            else jnp.asarray(step, jnp.int32)
+        if worker_stacked and not self.policy.generalized:
+            raise ValueError("worker_stacked only applies to generalized policies")
+        if self.layout == "tree":
+            if self.policy.generalized and not worker_stacked:
+                params = jax.tree.map(
+                    lambda l: jnp.broadcast_to(l[None], (self.n_workers,) + l.shape),
+                    params)
+                opt_state = jax.tree.map(
+                    lambda l: jnp.broadcast_to(l[None], (self.n_workers,) + l.shape),
+                    opt_state)
+            return EngineState(arena=params, opt_arena=opt_state, rstep=rstep)
+        if worker_stacked:
+            self.pspec = AR.arena_spec(jax.tree.map(lambda l: l[0], params))
+            self.ospec = AR.arena_spec(jax.tree.map(lambda l: l[0], opt_state))
+            return EngineState(arena=AR.stack_to_arena(params, self.pspec),
+                               opt_arena=AR.stack_to_arena(opt_state, self.ospec),
+                               rstep=rstep)
         self.pspec = AR.arena_spec(params)
         self.ospec = AR.arena_spec(opt_state)
         if self.fused and (
@@ -448,7 +532,7 @@ class RoundEngine:
         if self.policy.generalized:
             vec = AR.broadcast_arena(vec, self.n_workers)
             ovec = AR.broadcast_arena(ovec, self.n_workers)
-        return EngineState(arena=vec, opt_arena=ovec, rstep=jnp.zeros((), jnp.int32))
+        return EngineState(arena=vec, opt_arena=ovec, rstep=rstep)
 
     def _fused_arena_round(self, state: EngineState, batch, q, lam):
         """The whole round as ONE Pallas kernel (kernels/fused_round): the
@@ -550,14 +634,23 @@ class RoundEngine:
         }
         return EngineState(new_rows, s2_rows, state.rstep + 1), metrics
 
+    def _state_round(self, state: EngineState, batch, q, lam=None,
+                     comm_batch=None, q_bar=None) -> tuple[EngineState, dict]:
+        """One round over `EngineState`, dispatched by layout (the single
+        round body the driver scans — layout is a parameter, not a fork)."""
+        if self.layout == "tree":
+            return self._tree_state_round(state, batch, q, lam, comm_batch, q_bar)
+        return self._arena_round(state, batch, q, lam, comm_batch, q_bar)
+
     def round(self, state: EngineState, batch, q, lam=None, comm_batch=None,
               q_bar=None) -> tuple[EngineState, dict]:
-        """One arena round (un-jitted building block; prefer `run`)."""
+        """One round in the engine's layout (un-jitted building block;
+        prefer `run`)."""
         if isinstance(batch, IndexedBatches):
             batch = batch.gather()
         if isinstance(comm_batch, IndexedBatches):
             comm_batch = comm_batch.gather()
-        return self._arena_round(state, batch, q, lam, comm_batch, q_bar)
+        return self._state_round(state, batch, q, lam, comm_batch, q_bar)
 
     # -- multi-round driver: K rounds, ONE jit, zero host round-trips -------
     def _driver_fn(self, state, batches, qs, lams, comm_batches, qbars,
@@ -565,7 +658,9 @@ class RoundEngine:
         """The raw (un-jitted) K-round scan.  `run` jits it directly; the
         SweepEngine (core/sweep.py) vmaps it over an experiment axis first —
         both consume the SAME round semantics, so sweep results are the
-        engine's results by construction.
+        engine's results by construction.  The scan body is `_state_round`,
+        so BOTH layouts (flat arena and sharding-preserving tree) and the
+        shard_map backend ride the same window driver.
 
         `batches` (and `comm_batches`) may be an `IndexedBatches` source:
         the scan body then gathers each round's microbatches from the
@@ -588,7 +683,7 @@ class RoundEngine:
                 batch = xs["batch"] if batch_per_round else batches
             comm = comm_batches.gather(xs["comm_idx"]) if c_indexed \
                 else xs.get("comm")
-            new_st, metrics = self._arena_round(
+            new_st, metrics = self._state_round(
                 st, batch, xs["q"], xs.get("lam"), comm, xs.get("q_bar")
             )
             if keep_history:
@@ -649,23 +744,43 @@ class RoundEngine:
 
     # -- exits ---------------------------------------------------------------
     def finalize(self, state: EngineState, q: Optional[jax.Array] = None):
-        """Arena -> (params, opt_state).  For the generalized policy the
-        worker stack is lambda-combined (pass the last round's q, else
-        uniform)."""
-        vec, ovec = state.arena, state.opt_arena
+        """State -> (params, opt_state) pytrees.  For the generalized policy
+        the worker stack is lambda-combined (pass the last round's q, else
+        uniform).  Tree-layout states already ARE the pytrees (leaf
+        shardings pass through untouched)."""
         if self.policy.generalized:
             if q is not None:
                 lam = anytime_lambdas(jnp.asarray(q))
             else:
                 lam = jnp.full((self.n_workers,), 1.0 / self.n_workers, jnp.float32)
-            vec = self._combine_arena(vec, lam)
-            ovec = self._combine_arena(ovec, lam)
-        return AR.from_arena(vec, self.pspec), AR.from_arena(ovec, self.ospec)
+            if self.layout == "tree":
+                return (combine_pytrees(state.arena, lam),
+                        combine_pytrees(state.opt_arena, lam))
+            return (AR.from_arena(self._combine_arena(state.arena, lam), self.pspec),
+                    AR.from_arena(self._combine_arena(state.opt_arena, lam), self.ospec))
+        if self.layout == "tree":
+            return state.arena, state.opt_arena
+        return (AR.from_arena(state.arena, self.pspec),
+                AR.from_arena(state.opt_arena, self.ospec))
 
     def params_of(self, state: EngineState, q: Optional[jax.Array] = None) -> PyTree:
         return self.finalize(state, q)[0]
 
     # -- shard_map backend (explicit-collective production form) -------------
+    def use_shardmap(self, mesh, param_specs) -> "RoundEngine":
+        """Route the tree-layout driver through the explicit shard_map round.
+
+        After this call, `round`/`run` execute `shardmap_round`'s psum-pair
+        body per round — K rounds of the explicit-collective form scan
+        inside the same single jit as every other layout (the
+        core/distributed.py window path).  Requires layout='tree' (the
+        shard_map body consumes/produces pytrees with mesh placements).
+        """
+        if self.layout != "tree":
+            raise ValueError("shard_map backend requires layout='tree'")
+        self._shardmap_fn = self.shardmap_round(mesh, param_specs)
+        return self
+
     def shardmap_round(self, mesh, param_specs) -> Callable:
         """The explicit psum form of the combine: each program instance IS
         one worker; the master combine is a weighted all-reduce over the

@@ -84,9 +84,19 @@ class SweepEngine:
 
         Every experiment starts from the same iterate (the paper's setup);
         per-experiment starts can be built by stacking engine.init_state
-        results along axis 0 with jax.tree.map.
+        results along axis 0 with jax.tree.map.  Works for BOTH engine
+        layouts: arena states broadcast their [N] rows; tree states
+        broadcast every pytree leaf to [E, ...] (small-model grids over
+        the sharding-preserving layout, DESIGN.md §8).
         """
         st = self.engine.init_state(params, opt_state)
+        bcast = lambda l: jnp.broadcast_to(l[None], (n_experiments,) + l.shape)
+        if self.engine.layout == "tree":
+            return EngineState(
+                arena=jax.tree.map(bcast, st.arena),
+                opt_arena=jax.tree.map(bcast, st.opt_arena),
+                rstep=jnp.zeros((n_experiments,), jnp.int32),
+            )
         return EngineState(
             arena=AR.broadcast_arena(st.arena, n_experiments),
             opt_arena=AR.broadcast_arena(st.opt_arena, n_experiments),
@@ -122,8 +132,10 @@ class SweepEngine:
 
             def one(st, b, q, lam, comm, qb, hv):
                 eng = self._engine_for(hv)
-                bb = IndexedBatches(batches.corpus, b) if b_indexed else b
-                cc = IndexedBatches(comm_batches.corpus, comm) if c_indexed else comm
+                bb = IndexedBatches(batches.corpus, b, batches.constraint) \
+                    if b_indexed else b
+                cc = IndexedBatches(comm_batches.corpus, comm,
+                                    comm_batches.constraint) if c_indexed else comm
                 return eng._driver_fn(st, bb, q, lam, cc, qb,
                                       batch_per_round, keep_history)
 
@@ -172,9 +184,8 @@ class SweepEngine:
 
     # -- exits ---------------------------------------------------------------
     def finalize(self, state: EngineState, e: int):
-        """Experiment e's (params, opt_state) pytrees."""
-        one = EngineState(arena=state.arena[e], opt_arena=state.opt_arena[e],
-                          rstep=state.rstep[e])
+        """Experiment e's (params, opt_state) pytrees (either layout)."""
+        one = jax.tree.map(lambda l: l[e], state)
         return self.engine.finalize(one)
 
     def params_of(self, state: EngineState, e: int) -> PyTree:

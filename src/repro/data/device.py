@@ -56,13 +56,25 @@ class IndexedBatches:
     idx     int32 global sample ids: [W, q_max, b] (one static round),
             [K, W, q_max, b] (a driver window), or [E, K, W, q_max, b]
             (a sweep's per-experiment streams over the ONE shared corpus).
+    constraint  optional static callable applied to each gathered batch —
+            a sharding-aware `DeviceCorpus` installs ONE
+            `with_sharding_constraint` closure per corpus here, so the
+            in-jit `jnp.take` lands its [W, q_max, b, ...] batch leaves on
+            the mesh layout the tree-layout round needs (DESIGN.md §8).
+            It is treedef metadata: reuse the same corpus (and therefore
+            the same closure object) across windows to keep the driver's
+            single-trace contract.
     """
 
     corpus: PyTree
     idx: jax.Array
+    constraint: Optional[Any] = None
 
     def gather(self, idx: Optional[jax.Array] = None) -> PyTree:
-        return gather_pytree(self.corpus, self.idx if idx is None else idx)
+        batch = gather_pytree(self.corpus, self.idx if idx is None else idx)
+        if self.constraint is not None:
+            batch = self.constraint(batch)
+        return batch
 
     @property
     def index_nbytes(self) -> int:
@@ -70,7 +82,7 @@ class IndexedBatches:
 
 
 jax.tree_util.register_dataclass(
-    IndexedBatches, data_fields=["corpus", "idx"], meta_fields=[]
+    IndexedBatches, data_fields=["corpus", "idx"], meta_fields=["constraint"]
 )
 
 
@@ -80,9 +92,18 @@ class DeviceCorpus:
     Any pytree of arrays with a shared leading sample dim works: the LM
     trainer uses ``{"tokens", "labels", "loss_mask"}`` dicts, the linreg
     benchmarks use ``(A, y)`` tuples (matching their loss signatures).
+
+    Sharding-aware form (the model-parallel tree path, DESIGN.md §8):
+    `shardings` places the corpus leaves on the mesh at upload (typically
+    replicated — every worker's Table-I pool spans the whole sample axis);
+    `batch_shardings` pins the layout of each GATHERED batch leaf
+    ([W, q_max, b, ...], worker axis over ("pod","data")) via one
+    `with_sharding_constraint` closure built HERE, once per corpus, so
+    every `source()` window shares it and the driver never retraces.
     """
 
-    def __init__(self, arrays: PyTree):
+    def __init__(self, arrays: PyTree, shardings: Optional[PyTree] = None,
+                 batch_shardings: Optional[PyTree] = None):
         leaves = jax.tree.leaves(arrays)
         if not leaves:
             raise ValueError("empty corpus")
@@ -90,7 +111,14 @@ class DeviceCorpus:
         if len(lead) != 1:
             raise ValueError(f"inconsistent sample counts: {sorted(lead)}")
         self.arrays = jax.tree.map(jnp.asarray, arrays)
+        if shardings is not None:
+            self.arrays = jax.device_put(self.arrays, shardings)
         self.m = leaves[0].shape[0]
+        if batch_shardings is None:
+            self._constraint = None
+        else:
+            self._constraint = lambda batch: jax.lax.with_sharding_constraint(
+                batch, batch_shardings)
 
     @property
     def nbytes(self) -> int:
@@ -116,7 +144,8 @@ class DeviceCorpus:
                     f"sample ids out of range for corpus m={self.m}: "
                     f"[{idx.min()}, {idx.max()}]"
                 )
-        return IndexedBatches(self.arrays, jnp.asarray(idx, jnp.int32))
+        return IndexedBatches(self.arrays, jnp.asarray(idx, jnp.int32),
+                              self._constraint)
 
 
 # ---------------------------------------------------------------------------

@@ -58,7 +58,11 @@ class AnytimeBatcher:
         self.pools = [
             worker_sample_ids(v, self.m, n_workers, s_redundancy) for v in range(n_workers)
         ]
+        # index-plan cursor: rounds already planned on this batcher's rng
+        # streams (the data-plane position a checkpoint must restore)
+        self.rounds_planned = 0
         self._corpus: Optional[DeviceCorpus] = None
+        self._corpus_placement: Optional[tuple] = None
 
     # -- index planning ------------------------------------------------------
     def round_indices(self) -> np.ndarray:
@@ -73,21 +77,57 @@ class AnytimeBatcher:
         materialized stack is what keeps the data plane off the
         host->device path.
         """
+        self.rounds_planned += n_rounds
         return np.stack([
             self.rngs[v].choice(self.pools[v], size=(n_rounds, self.q_max, self.b),
                                 replace=True)
             for v in range(self.n_workers)
         ], axis=1)
 
+    def skip_rounds(self, n_rounds: int) -> None:
+        """Advance the index-plan cursor WITHOUT emitting a plan.
+
+        Window-partition invariance (per-worker round-ordered rng streams)
+        makes this exact: a batcher that skips r rounds and then plans is
+        bit-identical to one that planned r rounds and kept going — the
+        checkpoint-resume path (launch/train.py --resume) restores the
+        data-plane cursor this way instead of persisting rng internals.
+        Replayed in bounded chunks (the same invariance again) so skipping
+        a long run never materializes the full discarded plan.
+        """
+        left = n_rounds
+        while left > 0:
+            chunk = min(left, 1024)
+            self.rounds_indices(chunk)
+            left -= chunk
+
     def gather(self, idx: np.ndarray) -> dict[str, np.ndarray]:
         """Host gather of an index plan (the materialized layout)."""
         return {k: arr[idx] for k, arr in self.arrays.items()}
 
     # -- device-resident source ---------------------------------------------
-    def device_corpus(self) -> DeviceCorpus:
-        """The sample-major arrays on device — uploaded once, then cached."""
+    def device_corpus(self, shardings=None, batch_shardings=None) -> DeviceCorpus:
+        """The sample-major arrays on device — uploaded once, then cached.
+
+        Optional mesh placement (the model-parallel tree path): `shardings`
+        places corpus leaves at upload, `batch_shardings` pins gathered
+        batch-leaf layouts (see DeviceCorpus / sharding.specs
+        .corpus_shardings).  The cache is keyed on first use; a bare
+        `device_corpus()` afterwards returns the cached corpus (that is how
+        `rounds_source` reaches it), but EXPLICITLY requesting a different
+        placement fails loudly — silently returning the cached corpus
+        would train on the wrong batch layout.
+        """
+        placement = (shardings is not None, batch_shardings is not None)
         if self._corpus is None:
-            self._corpus = DeviceCorpus(self.arrays)
+            self._corpus = DeviceCorpus(self.arrays, shardings=shardings,
+                                        batch_shardings=batch_shardings)
+            self._corpus_placement = placement
+        elif placement != (False, False) and placement != self._corpus_placement:
+            raise ValueError(
+                "device_corpus() already cached with different sharding "
+                "args; use a separate batcher for a differently-placed corpus"
+            )
         return self._corpus
 
     def rounds_source(self, n_rounds: int) -> IndexedBatches:
@@ -140,14 +180,22 @@ class TokenBatcher:
             arrays, n_workers, s_redundancy, max_local_steps, local_batch, seed
         )
 
+    @property
+    def arrays(self) -> dict[str, np.ndarray]:
+        """The sample-major corpus arrays (e.g. for placement-spec builders)."""
+        return self.inner.arrays
+
     def round_indices(self) -> np.ndarray:
         return self.inner.round_indices()
 
     def rounds_indices(self, n_rounds: int) -> np.ndarray:
         return self.inner.rounds_indices(n_rounds)
 
-    def device_corpus(self) -> DeviceCorpus:
-        return self.inner.device_corpus()
+    def skip_rounds(self, n_rounds: int) -> None:
+        self.inner.skip_rounds(n_rounds)
+
+    def device_corpus(self, shardings=None, batch_shardings=None) -> DeviceCorpus:
+        return self.inner.device_corpus(shardings, batch_shardings)
 
     def rounds_source(self, n_rounds: int) -> IndexedBatches:
         return self.inner.rounds_source(n_rounds)

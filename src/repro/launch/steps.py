@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig, input_specs
-from repro.core.engine import EngineState, RoundEngine, RoundPolicy, generalized_policy
+from repro.core.engine import RoundEngine, RoundPolicy, generalized_policy
 from repro.models import model as M
 from repro.models.kvcache import cache_specs
 from repro.optim.optimizers import Optimizer, sgd
@@ -44,6 +44,38 @@ class TrainPlan:
         return TrainPlan(n_workers, q_max, per)
 
 
+def resolve_layout(cfg: ModelConfig, layout: str = "auto") -> str:
+    """'auto' -> 'tree' under model parallelism, else 'arena' (DESIGN.md §5/§8)."""
+    if layout == "auto":
+        return "tree" if cfg.model_parallel > 1 else "arena"
+    if layout not in ("tree", "arena"):
+        raise ValueError(f"bad layout {layout!r}")
+    return layout
+
+
+def make_train_engine(
+    cfg: ModelConfig,
+    plan: TrainPlan,
+    opt: Optional[Optimizer] = None,
+    weighting: str = "anytime",
+    iterate_mode: str = "last",
+    layout: str = "auto",
+) -> RoundEngine:
+    """The RoundEngine behind the train step, in the resolved layout.
+
+    Callers that want the K-round single-jit window (launch/train.py,
+    benchmarks) drive `engine.run` directly; `make_train_step` wraps the
+    same engine's one-round form.
+    """
+    opt = opt or sgd(3e-4)
+    policy = RoundPolicy(
+        name=f"train_{weighting}", weighting=weighting, iterate_mode=iterate_mode
+    )
+    loss = lambda p, mb: M.loss_fn(p, cfg, mb)
+    return RoundEngine(loss, opt, plan.n_workers, plan.q_max, policy,
+                       layout=resolve_layout(cfg, layout))
+
+
 def make_train_step(
     cfg: ModelConfig,
     plan: TrainPlan,
@@ -59,38 +91,22 @@ def make_train_step(
     batch leaves [W, q_max, b, ...]; q int32[W]; rstep scalar round index.
     The paper's local optimizer is plain SGD (no state) — the default.
 
-    layout (DESIGN.md §5): 'tree' keeps the per-leaf combine, preserving
+    layout (DESIGN.md §5/§8): 'tree' keeps the per-leaf combine, preserving
     model-parallel shardings (required when cfg.model_parallel > 1 — the
     flat arena would force an all-gather over the 'model' axes); 'arena'
     round-trips through the contiguous arena so the combine is one
     whole-model contraction (pure worker-parallel hot path).  'auto' picks
-    by cfg.model_parallel.
+    by cfg.model_parallel.  BOTH layouts run the same engine round —
+    layout is a RoundEngine parameter, not a fork here.
     """
-    opt = opt or sgd(3e-4)
-    policy = RoundPolicy(
-        name=f"train_{weighting}", weighting=weighting, iterate_mode=iterate_mode
-    )
-    loss = lambda p, mb: M.loss_fn(p, cfg, mb)
-    engine = RoundEngine(loss, opt, plan.n_workers, plan.q_max, policy)
-    if layout == "auto":
-        layout = "tree" if cfg.model_parallel > 1 else "arena"
-    if layout == "tree":
-        rnd = engine.tree_round()
+    engine = make_train_engine(cfg, plan, opt, weighting, iterate_mode, layout)
 
-        def step(params, opt_state, batch, q, rstep):
-            return rnd(params, opt_state, batch, q, rstep * plan.q_max)
+    def step(params, opt_state, batch, q, rstep):
+        st = engine.init_state(params, opt_state, step=rstep)
+        st, metrics = engine.round(st, batch, q)
+        new_params, new_opt = engine.finalize(st)
+        return new_params, new_opt, metrics
 
-    elif layout == "arena":
-
-        def step(params, opt_state, batch, q, rstep):
-            st = engine.init_state(params, opt_state)
-            st = EngineState(st.arena, st.opt_arena, rstep)
-            st, metrics = engine.round(st, batch, q)
-            new_params, new_opt = engine.finalize(st)
-            return new_params, new_opt, metrics
-
-    else:
-        raise ValueError(f"bad layout {layout!r}")
     return step
 
 
@@ -106,19 +122,21 @@ def make_generalized_step(
         wparams', wopt', metrics = step(wparams, wopt, batch, comm_batch, q, q_bar, rstep)
     wparams leaves carry the worker axis [W, ...] (sharded over pod/data —
     workers are no longer synchronized at round start, paper Sec. V).
-    Runs through the RoundEngine's generalized tree round (the worker-
+    Runs through the RoundEngine's tree-layout state round (the worker-
     stacked leaves stay sharded; core/generalized.py remains the oracle).
     """
     opt = opt or sgd(3e-4)
     qc = max(int(plan.q_max * comm_frac), 1)
     loss = lambda p, mb: M.loss_fn(p, cfg, mb)
     engine = RoundEngine(
-        loss, opt, plan.n_workers, plan.q_max, generalized_policy(), max_comm_steps=qc
+        loss, opt, plan.n_workers, plan.q_max, generalized_policy(),
+        max_comm_steps=qc, layout="tree",
     )
-    rnd = engine.tree_round()
 
     def step(wparams, wopt, batch, comm_batch, q, q_bar, rstep):
-        return rnd(wparams, wopt, batch, comm_batch, q, q_bar, rstep * (plan.q_max + qc))
+        st = engine.init_state(wparams, wopt, step=rstep, worker_stacked=True)
+        st, metrics = engine.round(st, batch, q, comm_batch=comm_batch, q_bar=q_bar)
+        return st.arena, st.opt_arena, metrics
 
     return step, qc
 

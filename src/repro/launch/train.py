@@ -15,6 +15,19 @@ materialized`` keeps the legacy host-built [K, W, q_max, b, ...] stacks,
 windowed by --rounds-per-jit (default 8) because the stack's HBM cost
 scales with K.
 
+Layout (DESIGN.md §8): ``--model-parallel M`` (with ``--layout auto``)
+runs the TREE layout — params stay per-leaf with their mesh shardings, the
+corpus is uploaded with replicated placement, and the in-jit gather lands
+batch leaves worker-sharded — through the SAME single-jit K-round driver
+as the arena path, so a model-parallel run is still ONE dispatch for the
+whole --rounds budget.
+
+Checkpointing: ``--checkpoint-dir`` saves the live EngineState (either
+layout) plus the data-plane index cursor every ~10 rounds; ``--resume``
+restores the newest checkpoint and fast-forwards the batcher/straggler rng
+streams, so a run killed between driver windows continues with a
+bit-identical loss trajectory (window-partition invariance, DESIGN.md §7).
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --rounds 40 --workers 8 --s 1 --persistent-frac 0.125
 """
@@ -22,12 +35,15 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
@@ -35,8 +51,11 @@ from repro.core.engine import RoundEngine, RoundPolicy
 from repro.core.straggler import StragglerModel
 from repro.data.pipeline import TokenBatcher
 from repro.data.synthetic import synthetic_tokens
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import resolve_layout
 from repro.models import model as M
 from repro.optim import adam, clip_by_global_norm, chain, linear_warmup_cosine, sgd
+from repro.sharding.specs import corpus_shardings, named, param_pspecs
 
 
 def main(argv=None):
@@ -54,6 +73,14 @@ def main(argv=None):
                          "for materialized stacks)")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--q-max", type=int, default=4)
+    ap.add_argument("--layout", choices=["auto", "arena", "tree"], default="auto",
+                    help="engine state layout: 'tree' preserves model-"
+                         "parallel leaf shardings, 'arena' is the flat "
+                         "worker-parallel hot path, 'auto' picks by "
+                         "--model-parallel")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="width of the 'model' mesh axis (must divide the "
+                         "local device count); > 1 forces the tree layout")
     ap.add_argument("--s", type=int, default=1, help="data replication S")
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--local-batch", type=int, default=4)
@@ -65,7 +92,10 @@ def main(argv=None):
     ap.add_argument("--budget-t", type=float, default=3.0, help="epoch time budget (sim units)")
     ap.add_argument("--n-seqs", type=int, default=2048)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", "--checkpoint-dir", dest="ckpt_dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest --checkpoint-dir state and "
+                         "continue with a bit-identical trajectory")
     ap.add_argument("--metrics-file", default=None, help="JSONL per-round metrics")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
@@ -73,11 +103,22 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    print(f"[train] {cfg.name} family={cfg.family} params~{M.param_count(cfg):,}")
+    if args.model_parallel > 1:
+        cfg = dataclasses.replace(cfg, model_parallel=args.model_parallel)
+    layout = resolve_layout(cfg, args.layout)
+    print(f"[train] {cfg.name} family={cfg.family} params~{M.param_count(cfg):,} "
+          f"layout={layout}")
 
     rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)
     params = M.init(key, cfg)
+    mesh = p_shard = None
+    if layout == "tree":
+        # the tree layout keeps every leaf on its mesh placement end to end:
+        # params here, the corpus/gathered batches below (DESIGN.md §8)
+        mesh = make_host_mesh(args.model_parallel)
+        p_shard = named(mesh, param_pspecs(params, mesh))
+        params = jax.device_put(params, p_shard)
     if args.optimizer == "adam":
         sched = linear_warmup_cosine(args.lr, 20, args.rounds * args.q_max)
         opt = chain(clip_by_global_norm(1.0), adam(sched))
@@ -98,13 +139,49 @@ def main(argv=None):
     policy = RoundPolicy(name=f"train_{args.weighting}", weighting=args.weighting,
                          s_redundancy=args.s)
     loss_fn = lambda p, mb: M.loss_fn(p, cfg, mb)
-    engine = RoundEngine(loss_fn, opt, args.workers, args.q_max, policy)
+    engine = RoundEngine(loss_fn, opt, args.workers, args.q_max, policy,
+                         layout=layout)
     state = engine.init_state(params, opt_state)
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    ckpt = rckpt = None
+    if args.ckpt_dir:
+        # two payloads per save: the finalized (params, opt_state) in the
+        # top-level dir — the contract launch/serve.py restores — and the
+        # LIVE EngineState + data-plane cursor under resume/, which is what
+        # --resume re-enters the driver from
+        ckpt = CheckpointManager(args.ckpt_dir)
+        rckpt = CheckpointManager(pathlib.Path(args.ckpt_dir) / "resume")
 
     def save_ckpt(step_no: int):
         p, o = engine.finalize(state)
         ckpt.save(step_no, {"params": p, "opt_state": o})
+        rckpt.save(step_no, {"state": state, "round": np.asarray(step_no, np.int64)})
+
+    start_round = 0
+    if rckpt and args.resume and rckpt.latest_step() is not None:
+        like = {"state": state, "round": np.zeros((), np.int64)}
+        payload, ck_step = rckpt.restore(like)
+
+        # re-place every restored leaf (params AND optimizer moments) on the
+        # placement the freshly-built template state carries — under the
+        # tree layout that is the model-parallel mesh sharding.  Leaves the
+        # template left off the mesh (scalar counters born of eager zeros)
+        # are replicated onto it so one jit never sees mixed device sets.
+        def _placement(leaf):
+            s = leaf.sharding
+            if mesh is not None and not isinstance(s, NamedSharding):
+                return NamedSharding(mesh, P())
+            return s
+
+        state = jax.device_put(payload["state"], jax.tree.map(_placement, state))
+        start_round = int(payload["round"])
+        # fast-forward the host rng streams to the checkpoint's round: the
+        # index plan is window-partition invariant and the q-matrix draws
+        # are per round, so replay-and-discard restores both cursors exactly
+        if start_round > 0:
+            batcher.skip_rounds(start_round)
+            smodel.realize_steps_matrix(rng, start_round, args.workers,
+                                        args.budget_t, args.q_max, speeds)
+        print(f"[train] resumed at round {start_round} (checkpoint step {ck_step})")
 
     indexed = args.data_plane == "index"
     if args.rounds_per_jit > 0:
@@ -120,7 +197,13 @@ def main(argv=None):
     window = max(1, window)
     upload_bytes = 0
     if indexed:
-        corpus = batcher.device_corpus()  # ONE upload for the whole run
+        if layout == "tree":
+            # sharding-aware corpus: replicated sample-major leaves, gathered
+            # batch leaves constrained to the worker-sharded mesh layout
+            csh, bsh = corpus_shardings(batcher.arrays, mesh)
+            corpus = batcher.device_corpus(shardings=csh, batch_shardings=bsh)
+        else:
+            corpus = batcher.device_corpus()  # ONE upload for the whole run
         upload_bytes += corpus.nbytes
         print(f"[train] data plane=index corpus={corpus.nbytes / 1e6:.1f}MB "
               f"(uploaded once), window={window} rounds/dispatch")
@@ -132,7 +215,7 @@ def main(argv=None):
     metrics_cm = open(args.metrics_file, "a") if args.metrics_file \
         else contextlib.nullcontext()
     with metrics_cm as metrics_f:
-        r = 0
+        r = start_round
         last_ckpt = -1
         while r < args.rounds:
             kc = min(window, args.rounds - r)

@@ -183,6 +183,37 @@ def cache_pspecs(cache: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def corpus_pspecs(corpus: PyTree, mesh: Mesh) -> PyTree:
+    """Device-corpus placement: sample-major leaves are REPLICATED.
+
+    Table-I replication means every worker's pool spans blocks across the
+    whole sample axis, so the in-jit gather indexes arbitrary rows — a
+    sample-sharded corpus would turn every gather into an all-to-all.  The
+    corpus is small next to the model (it is the thing uploaded once), so
+    full replication is the right trade.
+    """
+    return jax.tree.map(lambda l: P(*([None] * np.ndim(l))), corpus)
+
+
+def gathered_batch_pspecs(corpus: PyTree, mesh: Mesh) -> PyTree:
+    """Specs for batches GATHERED from a corpus by a [W, q_max, b] id tensor.
+
+    Each corpus leaf [m, ...] gathers to [W, q_max, b, ...]; the leading
+    worker axis is sharded over ("pod","data") — exactly `batch_pspec` for
+    the per-round microbatch stream, so the tree-layout round sees the same
+    batch placement the materialized pjit path fed it (closing DESIGN.md
+    §7's tree-path exception).
+    """
+    return jax.tree.map(lambda l: batch_pspec(mesh, True, np.ndim(l) + 2), corpus)
+
+
+def corpus_shardings(corpus: PyTree, mesh: Mesh) -> tuple[PyTree, PyTree]:
+    """(corpus NamedShardings, gathered-batch NamedShardings) for a mesh —
+    the pair `DeviceCorpus(arrays, shardings=, batch_shardings=)` consumes."""
+    return (named(mesh, corpus_pspecs(corpus, mesh)),
+            named(mesh, gathered_batch_pspecs(corpus, mesh)))
+
+
 def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

@@ -1,5 +1,7 @@
 """The explicit shard_map Anytime round (core/distributed.py) must equal
-the pjit/vmap form — run in a subprocess with 8 forced host devices."""
+the pjit/vmap form — run in a subprocess with 8 forced host devices.
+Also pins the WINDOW form (make_shardmap_engine, DESIGN.md §8): K shard_map
+rounds scanned inside one jit must equal K per-round dispatches."""
 import json
 import os
 import subprocess
@@ -45,8 +47,26 @@ SCRIPT = textwrap.dedent(
             (jax.device_put(A, bs), jax.device_put(y, bs)),
             jax.device_put(q, bs), jnp.int32(0))
     err = float(jnp.abs(out["x"] - ref["x"]).max())
+
+    # -- window driver: K shard_map rounds in ONE jit vs a per-round loop --
+    from repro.core.distributed import make_shardmap_engine
+    K = 4
+    As = jnp.asarray(rng.standard_normal((K, w, qmax, b, dim)), jnp.float32)
+    ys = jnp.asarray(rng.standard_normal((K, w, qmax, b)), jnp.float32)
+    qs = rng.integers(0, qmax + 1, (K, w))
+    eng = make_shardmap_engine(loss_fn, sgd(0.01), cfg, mesh, pspecs)
+    with mesh:
+        st, outs = eng.run(eng.init_state(params, ()), (As, ys), qs)
+        p_loop, o_loop = params, ()
+        for k in range(K):
+            p_loop, o_loop, mk = jax.jit(rnd)(
+                p_loop, o_loop, (As[k], ys[k]),
+                jnp.asarray(qs[k], jnp.int32), jnp.int32(k * qmax))
+    werr = float(jnp.abs(st.arena["x"] - p_loop["x"]).max())
     print(json.dumps({"err": err, "loss_ref": float(mref["loss"]),
-                      "loss_sm": float(m["loss"])}))
+                      "loss_sm": float(m["loss"]), "window_err": werr,
+                      "window_dispatches": eng.dispatch_count,
+                      "window_traces": eng.trace_count}))
     """
 )
 
@@ -64,3 +84,5 @@ def test_shardmap_round_matches_vmap_form():
     out = json.loads(proc.stdout.strip().splitlines()[-1])
     assert out["err"] < 1e-5, out
     assert abs(out["loss_ref"] - out["loss_sm"]) < 1e-5
+    assert out["window_err"] < 1e-5, out
+    assert out["window_dispatches"] == 1 and out["window_traces"] == 1, out

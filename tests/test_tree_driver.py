@@ -1,0 +1,294 @@
+"""Unified-layout driver (DESIGN.md §8): the tree layout through the SAME
+single-jit K-round `_driver_fn` as the arena layout.
+
+Parity contract:
+  * tree-layout driver == per-round `tree_round()` oracle BIT-identically
+    (same graph, the scan just moves the Python loop inside the jit);
+  * tree-layout driver == arena driver to float tolerance (different
+    combine shape: per-leaf vs whole-model contraction);
+  * index-sourced == materialized through the tree driver BIT-identically;
+  * the driver keeps the single-trace / single-dispatch contract.
+
+Sharded-corpus gather: `sharding.specs.corpus_shardings` must place corpus
+leaves replicated and pin gathered batch leaves to the worker-sharded
+layout the pjit path feeds `steps.py` (AbstractMesh spec checks here; the
+multi-device placement is exercised in test_tree_mp.py's subprocess).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.core.engine import EngineState, RoundEngine, anytime_policy, generalized_policy
+from repro.core.sweep import SweepEngine
+from repro.data.device import DeviceCorpus, sample_index_stream
+from repro.data.linreg import make_linreg
+from repro.optim import sgd
+from repro.sharding.specs import batch_pspec, corpus_pspecs, gathered_batch_pspecs
+
+W, QMAX, B, K = 6, 4, 8, 5
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["w"] @ params["v"] - y
+    return jnp.mean(r * r)
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(240, 8, seed=0)
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    # two leaves so the per-leaf combine is actually exercised
+    return {"w": jnp.asarray(rng.standard_normal((8, 3)), jnp.float32),
+            "v": jnp.asarray(rng.standard_normal(3), jnp.float32)}
+
+
+def _source(lin, key=1, qmax=QMAX):
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    idx = sample_index_stream(jax.random.PRNGKey(key), lin.m, W, 1, K, qmax, B)
+    return corpus, idx, corpus.source(idx)
+
+
+def _materialize(lin, idx, k):
+    h = np.asarray(idx)
+    return (jnp.asarray(lin.A[h[k]], jnp.float32),
+            jnp.asarray(lin.y[h[k]], jnp.float32))
+
+
+def test_tree_driver_matches_per_round_oracle_bitwise(lin):
+    """K rounds in ONE dispatch == K `tree_round()` dispatches, bit for bit
+    — per-round params (history) included."""
+    params = _params()
+    _, idx, src = _source(lin)
+    qs = np.random.default_rng(0).integers(0, QMAX + 1, (K, W))
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    st, outs = eng.run(eng.init_state(params, ()), src, qs, keep_history=True)
+
+    oracle = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    rnd = oracle.tree_round()
+    p, o = params, ()
+    for k in range(K):
+        p, o, m = rnd(p, o, _materialize(lin, idx, k),
+                      jnp.asarray(qs[k], jnp.int32), jnp.asarray(k * QMAX))
+        for name in ("w", "v"):
+            np.testing.assert_array_equal(np.asarray(outs["arena"][name][k]),
+                                          np.asarray(p[name]))
+        np.testing.assert_array_equal(np.asarray(outs["loss"][k]),
+                                      np.asarray(m["loss"]))
+        np.testing.assert_array_equal(np.asarray(outs["lambdas"][k]),
+                                      np.asarray(m["lambdas"]))
+    for name in ("w", "v"):
+        np.testing.assert_array_equal(np.asarray(st.arena[name]),
+                                      np.asarray(p[name]))
+
+
+def test_tree_driver_matches_arena_driver(lin):
+    """Cross-layout parity: same rounds, per-leaf vs whole-model combine."""
+    params = _params()
+    _, _, src = _source(lin)
+    qs = np.random.default_rng(1).integers(0, QMAX + 1, (K, W))
+    e_t = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    st_t, out_t = e_t.run(e_t.init_state(params, ()), src, qs)
+    e_a = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    st_a, out_a = e_a.run(e_a.init_state(params, ()), src, qs)
+    p_a, _ = e_a.finalize(st_a)
+    for name in ("w", "v"):
+        np.testing.assert_allclose(np.asarray(st_t.arena[name]),
+                                   np.asarray(p_a[name]), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_t["loss"]),
+                               np.asarray(out_a["loss"]), rtol=1e-6, atol=1e-6)
+
+
+def test_tree_driver_indexed_vs_materialized_bitwise(lin):
+    """The in-jit corpus gather through the TREE driver: same ids, same
+    bits (the §7 exception-2 closure)."""
+    params = _params()
+    _, idx, src = _source(lin)
+    h = np.asarray(idx)
+    mat = (jnp.asarray(lin.A[h], jnp.float32), jnp.asarray(lin.y[h], jnp.float32))
+    qs = np.random.default_rng(2).integers(0, QMAX + 1, (K, W))
+    e_i = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    e_m = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    st_i, out_i = e_i.run(e_i.init_state(params, ()), src, qs)
+    st_m, out_m = e_m.run(e_m.init_state(params, ()), mat, qs)
+    for name in ("w", "v"):
+        np.testing.assert_array_equal(np.asarray(st_i.arena[name]),
+                                      np.asarray(st_m.arena[name]))
+    np.testing.assert_array_equal(np.asarray(out_i["loss"]),
+                                  np.asarray(out_m["loss"]))
+
+
+def test_tree_generalized_driver_matches_per_round_oracle(lin):
+    """Sec.-V two-phase rounds through the tree driver (worker-stacked
+    pytree state, both phases index-sourced).  The two-phase mix graph is
+    scheduled slightly differently under scan, so parity is float-tight
+    rather than bitwise (the plain round IS bitwise, above)."""
+    qc = 2
+    params = _params()
+    corpus, idx, src = _source(lin)
+    cidx = sample_index_stream(jax.random.PRNGKey(7), lin.m, W, 1, K, qc, B)
+    csrc = corpus.source(cidx)
+    rng = np.random.default_rng(3)
+    qs = rng.integers(0, QMAX + 1, (K, W))
+    qbars = rng.integers(0, qc + 1, (K, W))
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, generalized_policy(),
+                      max_comm_steps=qc, layout="tree")
+    st, _ = eng.run(eng.init_state(params, ()), src, qs,
+                    comm_batches=csrc, qbars=qbars)
+
+    oracle = RoundEngine(_loss, sgd(0.01), W, QMAX, generalized_policy(),
+                         max_comm_steps=qc, layout="tree")
+    rnd = oracle.tree_round()
+    wp = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (W,) + l.shape), params)
+    wo = ()
+    hc = np.asarray(cidx)
+    for k in range(K):
+        cb = (jnp.asarray(lin.A[hc[k]], jnp.float32),
+              jnp.asarray(lin.y[hc[k]], jnp.float32))
+        wp, wo, _ = rnd(wp, wo, _materialize(lin, idx, k), cb,
+                        jnp.asarray(qs[k], jnp.int32),
+                        jnp.asarray(qbars[k], jnp.int32),
+                        jnp.asarray(k * (QMAX + qc)))
+    for name in ("w", "v"):
+        np.testing.assert_allclose(np.asarray(st.arena[name]),
+                                   np.asarray(wp[name]), rtol=1e-5, atol=1e-6)
+
+
+def test_tree_driver_single_trace_single_dispatch(lin):
+    params = _params()
+    _, _, src = _source(lin)
+    qs = np.random.default_rng(4).integers(0, QMAX + 1, (K, W))
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    for _ in range(3):
+        eng.run(eng.init_state(params, ()), src, qs)
+    assert eng.trace_count == 1
+    assert eng.dispatch_count == 3
+
+
+def test_init_state_step_argument(lin):
+    """init_state(step=...) seeds the round counter — callers stop
+    reconstructing EngineState by hand (and LR schedules line up)."""
+    params = _params()
+    for layout in ("arena", "tree"):
+        eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                          layout=layout)
+        st = eng.init_state(params, (), step=7)
+        assert int(st.rstep) == 7
+        assert st.rstep.dtype == jnp.int32
+        st0 = eng.init_state(params, ())
+        assert int(st0.rstep) == 0
+
+
+def test_init_state_step_traces_inside_jit(lin):
+    """The step argument must accept a traced rstep (the steps.py site)."""
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    params = _params()
+    batch = _materialize(lin, sample_index_stream(
+        jax.random.PRNGKey(0), lin.m, W, 1, 1, QMAX, B), 0)
+    q = jnp.asarray([4, 3, 0, 1, 4, 2], jnp.int32)
+
+    @jax.jit
+    def step(p, rstep):
+        st = eng.init_state(p, (), step=rstep)
+        st, m = eng.round(st, batch, q)
+        return st.arena, st.rstep
+
+    p1, rs = step(params, jnp.asarray(3, jnp.int32))
+    assert int(rs) == 4
+    assert np.all(np.isfinite(np.asarray(p1["w"])))
+
+
+def test_sweep_accepts_tree_layout(lin):
+    """A small-model grid over the tree layout: each sweep row must match
+    the single-engine tree driver."""
+    E = 3
+    params = _params()
+    corpus, idx, _ = _source(lin)
+    eidx = jnp.stack([jnp.asarray(np.asarray(idx))] * E)  # shared plan per row
+    qs = np.random.default_rng(5).integers(0, QMAX + 1, (E, K, W))
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    sweep = SweepEngine(eng)
+    st, outs = sweep.run(sweep.init_state(params, E), corpus.source(eidx), qs,
+                         keep_history=True)
+    assert outs["arena"]["w"].shape == (E, K, 8, 3)
+    ref = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    for e in range(E):
+        st_e, _ = ref.run(ref.init_state(params, ()), corpus.source(idx), qs[e])
+        for name in ("w", "v"):
+            np.testing.assert_allclose(np.asarray(st.arena[name][e]),
+                                       np.asarray(st_e.arena[name]),
+                                       rtol=1e-6, atol=1e-7)
+    p0, _ = sweep.finalize(st, 0)
+    assert p0["w"].shape == (8, 3)
+
+
+def test_tree_layout_rejects_fused():
+    with pytest.raises(ValueError):
+        RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                    fused="interpret", layout="tree")
+
+
+def test_worker_stacked_requires_generalized(lin):
+    eng = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(), layout="tree")
+    with pytest.raises(ValueError):
+        eng.init_state(_params(), (), worker_stacked=True)
+
+
+# --------------------------------------------------- sharded-corpus specs --
+def _mesh(multi_pod=False):
+    if multi_pod:
+        sizes, names = (2, 16, 16), ("pod", "data", "model")
+    else:
+        sizes, names = (16, 16), ("data", "model")
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_sharded_corpus_gather_preserves_batch_specs(multi_pod):
+    """model_parallel > 1 contract: corpus leaves replicate (Table-I pools
+    span the sample axis) and every GATHERED batch leaf lands on exactly
+    the worker-sharded spec `batch_pspec` gives the materialized pjit path
+    — the gather must not change the layout steps.py trains on."""
+    mesh = _mesh(multi_pod)
+    corpus = {
+        "tokens": jax.ShapeDtypeStruct((2048, 128), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((2048, 128), jnp.int32),
+        "prefix_embeddings": jax.ShapeDtypeStruct((2048, 8, 64), jnp.float32),
+    }
+    cspecs = corpus_pspecs(corpus, mesh)
+    for leaf, spec in zip(jax.tree.leaves(corpus),
+                          jax.tree.leaves(cspecs, is_leaf=lambda x: isinstance(x, P))):
+        assert all(a is None for a in tuple(spec)), (leaf.shape, spec)
+
+    bspecs = gathered_batch_pspecs(corpus, mesh)
+    for key in corpus:
+        got = bspecs[key]
+        want = batch_pspec(mesh, True, corpus[key].ndim + 2)
+        assert got == want, (key, got, want)
+        # leading (worker) axis sharded over the full worker index
+        assert tuple(got)[0] == (("pod", "data") if multi_pod else ("data",))
+        # gathered rank: [W, q_max, b] + corpus tail
+        assert len(tuple(got)) == corpus[key].ndim + 2
+
+
+def test_gathered_batch_specs_rank_matches_gather():
+    """The spec rank promised by gathered_batch_pspecs must equal what the
+    gather actually produces for a [W, q_max, b] id tensor."""
+    corpus = {"tokens": jnp.zeros((32, 16), jnp.int32),
+              "prefix_embeddings": jnp.zeros((32, 4, 8), jnp.float32)}
+    idx = jnp.zeros((W, QMAX, B), jnp.int32)
+    gathered = jax.eval_shape(
+        lambda c, i: jax.tree.map(lambda a: jnp.take(a, i, axis=0), c),
+        corpus, idx)
+    specs = gathered_batch_pspecs(corpus, _mesh())
+    for key in corpus:
+        assert gathered[key].ndim == len(tuple(specs[key]))
