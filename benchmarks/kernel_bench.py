@@ -98,6 +98,36 @@ def run():
                  f"bytes_per_round_saved={stack_bytes/(fused_bytes+stack_bytes):.1%}"
                  f"_of_unfused_traffic"))
 
+    # fused window (K rounds x E experiments in ONE kernel): tiny-dims
+    # interpret parity against the oracle (D-tiled: 2 blocks) + the
+    # per-round boundary traffic the window residency deletes — the
+    # per-round fused path writes and re-reads the combined [D] iterate at
+    # every one of the K round boundaries, the window keeps it in VMEM
+    from repro.kernels.fused_window import fused_window, fused_window_ref
+
+    we, wk, ww, wq, wb, wd = 2, 3, 4, 4, 2, 16
+    wa = jnp.asarray(rng.standard_normal((we, wk, ww, wq, wb, wd)), jnp.float32)
+    wy = jnp.asarray(rng.standard_normal((we, wk, ww, wq, wb)), jnp.float32)
+    wx0 = jnp.asarray(rng.standard_normal((we, wd)), jnp.float32)
+    wqv = jnp.asarray(rng.integers(0, wq + 1, (we, wk, ww)), jnp.int32)
+    wlam = (wqv / jnp.maximum(jnp.sum(wqv, -1, keepdims=True), 1)).astype(jnp.float32)
+    xwk, lwk, hwk = fused_window(wa, wy, wx0, wqv, wlam, 0.01,
+                                 keep_history=True, interpret=True, d_block=8)
+    xwr, lwr, hwr = fused_window_ref(wa, wy, wx0, wqv, wlam, 0.01)
+    np.testing.assert_allclose(np.asarray(xwk), np.asarray(xwr), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hwk), np.asarray(hwr), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lwk), np.asarray(lwr), rtol=1e-4,
+                               atol=1e-5)
+    f = jax.jit(lambda *args: fused_window_ref(*args))
+    us = _time(lambda *args: f(*args)[0], wa, wy, wx0, wqv, wlam,
+               jnp.full((we, wk, wq), 0.01, jnp.float32))
+    boundary_bytes = wk * 2 * wd * 4  # combined-iterate write+read per round
+    rows.append(("kernel_fused_window_cpu_oracle", f"{us:.0f}",
+                 f"tpu_launches {we*wk}->1,boundary_bytes_saved/exp="
+                 f"{boundary_bytes} (interpret_dtiled_parity_ok)"))
+
     # arena combine vs per-leaf tree combine: same total elements split over
     # a 24-leaf "model" — measures the dispatch/fusion win of ONE [W, N]
     # contraction vs 24 small per-leaf reductions

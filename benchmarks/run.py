@@ -12,6 +12,7 @@
   sweep    SweepEngine grid vs looped RoundEngine (BENCH_sweep.json)
   data     index-sourced vs materialized data plane   (BENCH_data.json)
   tree     tree-layout driver vs per-round/arena      (BENCH_tree.json)
+  fused_window  whole-window kernel vs per-round fused (BENCH_fused_window.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
@@ -20,6 +21,10 @@ figure's headline number where a wall-time makes no sense).  With
 {"suites": {name: {"ok": bool, "rows": [...], "error"?: str}},
  "failed": [...]} — so CI and BENCH_*.json generation consume results
 instead of scraping stdout.  Exits nonzero when any suite fails.
+
+After the suites, a one-table summary of every BENCH_*.json in the
+working directory is printed (headline speedup + config), so the perf
+trajectory across PRs is visible in one place in CI logs.
 """
 from __future__ import annotations
 
@@ -50,6 +55,7 @@ def main() -> None:
         fig4_vs_fnb_gc,
         fig5_realdata,
         fig6_generalized,
+        fused_window_bench,
         kernel_bench,
         lm_ablation,
         roofline_bench,
@@ -71,6 +77,7 @@ def main() -> None:
         "sweep": sweep_bench.run,
         "data": data_bench.run,
         "tree": tree_bench.run,
+        "fused_window": fused_window_bench.run,
         "roofline": roofline_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
@@ -92,9 +99,43 @@ def main() -> None:
         pathlib.Path(args.json).write_text(
             json.dumps({"suites": results, "failed": failed}, indent=2)
         )
+    print_bench_summary()
     if failed:
         print(f"benchmark failures: {failed}", file=sys.stderr)
         sys.exit(1)
+
+
+def print_bench_summary(root: str = ".") -> None:
+    """One table over every BENCH_*.json: the cross-PR perf trajectory.
+
+    Each artifact's headline is its top-level ``speedup`` field (or the
+    first top-level key containing "speedup"); the config column echoes
+    the artifact's own "config" scalars.  Unreadable files are reported,
+    not fatal — the summary is a CI log convenience, never a gate.
+    """
+    paths = sorted(pathlib.Path(root).glob("BENCH_*.json"))
+    if not paths:
+        return
+    print("\nbench_artifact,headline_speedup,config")
+    for p in paths:
+        try:
+            doc = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{p.name},unreadable,{type(e).__name__}")
+            continue
+        if not isinstance(doc, dict):
+            print(f"{p.name},unreadable,top-level {type(doc).__name__}")
+            continue
+        speedups = [(k, v) for k, v in doc.items()
+                    if "speedup" in k and isinstance(v, (int, float))]
+        speedups.sort(key=lambda kv: kv[0] != "speedup")  # exact name first
+        headline = f"{speedups[0][1]:.2f}x" if speedups else "-"
+        cfg = doc.get("config", {})
+        cfg_s = " ".join(
+            f"{k}={v}" for k, v in cfg.items()
+            if isinstance(v, (int, float, str))
+        ) if isinstance(cfg, dict) else ""
+        print(f"{p.name},{headline},{cfg_s}")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,7 @@ def run(out_path: str = "BENCH_sweep.json", n_experiments: int = 16,
         np.asarray(outs["arena"])  # whole grid history, ONE readback
         t_sweep.append(time.time() - t0)
     sweep_s = min(t_sweep)
+    outs_sweep = outs  # the loop path below reassigns `outs` per experiment
 
     # --- loop: one RoundEngine.run dispatch PER experiment ---
     qs_host = np.asarray(qs)  # the loop path must ferry q through the host
@@ -104,10 +105,42 @@ def run(out_path: str = "BENCH_sweep.json", n_experiments: int = 16,
         },
         "speedup": speedup,
     }
+    # --- window row: the same grid through the whole-window fused driver
+    # (E on the kernel grid, no scan, one call — fused='window_ref' is the
+    # window path's CPU/XLA execution; BENCH_fused_window.json carries the
+    # full comparison) ---
+    eng_w = RoundEngine(linreg_loss, sgd(setup.lr), setup.n_workers,
+                        setup.qmax, anytime_policy(), fused="window_ref")
+    sweep_w = SweepEngine(eng_w)
+    stw, outs_w = sweep_w.run(sweep_w.init_state(params0, n_experiments),
+                              batches, qs, keep_history=True, batch_axis=None)
+    stw.arena.block_until_ready()  # compile
+    t_win = []
+    for _ in range(repeats):
+        t0 = time.time()
+        _, outs_w = sweep_w.run(sweep_w.init_state(params0, n_experiments),
+                                batches, qs, keep_history=True,
+                                batch_axis=None)
+        np.asarray(outs_w["arena"])
+        t_win.append(time.time() - t0)
+    win_s = min(t_win)
+    np.testing.assert_allclose(np.asarray(outs_w["arena"]),
+                               np.asarray(outs_sweep["arena"]),
+                               rtol=1e-4, atol=1e-5)
+
+    result["window_fused_engine"] = {
+        "experiments_per_s": n_experiments / win_s,
+        "wall_s": win_s,
+        "vs_sweep_engine": sweep_s / win_s,
+        "note": "fused='window_ref': whole [E, K] grid as one window call, "
+                "parity vs the vmapped sweep asserted",
+    }
     pathlib.Path(out_path).write_text(json.dumps(result, indent=2))
     return [
         ("sweep_engine_grid", f"{sweep_s / n_experiments * 1e6:.0f}",
          f"experiments_per_s={n_experiments / sweep_s:.1f}"),
+        ("sweep_window_fused_grid", f"{win_s / n_experiments * 1e6:.0f}",
+         f"experiments_per_s={n_experiments / win_s:.1f}"),
         ("sweep_loop_round_engine", f"{loop_s / n_experiments * 1e6:.0f}",
          f"experiments_per_s={n_experiments / loop_s:.1f}"),
         ("sweep_speedup", f"{speedup:.2f}", f"written={out_path}"),

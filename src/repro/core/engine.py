@@ -62,11 +62,21 @@ from repro.core.combine import (
     generalized_mixing_lambda,
     uniform_lambdas,
 )
-from repro.data.device import IndexedBatches
+from repro.data.device import IndexedBatches, gather_window_tiles
+from repro.kernels.fused_round import fused_round
+from repro.kernels.fused_window import fused_window, fused_window_ref
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
 LossFn = Callable[[PyTree, PyTree], jax.Array]
+
+# fused= modes that run the WHOLE K-round window as one kernel
+# (kernels/fused_window.py): 'window' compiles the Pallas kernel,
+# 'window_interpret' runs it in interpret mode (CPU tests), 'window_ref'
+# routes the same driver through the pure-jnp oracle (the CPU/XLA
+# execution of the window path).
+_WINDOW_MODES = ("window", "window_interpret", "window_ref")
+_FUSED_MODES = (False, "pallas", "interpret") + _WINDOW_MODES
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
@@ -228,6 +238,18 @@ def _mean_loss(lam_w: jax.Array, losses: jax.Array) -> jax.Array:
     return jnp.sum(lam_w * losses) / jnp.maximum(jnp.sum(lam_w), 1.0)
 
 
+def fused_mean_losses(loss_sums: jax.Array, q: jax.Array) -> jax.Array:
+    """The ONE fused-loss normalization (any leading batch axes).
+
+    The fused kernels (`fused_round`, `fused_window`) return per-worker
+    SUMS of the active per-step mean-squared losses; `local_sgd` reports
+    the per-worker MEAN over the realized q_v steps.  Every fused path
+    divides by max(q_v, 1) through this helper, so fused and unfused
+    metrics agree by construction (pinned in tests/test_fused_round.py).
+    """
+    return loss_sums / jnp.maximum(q.astype(jnp.float32), 1.0)
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -251,12 +273,27 @@ class RoundEngine:
                                      [W, N] iterate stack stays VMEM-resident
                                      instead of round-tripping through HBM
                   'interpret'        same kernel, interpret mode (CPU tests)
+                  'window'           kernels/fused_window: the ENTIRE
+                                     K-round driver window as ONE Pallas
+                                     kernel — `run` skips the lax.scan and
+                                     hands the whole [K, W] q-matrix to the
+                                     kernel grid; the iterate stack stays
+                                     VMEM-resident ACROSS rounds and the
+                                     per-round combine + rebroadcast never
+                                     touch HBM (DESIGN.md §9)
+                  'window_interpret' same window kernel, interpret mode
+                  'window_ref'       the window driver over the pure-jnp
+                                     oracle (`fused_window_ref`) — the
+                                     CPU/XLA execution of the window path
                   Only valid for the flat-arena linreg workload: params =
                   one [D] leaf, stateless SGD, a non-affine 'sgd' policy
-                  with iterate_mode='last', batch = (A [W,Q,B,D], y [W,Q,B]).
+                  with iterate_mode='last', batch = (A [W,Q,B,D], y [W,Q,B])
+                  (window modes: [K, W, Q, B, ...] streams or an
+                  `IndexedBatches` window with batch_per_round=True).
                   Structural conditions are validated here and in
                   init_state; the loss/batch contract is the caller's (it
-                  is pinned by tests/test_fused_round.py).
+                  is pinned by tests/test_fused_round.py and
+                  tests/test_fused_window.py).
     """
 
     def __init__(
@@ -273,7 +310,7 @@ class RoundEngine:
     ):
         if combine_impl not in ("einsum", "kernel", "kernel_interpret"):
             raise ValueError(f"bad combine_impl {combine_impl!r}")
-        if fused not in (False, "pallas", "interpret"):
+        if fused not in _FUSED_MODES:
             raise ValueError(f"bad fused {fused!r}")
         if layout not in ("arena", "tree"):
             raise ValueError(f"bad layout {layout!r}")
@@ -539,8 +576,6 @@ class RoundEngine:
         masked per-worker SGD scan and the lambda-weighted combine share a
         VMEM-resident [W, D] iterate stack, so the stack never round-trips
         through HBM between the scan and the combine."""
-        from repro.kernels.fused_round import fused_round
-
         step0 = state.rstep * self.max_local_steps
         a, y = batch
         n_steps = a.shape[1]
@@ -555,7 +590,7 @@ class RoundEngine:
             a, y, state.arena, q, lam_w, lrs,
             interpret=(self.fused == "interpret"),
         )
-        losses = loss_sums / jnp.maximum(q.astype(jnp.float32), 1.0)
+        losses = fused_mean_losses(loss_sums, q)
         metrics = {
             "loss": _mean_loss(lam_w, losses),
             "lambdas": lam_w,
@@ -563,10 +598,92 @@ class RoundEngine:
         }
         return EngineState(new_arena, state.opt_arena, state.rstep + 1), metrics
 
+    # -- whole-window fused backend (kernels/fused_window) -------------------
+    def _window_lrs(self, rstep, n_rounds: int, n_steps: int,
+                    opt: Optional[Optimizer] = None) -> jax.Array:
+        """[K, Q] per-(round, step) learning rates from the optimizer's
+        (linear, stateless) update map, starting at round counter rstep —
+        the window analogue of the per-round `lrs` vector, so schedules
+        advance across rounds exactly as the scan driver's rstep does."""
+        opt = self.opt if opt is None else opt
+        lr_at = lambda step: -opt.update(jnp.ones((), jnp.float32), (), None,
+                                         step)[0]
+        steps = ((rstep + jnp.arange(n_rounds))[:, None] * self.max_local_steps
+                 + jnp.arange(n_steps)[None, :])
+        return jax.vmap(jax.vmap(lr_at))(steps)
+
+    def _window_call(self, x0_e, batches, qs_e, lrs_e, keep_history: bool,
+                     batch_shared: bool):
+        """E-stacked window execution: ONE kernel (or oracle) call for the
+        whole [E, K] grid.  `_window_driver_fn` wraps it with E = 1; the
+        SweepEngine maps its experiment axis onto the kernel's E grid
+        dimension through this same entry point instead of vmapping the
+        `pallas_call`."""
+        if isinstance(batches, IndexedBatches):
+            a, y = gather_window_tiles(batches)
+        else:
+            a, y = batches
+        lam = jax.vmap(jax.vmap(lambda qk: self._weights(qk, None)))(qs_e)
+        if self.fused == "window_ref":
+            x_fin, loss_sums, xhist = fused_window_ref(
+                a, y, x0_e, qs_e, lam, lrs_e, batch_shared=batch_shared)
+        else:
+            out = fused_window(
+                a, y, x0_e, qs_e, lam, lrs_e, keep_history=keep_history,
+                batch_shared=batch_shared,
+                interpret=(self.fused == "window_interpret"))
+            x_fin, loss_sums = out[0], out[1]
+            xhist = out[2] if keep_history else None
+        losses = fused_mean_losses(loss_sums, qs_e)
+        metrics = {
+            "loss": jax.vmap(jax.vmap(_mean_loss))(lam, losses),
+            "lambdas": lam,
+            "q_total": jnp.sum(qs_e, axis=-1),
+        }
+        if keep_history:
+            metrics["arena"] = xhist
+        return x_fin, metrics
+
+    def _window_driver_fn(self, state, batches, qs, lams, comm_batches, qbars,
+                          batch_per_round, keep_history):
+        """The K-round window as ONE kernel call (fused window modes): the
+        same (state, metrics[K, ...]) contract as the scan driver, with the
+        scan replaced by the kernel's (E=1, K, q_max) grid."""
+        if lams is not None or comm_batches is not None or qbars is not None:
+            raise ValueError(
+                "fused window supports plain q-weighted rounds only "
+                "(no explicit lambdas / generalized phases)")
+        if not batch_per_round:
+            raise ValueError(
+                "fused window consumes a per-round batch stream; use "
+                "batch_per_round=True (static-batch windows stay on the "
+                "scan driver)")
+        n_rounds = qs.shape[0]
+        if isinstance(batches, IndexedBatches):
+            n_steps = batches.idx.shape[-2]
+            b_e = IndexedBatches(batches.corpus, batches.idx[None],
+                                 batches.constraint)
+        else:
+            n_steps = jax.tree.leaves(batches)[0].shape[2]
+            b_e = jax.tree.map(lambda l: l[None], batches)
+        lrs = self._window_lrs(state.rstep, n_rounds, n_steps)[None]
+        x_fin, metrics = self._window_call(
+            state.arena[None], b_e, qs[None], lrs, keep_history,
+            batch_shared=False)
+        new_state = EngineState(x_fin[0], state.opt_arena,
+                                state.rstep + n_rounds)
+        return new_state, jax.tree.map(lambda l: l[0], metrics)
+
     def _arena_round(self, state: EngineState, batch, q, lam=None, comm_batch=None,
                      q_bar=None) -> tuple[EngineState, dict]:
         if self.policy.generalized:
             return self._arena_generalized_round(state, batch, comm_batch, q, q_bar)
+        if self.fused in _WINDOW_MODES:
+            # one round == a K=1 window through the same kernel path
+            new_st, m = self._window_driver_fn(
+                state, jax.tree.map(lambda l: l[None], batch), q[None], lam,
+                None, None, True, False)
+            return new_st, jax.tree.map(lambda l: l[0], m)
         if self.fused:
             return self._fused_arena_round(state, batch, q, lam)
         step0 = state.rstep * self.max_local_steps
@@ -666,7 +783,15 @@ class RoundEngine:
         the scan body then gathers each round's microbatches from the
         device-resident corpus INSIDE the jit, so only int32 sample ids
         ride through the scan — the materialized [K, W, q_max, ...] stack
-        never exists (DESIGN.md §7)."""
+        never exists (DESIGN.md §7).
+
+        Window-fused engines replace the scan entirely: the whole q-matrix
+        goes to `kernels/fused_window`'s (E=1, K, q_max) grid and the
+        per-round combine happens in-kernel (DESIGN.md §9)."""
+        if self.fused in _WINDOW_MODES:
+            return self._window_driver_fn(state, batches, qs, lams,
+                                          comm_batches, qbars,
+                                          batch_per_round, keep_history)
         b_indexed = isinstance(batches, IndexedBatches)
         c_indexed = isinstance(comm_batches, IndexedBatches)
         # static indexed batch: gather ONCE outside the scan (the gathered

@@ -36,6 +36,12 @@ The per-experiment body is exactly `RoundEngine._driver_fn`, so a sweep
 row is bit-for-bit the single-engine result whenever XLA schedules the
 vmapped computation identically, and float-tolerance equal otherwise
 (tests/test_sweep.py pins this against a Python loop of engine.run).
+
+Window-fused engines (`RoundEngine(fused='window*')`, DESIGN.md §9) are
+NOT vmapped: the experiment axis maps onto the window kernel's E grid
+dimension — the whole [E, K] grid is ONE kernel launch, and
+batch_axis=None batch sharing becomes the kernel's shared-stream index
+maps instead of a broadcast (tests/test_fused_window.py pins parity).
 """
 from __future__ import annotations
 
@@ -46,7 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import arena as AR
-from repro.core.engine import EngineState, RoundEngine
+from repro.core.engine import _WINDOW_MODES, EngineState, RoundEngine
 from repro.data.device import IndexedBatches
 from repro.optim.optimizers import Optimizer
 
@@ -116,10 +122,53 @@ class SweepEngine:
         eng.opt = self.opt_factory(hyper_v)
         return eng
 
+    def _window_driver_body(self, state, batches, qs, lams, comm_batches,
+                            qbars, hyper, batch_per_round, keep_history,
+                            batch_axis):
+        """Window-fused engines: the experiment axis rides the KERNEL's E
+        grid dimension (kernels/fused_window.py), not a vmap of the
+        pallas_call — the whole [E, K] grid is ONE kernel launch.
+        batch_axis=None maps to the kernel's `batch_shared` index maps,
+        so a shared stream is read from ONE copy in HBM, never broadcast.
+        """
+        if lams is not None or comm_batches is not None or qbars is not None:
+            raise ValueError(
+                "fused window sweeps support plain q-weighted rounds only")
+        if not batch_per_round:
+            raise ValueError("fused window sweeps need batch_per_round=True")
+        if batch_axis not in (None, 0):
+            raise ValueError(f"bad batch_axis {batch_axis!r} for window sweep")
+        n_rounds = qs.shape[1]
+        batch_shared = batch_axis is None
+        if isinstance(batches, IndexedBatches):
+            n_steps = batches.idx.shape[-2]
+        else:
+            n_steps = jax.tree.leaves(batches)[0].shape[2 if batch_shared else 3]
+
+        def lrs_for(rstep_e, hyper_v):
+            opt = self.opt_factory(hyper_v) if hyper_v is not None else None
+            return self.engine._window_lrs(rstep_e, n_rounds, n_steps, opt=opt)
+
+        if hyper is None:
+            lrs = jax.vmap(lambda r: lrs_for(r, None))(state.rstep)
+        else:
+            lrs = jax.vmap(lrs_for)(state.rstep, hyper)
+        x_fin, metrics = self.engine._window_call(
+            state.arena, batches, qs, lrs, keep_history, batch_shared)
+        new_state = EngineState(x_fin, state.opt_arena,
+                                state.rstep + n_rounds)
+        return new_state, metrics
+
     def _make_driver(self):
+        window = self.engine.fused in _WINDOW_MODES
+
         def driver(state, batches, qs, lams, comm_batches, qbars, hyper,
                    batch_per_round, keep_history, batch_axis):
             self.trace_count += 1  # python side effect: once per TRACE
+            if window:
+                return self._window_driver_body(
+                    state, batches, qs, lams, comm_batches, qbars, hyper,
+                    batch_per_round, keep_history, batch_axis)
 
             # IndexedBatches sources vmap over the INDEX tensor only: the
             # corpus is closed over (unmapped), so the whole grid shares

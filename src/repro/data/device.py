@@ -86,6 +86,32 @@ jax.tree_util.register_dataclass(
 )
 
 
+def gather_window_tiles(source: IndexedBatches):
+    """Materialize a window's (A, y) tile stack for the fused window kernel.
+
+    `kernels/fused_window.py` streams one `[W, B, d_block]` design tile
+    per grid step straight from HBM, so its batch operand must be the
+    tile-MAJOR `[(E,) K, W, q_max, b, ...]` stack whose (e, k, t) slices
+    ARE the per-grid-step DMA tiles.  This helper is that gather spec: it
+    gathers the source's whole index window from the device-resident
+    corpus INSIDE the caller's jit (one `jnp.take`, sharding constraint
+    applied) and validates the linreg `(A [m, d], y [m])` corpus layout
+    the kernel is specialized to.  Unlike the scan driver's per-round
+    gather (§7: one round's batch live at a time), the whole window's
+    tiles are live for the kernel call — DESIGN.md §9 has the HBM budget
+    math for when that trade is right.
+    """
+    batch = source.gather()
+    leaves = jax.tree.leaves(batch)
+    if len(leaves) != 2 or leaves[0].ndim != leaves[1].ndim + 1:
+        raise ValueError(
+            "fused window needs a linreg (A [m, d], y [m]) corpus; got "
+            f"{len(leaves)} leaves with ndims "
+            f"{[l.ndim for l in leaves]}"
+        )
+    return leaves[0], leaves[1]
+
+
 class DeviceCorpus:
     """Sample-major arrays uploaded to the device once.
 

@@ -6,6 +6,10 @@
   fused_round       masked local-SGD steps + weighted combine as ONE kernel
                     for the arena linreg round: the [W, D] iterate stack
                     stays VMEM-resident instead of round-tripping HBM
+  fused_window      an ENTIRE K-round x E-experiment driver window as ONE
+                    kernel — grid (E, K, q_max, 2*n_dblk), the iterate
+                    stack VMEM-resident ACROSS rounds, per-round combine +
+                    rebroadcast in-kernel, D tiled into 128-lane blocks
   flash_attention   blockwise prefill/training attention (causal + sliding)
   decode_attention  FlashDecoding-style 1-token attention vs a long cache
   ssm_scan          chunked Mamba selective scan (hymba)

@@ -1,0 +1,308 @@
+"""Pallas TPU kernel: a whole K-round x E-experiment Anytime WINDOW.
+
+PR 2's `kernels/fused_round.py` fused one round (masked local SGD +
+Theorem-3 combine) but the driver still launches it K times inside the
+scan: every round boundary pays a kernel entry/exit and an HBM write/read
+of the combined iterate, D is capped by one full-width `[W, D]` batch tile
+per step, and the SweepEngine reaches it by vmapping the `pallas_call`
+over E experiments instead of giving the kernel the experiment axis.
+This kernel executes the ENTIRE window in ONE `pallas_call`:
+
+  grid = (E, K, q_max, 2 * n_dblk)   e - experiment   (size-1 for single runs)
+                                     k - round
+                                     t - local-SGD step
+                                     p - phase x D-block (minor; see below)
+
+  X scratch [W, D]  every worker's iterate, VMEM-RESIDENT across ALL K
+                    rounds of an experiment; initialized from x0[e] at the
+                    first grid step of each experiment and REBROADCAST to
+                    the combined iterate at every round epilogue WITHOUT
+                    touching HBM — the per-round combined-iterate HBM
+                    write/read of the per-round fused path is deleted.
+
+D-tiling (the VMEM lift): D is split into 128-lane-aligned blocks of
+`d_block` lanes and the linreg step becomes two sweeps over the blocks
+(the residual r_t = A_t x_t - y_t couples every D block, so a block
+cannot run its steps independently):
+
+  phase 0 (p in [0, n_dblk))        racc [W, B] += A_t[:, :, blk] @ X[:, blk]
+                                    (racc starts at -y_t; at the last
+                                    block racc IS the residual and the
+                                    pre-update loss is accumulated)
+  phase 1 (p in [n_dblk, 2*n_dblk)) X[:, blk] -= active * lr_t * (2/B) *
+                                    A_t[:, :, blk]^T racc
+  epilogue (t == q_max-1, phase 1)  per block: xc = sum_v lam_v X[v, blk]
+                                    -> history out [E, K, D] (optional),
+                                    final out [E, D] at k == K-1, and
+                                    X[:, blk] = xc (the rebroadcast)
+
+The per-step batch tile is therefore [W, B, d_block] instead of
+[W, B, D]: the VMEM budget drops from `W*(2B+1)*D*4 <= VMEM` (untiled
+stream + stack) to `W*D*4 + 2*W*B*d_block*4 <= VMEM` — the iterate stack
+is the only full-width resident, so feasible linreg D grows by ~2B x
+(DESIGN.md SS9 has the budget math).  The price is a second read of each
+A block per step (phase 0 and phase 1); n_dblk == 1 revisits the same
+block consecutively and pays nothing.
+
+q [E, K, W], lambda [E, K, W] and the per-step learning rates [E, K, Q]
+ride scalar prefetch (`pltpu.PrefetchScalarGridSpec`) so no grid step
+re-fetches them from HBM; `scalar_prefetch=False` is the interpret-safe
+fallback with the same kernel body.  `batch_shared=True` accepts a batch
+stream WITHOUT the leading E axis and simply drops `e` from the index
+maps — a shared-stream sweep (SweepEngine batch_axis=None) reads ONE
+stream from HBM for all E experiments instead of materializing E copies.
+
+Workload contract (same as fused_round, validated by RoundEngine):
+flat-arena linreg rounds — params = one [D] vector, loss = mean squared
+residual, stateless SGD, non-affine policy, iterate_mode='last'.  Parity
+with the unfused engine is pinned by tests/test_fused_window.py;
+`fused_window_ref` is the pure-jnp oracle (a scan of `fused_round_ref`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_round import _round_up, fused_round_ref
+
+
+def pick_d_block(d_padded: int, cap: int = 512) -> int:
+    """Largest power-of-two multiple of 128 <= cap that divides d_padded."""
+    blk = cap
+    while blk > 128 and d_padded % blk:
+        blk //= 2
+    return min(blk, d_padded)
+
+
+def _window_kernel(n_dblk: int, d_blk: int, b_real: int, keep_history: bool,
+                   q_ref, lam_ref, lrs_ref,   # scalar-prefetch / plain inputs
+                   x0_ref, a_ref, y_ref,      # tensor inputs
+                   *rest):
+    if keep_history:
+        xfin_ref, loss_ref, xhist_ref, X, racc = rest
+    else:
+        xfin_ref, loss_ref, X, racc = rest
+        xhist_ref = None
+    e, k = pl.program_id(0), pl.program_id(1)
+    t, p = pl.program_id(2), pl.program_id(3)
+    n_rounds, n_steps = pl.num_programs(1), pl.num_programs(2)
+    w_p, b_p = racc.shape
+    phase = p // n_dblk
+    blk = p % n_dblk
+    dsl = pl.dslice(blk * d_blk, d_blk)
+
+    a = a_ref[...].reshape(w_p, b_p, d_blk)      # this step's [W, B, blk] tile
+    active = (t < q_ref[e, k]).astype(jnp.float32)   # [W]
+
+    @pl.when(phase == 0)
+    def _residual_sweep():
+        # first grid visit of this experiment: seed the resident stack
+        @pl.when(jnp.logical_and(k == 0, t == 0))
+        def _init_block():
+            X[:, dsl] = jnp.broadcast_to(x0_ref[...].reshape(1, d_blk),
+                                         (w_p, d_blk))
+
+        @pl.when(blk == 0)
+        def _start_residual():
+            racc[...] = -y_ref[...].reshape(w_p, b_p)
+            # zero this round's loss row once per (e, k) block visit
+            @pl.when(t == 0)
+            def _():
+                loss_ref[...] = jnp.zeros_like(loss_ref)
+
+        racc[...] += jnp.einsum("wbd,wd->wb", a, X[:, dsl],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(blk == n_dblk - 1)
+        def _accumulate_loss():
+            # racc is now the full residual at the PRE-update iterate,
+            # matching local_sgd's value_and_grad ordering
+            r = racc[...]
+            loss_t = jnp.sum(r * r, axis=1) / b_real
+            loss_ref[...] += (active * loss_t).reshape(loss_ref.shape)
+
+    @pl.when(phase == 1)
+    def _update_sweep():
+        g = (2.0 / b_real) * jnp.einsum("wb,wbd->wd", racc[...], a,
+                                        preferred_element_type=jnp.float32)
+        lr_t = lrs_ref[e, k, t]
+        X[:, dsl] = X[:, dsl] - (active * lr_t)[:, None] * g
+
+        @pl.when(t == n_steps - 1)
+        def _epilogue():
+            lam = lam_ref[e, k].astype(jnp.float32)          # [W]
+            xc = jnp.sum(lam[:, None] * X[:, dsl], axis=0)   # [d_blk]
+            if xhist_ref is not None:
+                xhist_ref[...] = xc.reshape(xhist_ref.shape)
+
+            @pl.when(k == n_rounds - 1)
+            def _():
+                xfin_ref[...] = xc.reshape(xfin_ref.shape)
+
+            # rebroadcast: every worker starts the next round from the
+            # combined iterate — in VMEM, never through HBM
+            X[:, dsl] = jnp.broadcast_to(xc[None, :], (w_p, d_blk))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("keep_history", "batch_shared", "interpret",
+                     "scalar_prefetch", "d_block"),
+)
+def fused_window(
+    a: jax.Array,     # [E, K, W, Q, B, D] f32 ([K, W, Q, B, D] batch_shared)
+    y: jax.Array,     # [E, K, W, Q, B]    f32 ([K, W, Q, B]    batch_shared)
+    x0: jax.Array,    # [E, D]       f32 round-0 iterate per experiment
+    q: jax.Array,     # [E, K, W]    int32 realized step counts
+    lam: jax.Array,   # [E, K, W]    f32 combine weights
+    lrs: jax.Array,   # [E, K, Q]    f32 per-(round, step) learning rates
+    keep_history: bool = False,
+    batch_shared: bool = False,
+    interpret: bool = False,
+    scalar_prefetch: bool = True,
+    d_block: int | None = None,
+):
+    """K rounds x E experiments in one kernel.
+
+    Returns (x_fin [E, D], loss_sums [E, K, W]) — plus xhist [E, K, D]
+    (the per-round combined iterate) as a third element when
+    keep_history=True.  loss_sums[e, k, v] is the sum of worker v's ACTIVE
+    per-step mean-squared losses in round k (`fused_mean_losses` in
+    core/engine.py is the shared normalization to the local_sgd mean-loss
+    convention).
+
+    Compiled-path padding: D -> x128 lanes, B -> x8 sublanes, W -> x8
+    (pad workers carry q = lam = 0, pad rows/lanes are zero, so padding
+    changes no result bit); the interpret path pads D only up to a
+    d_block multiple.  `d_block` must be a 128-multiple divisor of the
+    padded D on the compiled path (default: `pick_d_block`).
+    """
+    n_exp, n_rounds, w, n_steps, b, d = (
+        (x0.shape[0],) + a.shape if batch_shared else a.shape
+    )
+    lrs = jnp.broadcast_to(jnp.asarray(lrs, jnp.float32),
+                           (n_exp, n_rounds, n_steps))
+    if interpret:
+        wp, bp = w, b
+        dp = d if d_block is None else _round_up(d, d_block)
+    else:
+        wp, bp, dp = _round_up(w, 8), _round_up(b, 8), _round_up(d, 128)
+    d_blk = min(d_block or pick_d_block(dp), dp)
+    dp = _round_up(dp, d_blk)  # ragged d_block: pad D up to a block multiple
+    n_dblk = dp // d_blk
+    if not interpret and d_blk % 128:
+        raise ValueError(f"d_block must be a 128-multiple, got {d_blk}")
+    if (wp, bp, dp) != (w, b, d):
+        pad_e = () if batch_shared else ((0, 0),)
+        a = jnp.pad(a, (*pad_e, (0, 0), (0, wp - w), (0, 0), (0, bp - b),
+                        (0, dp - d)))
+        y = jnp.pad(y, (*pad_e, (0, 0), (0, wp - w), (0, 0), (0, bp - b)))
+        x0 = jnp.pad(x0, ((0, 0), (0, dp - d)))
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, wp - w)))
+        lam = jnp.pad(lam, ((0, 0), (0, 0), (0, wp - w)))
+
+    kernel = functools.partial(_window_kernel, n_dblk, d_blk, b, keep_history)
+    grid = (n_exp, n_rounds, n_steps, 2 * n_dblk)
+
+    if batch_shared:
+        a_spec = pl.BlockSpec((1, wp, 1, bp, d_blk),
+                              lambda e, k, t, p, *_: (k, 0, t, 0, p % n_dblk))
+        y_spec = pl.BlockSpec((1, wp, 1, bp), lambda e, k, t, p, *_: (k, 0, t, 0))
+    else:
+        a_spec = pl.BlockSpec((1, 1, wp, 1, bp, d_blk),
+                              lambda e, k, t, p, *_: (e, k, 0, t, 0, p % n_dblk))
+        y_spec = pl.BlockSpec((1, 1, wp, 1, bp),
+                              lambda e, k, t, p, *_: (e, k, 0, t, 0))
+    tensor_in_specs = [
+        pl.BlockSpec((1, d_blk), lambda e, k, t, p, *_: (e, p % n_dblk)),
+        a_spec,
+        y_spec,
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_exp, dp), jnp.float32),
+        jax.ShapeDtypeStruct((n_exp, n_rounds, wp), jnp.float32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, d_blk), lambda e, k, t, p, *_: (e, p % n_dblk)),
+        pl.BlockSpec((1, 1, wp), lambda e, k, t, p, *_: (e, k, 0)),
+    ]
+    if keep_history:
+        out_shape.append(
+            jax.ShapeDtypeStruct((n_exp, n_rounds, dp), jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((1, 1, d_blk), lambda e, k, t, p, *_: (e, k, p % n_dblk)))
+    scratch = [
+        pltpu.VMEM((wp, dp), jnp.float32),   # X: resident across all K rounds
+        pltpu.VMEM((wp, bp), jnp.float32),   # racc: per-step partial residual
+    ]
+
+    q32 = q.astype(jnp.int32)
+    lam32 = lam.astype(jnp.float32)
+    if not scalar_prefetch:
+        # interpret-safe fallback: the scalars become plain whole-array
+        # inputs; the shared index maps take (e, k, t, p, *scalar_refs) and
+        # *_ is simply empty here.
+        outs = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((n_exp, n_rounds, wp), lambda e, k, t, p: (0, 0, 0)),
+                pl.BlockSpec((n_exp, n_rounds, wp), lambda e, k, t, p: (0, 0, 0)),
+                pl.BlockSpec((n_exp, n_rounds, n_steps),
+                             lambda e, k, t, p: (0, 0, 0)),
+                *tensor_in_specs,
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(q32, lam32, lrs, x0, a, y)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=tensor_in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        )
+        outs = pl.pallas_call(
+            kernel, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(q32, lam32, lrs, x0, a, y)
+
+    x_fin, loss_sums = outs[0][:, :d], outs[1][..., :w]
+    if keep_history:
+        return x_fin, loss_sums, outs[2][..., :d]
+    return x_fin, loss_sums
+
+
+def fused_window_ref(a, y, x0, q, lam, lrs, batch_shared: bool = False):
+    """Pure-jnp oracle: a scan of `fused_round_ref` rounds, vmapped over E.
+
+    Same signature/shapes as `fused_window` (keep_history is implicit:
+    the full history is always returned).  Returns
+    (x_fin [E, D], loss_sums [E, K, W], xhist [E, K, D]).
+    """
+    n_exp = x0.shape[0]
+    n_steps = a.shape[2 if batch_shared else 3]
+    lrs = jnp.broadcast_to(jnp.asarray(lrs, jnp.float32),
+                           (n_exp, a.shape[0] if batch_shared else a.shape[1],
+                            n_steps))
+
+    def one_experiment(a_e, y_e, x0_e, q_e, lam_e, lrs_e):
+        def round_body(x, xs):
+            a_k, y_k, q_k, lam_k, lrs_k = xs
+            x_next, loss_sums = fused_round_ref(a_k, y_k, x, q_k, lam_k, lrs_k)
+            return x_next, (x_next, loss_sums)
+
+        x_fin, (xhist, losses) = jax.lax.scan(
+            round_body, x0_e, (a_e, y_e, q_e, lam_e, lrs_e))
+        return x_fin, losses, xhist
+
+    batch_ax = None if batch_shared else 0
+    return jax.vmap(one_experiment, in_axes=(batch_ax, batch_ax, 0, 0, 0, 0))(
+        a, y, x0, q, lam, lrs)

@@ -9,7 +9,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.engine import RoundEngine, anytime_policy, async_policy, sync_policy
+from repro.core.engine import (
+    RoundEngine,
+    anytime_policy,
+    async_policy,
+    fused_mean_losses,
+    sync_policy,
+)
 from repro.core.sweep import SweepEngine
 from repro.data.linreg import make_linreg
 from repro.kernels.fused_round import fused_round, fused_round_ref
@@ -119,11 +125,16 @@ def test_fused_lr_schedule(lin, rng):
                                np.asarray(out_u["loss"]), rtol=1e-5, atol=1e-6)
 
 
-def test_fused_through_sweep_engine(lin, rng):
-    """fused= composes with the [E]-batched SweepEngine driver."""
+@pytest.mark.parametrize("batch_axis", [0, None])
+def test_fused_through_sweep_engine(lin, rng, batch_axis):
+    """Vmapped fused= composes with the [E]-batched SweepEngine driver,
+    per-experiment ([E, K, ...]) and shared ([K, ...], batch_axis=None)
+    batch streams (grid-axis fused='window*' parity lives in
+    tests/test_fused_window.py)."""
     E, K = 3, 4
     params = _params(rng)
-    idx = rng.integers(0, lin.m, size=(E, K, W, QMAX, B))
+    shape = ((E, K, W, QMAX, B) if batch_axis == 0 else (K, W, QMAX, B))
+    idx = rng.integers(0, lin.m, size=shape)
     batches = (jnp.asarray(lin.A[idx], jnp.float32),
                jnp.asarray(lin.y[idx], jnp.float32))
     qs = rng.integers(0, QMAX + 1, size=(E, K, W))
@@ -131,10 +142,46 @@ def test_fused_through_sweep_engine(lin, rng):
     eng_f = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
                         fused="interpret")
     sw_u, sw_f = SweepEngine(eng_u), SweepEngine(eng_f)
-    _, out_u = sw_u.run(sw_u.init_state(params, E), batches, qs, keep_history=True)
-    _, out_f = sw_f.run(sw_f.init_state(params, E), batches, qs, keep_history=True)
+    _, out_u = sw_u.run(sw_u.init_state(params, E), batches, qs,
+                        keep_history=True, batch_axis=batch_axis)
+    _, out_f = sw_f.run(sw_f.init_state(params, E), batches, qs,
+                        keep_history=True, batch_axis=batch_axis)
     np.testing.assert_allclose(np.asarray(out_f["arena"]),
                                np.asarray(out_u["arena"]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_f["loss"]),
+                               np.asarray(out_u["loss"]), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_loss_convention_shared_helper(lin, rng):
+    """The ONE fused-loss normalization: kernel loss SUMS divided by
+    max(q_v, 1) through `fused_mean_losses` equal the unfused engine's
+    per-worker mean losses — fused and unfused metrics agree by
+    construction, q = 0 workers report 0."""
+    a, y = _batch(lin, rng)
+    x0 = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    q = jnp.asarray([5, 3, 0, 1, 4, 2], jnp.int32)
+    lam = q / jnp.maximum(jnp.sum(q), 1)
+    _, loss_sums = fused_round(a, y, x0, q, lam, 0.01, interpret=True)
+    losses = fused_mean_losses(loss_sums, q)
+    # the tree-layout round reports the raw per-worker local_sgd means
+    eng_t = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                        layout="tree")
+    _, m = eng_t.round(eng_t.init_state({"x": x0}, ()), (a, y), q)
+    np.testing.assert_allclose(np.asarray(losses),
+                               np.asarray(m["worker_loss"]),
+                               rtol=1e-5, atol=1e-6)
+    # engine-level: weighted loss metric matches the unfused round exactly
+    eng_f = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                        fused="interpret")
+    _, m_f = eng_f.round(eng_f.init_state({"x": x0}, ()), (a, y), q)
+    np.testing.assert_allclose(float(m_f["loss"]), float(m["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    assert float(losses[2]) == 0.0  # q = 0: no steps, mean loss is 0
+    # the helper broadcasts over leading axes (window [E, K, W] sums)
+    stacked = fused_mean_losses(jnp.stack([loss_sums, loss_sums]),
+                                jnp.stack([q, q]))
+    np.testing.assert_allclose(np.asarray(stacked[0]), np.asarray(losses),
+                               rtol=1e-6)
 
 
 def test_fused_validation():

@@ -1,0 +1,391 @@
+"""Whole-window fused kernel (kernels/fused_window) + engine/sweep routing.
+
+All Pallas execution is interpret-mode (CPU).  The contract under test:
+ONE kernel call == K rounds x E experiments of the unfused engine —
+masked local SGD, per-round lambda combine + rebroadcast, loss
+normalization, LR schedules advancing across rounds, D-tiling (including
+ragged padding), scalar-prefetch fallback, shared-vs-per-experiment batch
+streams, and the RoundEngine / SweepEngine drivers that put the
+experiment axis on the kernel grid (DESIGN.md §9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    RoundEngine,
+    anytime_policy,
+    async_policy,
+    generalized_policy,
+    sync_policy,
+)
+from repro.core.sweep import SweepEngine
+from repro.data.device import DeviceCorpus, gather_window_tiles
+from repro.data.linreg import make_linreg
+from repro.kernels.fused_window import fused_window, fused_window_ref, pick_d_block
+from repro.optim import sgd
+
+E, K, W, QMAX, B, D = 3, 4, 6, 5, 4, 12
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(600, D, seed=7)
+
+
+def _window_inputs(lin, rng, e=E, k=K, w=W, q=QMAX, b=B):
+    idx = rng.integers(0, lin.m, size=(e, k, w, q, b))
+    a = jnp.asarray(lin.A[idx], jnp.float32)
+    y = jnp.asarray(lin.y[idx], jnp.float32)
+    x0 = jnp.asarray(rng.standard_normal((e, lin.d)), jnp.float32)
+    qv = jnp.asarray(rng.integers(0, q + 1, (e, k, w)), jnp.int32)
+    lam = (qv / jnp.maximum(jnp.sum(qv, -1, keepdims=True), 1)).astype(jnp.float32)
+    lrs = jnp.asarray(rng.random((e, k, q)) * 0.05, jnp.float32)
+    return a, y, x0, qv, lam, lrs
+
+
+def _params(rng):
+    return {"x": jnp.asarray(rng.standard_normal(D), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+def test_kernel_matches_ref(lin, rng):
+    """Interpret kernel == jnp oracle: final iterate, losses, history."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    x_r, l_r, h_r = fused_window_ref(a, y, x0, qv, lam, lrs)
+    x_k, l_k, h_k = fused_window(a, y, x0, qv, lam, lrs, keep_history=True,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_r), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), rtol=1e-5,
+                               atol=1e-6)
+    # the final history entry IS the final iterate (in-kernel rebroadcast)
+    np.testing.assert_allclose(np.asarray(h_k[:, -1]), np.asarray(x_k),
+                               rtol=1e-6)
+
+
+def test_kernel_no_history_output(lin, rng):
+    """keep_history=False drops the [E, K, D] output, same final state."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    x_r, l_r, _ = fused_window_ref(a, y, x0, qv, lam, lrs)
+    out = fused_window(a, y, x0, qv, lam, lrs, interpret=True)
+    assert len(out) == 2
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(x_r), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(l_r), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_kernel_q_zero_worker_and_round(lin, rng):
+    """q = 0 workers accumulate no loss; an all-zero-q round combines to
+    the zero-weight result exactly as the oracle does."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    qv = qv.at[:, :, 2].set(0)          # worker 2 never participates
+    qv = qv.at[1, 2].set(0)             # experiment 1 round 2 fully idle
+    lam = (qv / jnp.maximum(jnp.sum(qv, -1, keepdims=True), 1)).astype(jnp.float32)
+    x_r, l_r, h_r = fused_window_ref(a, y, x0, qv, lam, lrs)
+    x_k, l_k, h_k = fused_window(a, y, x0, qv, lam, lrs, keep_history=True,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), rtol=1e-5,
+                               atol=1e-6)
+    assert np.all(np.asarray(l_k)[:, :, 2] == 0.0)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_r), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("d_block", [4, 5])
+def test_kernel_d_tiled(lin, rng, d_block):
+    """D-tiling (two-sweep residual/update phases) matches the untiled
+    result, including the ragged case where d_block does not divide D."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    x_r, l_r, h_r = fused_window_ref(a, y, x0, qv, lam, lrs)
+    x_k, l_k, h_k = fused_window(a, y, x0, qv, lam, lrs, keep_history=True,
+                                 interpret=True, d_block=d_block)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_r), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_kernel_scalar_prefetch_fallback(lin, rng):
+    """scalar_prefetch=False (plain-input fallback) == prefetch path."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    x_p, l_p = fused_window(a, y, x0, qv, lam, lrs, interpret=True)
+    x_f, l_f = fused_window(a, y, x0, qv, lam, lrs, interpret=True,
+                            scalar_prefetch=False)
+    np.testing.assert_allclose(np.asarray(x_p), np.asarray(x_f), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_f), rtol=1e-6)
+
+
+def test_kernel_batch_shared_stream(lin, rng):
+    """batch_shared=True reads ONE [K, W, Q, B, ...] stream for every
+    experiment (the SweepEngine batch_axis=None mapping) — equal to
+    materializing E copies."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    a_s, y_s = a[0], y[0]
+    x_s, l_s = fused_window(a_s, y_s, x0, qv, lam, lrs, interpret=True,
+                            batch_shared=True)
+    a_b = jnp.broadcast_to(a_s[None], a.shape)
+    y_b = jnp.broadcast_to(y_s[None], y.shape)
+    x_m, l_m = fused_window(a_b, y_b, x0, qv, lam, lrs, interpret=True)
+    np.testing.assert_allclose(np.asarray(x_s), np.asarray(x_m), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_m), rtol=1e-6)
+
+
+def test_pick_d_block():
+    assert pick_d_block(128) == 128
+    assert pick_d_block(256) == 256
+    assert pick_d_block(512) == 512
+    assert pick_d_block(1024) == 512
+    assert pick_d_block(640) == 128   # 640 % 512, % 256 != 0
+    with pytest.raises(ValueError):
+        # compiled path rejects non-128-multiple blocks
+        fused_window(jnp.zeros((1, 1, 1, 1, 1, 4)), jnp.zeros((1, 1, 1, 1, 1)),
+                     jnp.zeros((1, 4)), jnp.zeros((1, 1, 1), jnp.int32),
+                     jnp.zeros((1, 1, 1)), 0.01, d_block=64)
+
+
+# ---------------------------------------------------------------------------
+# RoundEngine(fused='window*')
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["window_ref", "window_interpret"])
+def test_engine_window_matches_unfused(lin, rng, mode):
+    """run(): the whole window in one kernel == the scan driver, with an
+    LR schedule advancing across rounds and full metric parity."""
+    sched = lambda step: 0.02 / (1.0 + 0.1 * step.astype(jnp.float32))
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    eng_u = RoundEngine(_loss, sgd(sched), W, QMAX, anytime_policy())
+    eng_w = RoundEngine(_loss, sgd(sched), W, QMAX, anytime_policy(),
+                        fused=mode)
+    st_u, out_u = eng_u.run(eng_u.init_state(params, ()), batches, q_mat,
+                            keep_history=True)
+    st_w, out_w = eng_w.run(eng_w.init_state(params, ()), batches, q_mat,
+                            keep_history=True)
+    np.testing.assert_allclose(np.asarray(st_w.arena), np.asarray(st_u.arena),
+                               rtol=1e-5, atol=1e-6)
+    assert int(st_w.rstep) == int(st_u.rstep) == K
+    for key in ("loss", "lambdas", "q_total", "arena"):
+        np.testing.assert_allclose(np.asarray(out_w[key]),
+                                   np.asarray(out_u[key]),
+                                   rtol=1e-5, atol=1e-6, err_msg=key)
+
+
+def test_engine_window_uniform_policy(lin, rng):
+    """Sync-style uniform weighting routes through the window kernel."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = np.full((K, W), QMAX)
+    eng_u = RoundEngine(_loss, sgd(0.02), W, QMAX, sync_policy())
+    eng_w = RoundEngine(_loss, sgd(0.02), W, QMAX, sync_policy(),
+                        fused="window_ref")
+    st_u, _ = eng_u.run(eng_u.init_state(params, ()), batches, q_mat)
+    st_w, _ = eng_w.run(eng_w.init_state(params, ()), batches, q_mat)
+    np.testing.assert_allclose(np.asarray(st_w.arena), np.asarray(st_u.arena),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_engine_window_round_entry(lin, rng):
+    """round() == a K=1 window: same (state, metrics) as the unfused
+    round (the un-jitted building-block entry point keeps working)."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(W, QMAX, B))
+    batch = (jnp.asarray(lin.A[idx], jnp.float32),
+             jnp.asarray(lin.y[idx], jnp.float32))
+    q = jnp.asarray([4, 2, 0, 5, 1, 3], jnp.int32)
+    eng_u = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy())
+    eng_w = RoundEngine(_loss, sgd(0.01), W, QMAX, anytime_policy(),
+                        fused="window_ref")
+    st_u, m_u = eng_u.round(eng_u.init_state(params, ()), batch, q)
+    st_w, m_w = eng_w.round(eng_w.init_state(params, ()), batch, q)
+    np.testing.assert_allclose(np.asarray(st_w.arena), np.asarray(st_u.arena),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m_w["loss"]), float(m_u["loss"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_w["lambdas"]),
+                               np.asarray(m_u["lambdas"]), rtol=1e-6)
+    assert int(st_w.rstep) == 1
+
+
+def test_engine_window_resume_rstep(lin, rng):
+    """Windows chain: two K/2 windows == one K window (rstep carries the
+    LR schedule across window boundaries)."""
+    sched = lambda step: 0.03 / (1.0 + 0.2 * step.astype(jnp.float32))
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    eng = RoundEngine(_loss, sgd(sched), W, QMAX, anytime_policy(),
+                      fused="window_ref")
+    st_full, _ = eng.run(eng.init_state(params, ()), batches, q_mat)
+    half = K // 2
+    st_a, _ = eng.run(eng.init_state(params, ()),
+                      (batches[0][:half], batches[1][:half]), q_mat[:half])
+    st_b, _ = eng.run(st_a, (batches[0][half:], batches[1][half:]),
+                      q_mat[half:])
+    assert int(st_b.rstep) == K
+    np.testing.assert_allclose(np.asarray(st_b.arena),
+                               np.asarray(st_full.arena), rtol=1e-5, atol=1e-6)
+
+
+def test_engine_window_indexed_batches(lin, rng):
+    """An IndexedBatches window gathers tile-major inside the jit
+    (gather_window_tiles) and matches the materialized stream."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    src = corpus.source(idx)
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    eng = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                      fused="window_ref")
+    st_i, out_i = eng.run(eng.init_state(params, ()), src, q_mat,
+                          keep_history=True)
+    st_m, out_m = eng.run(eng.init_state(params, ()), batches, q_mat,
+                          keep_history=True)
+    np.testing.assert_array_equal(np.asarray(st_i.arena), np.asarray(st_m.arena))
+    np.testing.assert_array_equal(np.asarray(out_i["arena"]),
+                                  np.asarray(out_m["arena"]))
+
+
+def test_gather_window_tiles_contract():
+    corpus = DeviceCorpus((jnp.zeros((10, 4)), jnp.zeros((10,))))
+    src = corpus.source(np.zeros((2, 3, 2, 1), np.int64))
+    a, y = gather_window_tiles(src)
+    assert a.shape == (2, 3, 2, 1, 4) and y.shape == (2, 3, 2, 1)
+    bad = DeviceCorpus({"tokens": jnp.zeros((10, 4), jnp.int32),
+                        "labels": jnp.zeros((10, 4), jnp.int32),
+                        "mask": jnp.zeros((10, 4), jnp.float32)})
+    with pytest.raises(ValueError):
+        gather_window_tiles(bad.source(np.zeros((2, 3, 2, 1), np.int64)))
+
+
+def test_engine_window_validation(lin, rng):
+    with pytest.raises(ValueError):
+        RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy(), fused="windw")
+    with pytest.raises(ValueError):  # affine policy has no fused-window form
+        RoundEngine(_loss, sgd(0.1), W, QMAX, async_policy(), fused="window_ref")
+    with pytest.raises(ValueError):  # generalized has no fused-window form
+        RoundEngine(_loss, sgd(0.1), W, QMAX, generalized_policy(),
+                    max_comm_steps=2, fused="window_ref")
+    with pytest.raises(ValueError):  # tree layout has no fused form
+        RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy(),
+                    fused="window_ref", layout="tree")
+    eng = RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy(),
+                      fused="window_ref")
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(W, QMAX, B))
+    static = (jnp.asarray(lin.A[idx], jnp.float32),
+              jnp.asarray(lin.y[idx], jnp.float32))
+    with pytest.raises(ValueError):  # static batches stay on the scan driver
+        eng.run(eng.init_state(params, ()), static,
+                rng.integers(0, QMAX + 1, size=(K, W)), batch_per_round=False)
+
+
+# ---------------------------------------------------------------------------
+# SweepEngine: E on the kernel grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["window_ref", "window_interpret"])
+@pytest.mark.parametrize("batch_axis", [0, None])
+def test_sweep_window_matches_unfused(lin, rng, mode, batch_axis):
+    """Grid-axis fused='window*' sweep == unfused sweep, per-experiment
+    ([E, K, ...], batch_axis=0) and shared ([K, ...], batch_axis=None)
+    batch streams."""
+    params = _params(rng)
+    shape = ((E, K, W, QMAX, B) if batch_axis == 0 else (K, W, QMAX, B))
+    idx = rng.integers(0, lin.m, size=shape)
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    eng_u = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy())
+    eng_w = RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(), fused=mode)
+    sw_u, sw_w = SweepEngine(eng_u), SweepEngine(eng_w)
+    st_u, out_u = sw_u.run(sw_u.init_state(params, E), batches, qs,
+                           keep_history=True, batch_axis=batch_axis)
+    st_w, out_w = sw_w.run(sw_w.init_state(params, E), batches, qs,
+                           keep_history=True, batch_axis=batch_axis)
+    np.testing.assert_allclose(np.asarray(st_w.arena), np.asarray(st_u.arena),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_w["arena"]),
+                               np.asarray(out_u["arena"]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_w["loss"]),
+                               np.asarray(out_u["loss"]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st_w.rstep), np.full(E, K))
+
+
+def test_sweep_window_single_trace(lin, rng):
+    """The window sweep keeps the SweepEngine one-trace contract."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    sw = SweepEngine(RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                                 fused="window_ref"))
+    st = sw.init_state(params, E)
+    st, _ = sw.run(st, batches, qs, batch_axis=None)
+    st, _ = sw.run(st, batches, qs, batch_axis=None)
+    assert sw.trace_count == 1 and sw.dispatch_count == 2
+
+
+def test_sweep_window_indexed_batches(lin, rng):
+    """Per-experiment index streams over ONE shared corpus ride the
+    window kernel's E grid axis."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(E, K, W, QMAX, B))
+    corpus = DeviceCorpus((jnp.asarray(lin.A, jnp.float32),
+                           jnp.asarray(lin.y, jnp.float32)))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    sw_i = SweepEngine(RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                                   fused="window_ref"))
+    sw_m = SweepEngine(RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                                   fused="window_ref"))
+    _, out_i = sw_i.run(sw_i.init_state(params, E), corpus.source(idx), qs,
+                        keep_history=True)
+    _, out_m = sw_m.run(sw_m.init_state(params, E), batches, qs,
+                        keep_history=True)
+    np.testing.assert_array_equal(np.asarray(out_i["arena"]),
+                                  np.asarray(out_m["arena"]))
+
+
+def test_sweep_window_hyper(lin, rng):
+    """opt_factory lr sweeps flow into the kernel's per-experiment lrs."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(E, K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    hyper = jnp.asarray([0.005, 0.01, 0.02], jnp.float32)
+    sw_u = SweepEngine(RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy()),
+                       opt_factory=lambda h: sgd(h))
+    sw_w = SweepEngine(RoundEngine(_loss, sgd(0.1), W, QMAX, anytime_policy(),
+                                   fused="window_ref"),
+                       opt_factory=lambda h: sgd(h))
+    _, out_u = sw_u.run(sw_u.init_state(params, E), batches, qs, hyper=hyper,
+                        keep_history=True)
+    _, out_w = sw_w.run(sw_w.init_state(params, E), batches, qs, hyper=hyper,
+                        keep_history=True)
+    np.testing.assert_allclose(np.asarray(out_w["arena"]),
+                               np.asarray(out_u["arena"]), rtol=1e-5, atol=1e-6)
