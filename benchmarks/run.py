@@ -13,6 +13,7 @@
   data     index-sourced vs materialized data plane   (BENCH_data.json)
   tree     tree-layout driver vs per-round/arena      (BENCH_tree.json)
   fused_window  whole-window kernel vs per-round fused (BENCH_fused_window.json)
+  window_opt  autotuned bf16 stateful-optimizer window (BENCH_window_opt.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
@@ -40,7 +41,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--only", default=None, help="comma-separated subset (fig2,fig3,...)")
     ap.add_argument("--scale", type=float, default=None, help="data-size scale override")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -62,6 +64,7 @@ def main() -> None:
         sweep_bench,
         tree_bench,
         variance_decay,
+        window_opt_bench,
     )
 
     suites = {
@@ -78,6 +81,7 @@ def main() -> None:
         "data": data_bench.run,
         "tree": tree_bench.run,
         "fused_window": fused_window_bench.run,
+        "window_opt": window_opt_bench.run,
         "roofline": roofline_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)

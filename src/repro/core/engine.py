@@ -64,7 +64,8 @@ from repro.core.combine import (
 )
 from repro.data.device import IndexedBatches, gather_window_tiles
 from repro.kernels.fused_round import fused_round
-from repro.kernels.fused_window import fused_window, fused_window_ref
+from repro.kernels.fused_window import (adam_count_base, fused_window,
+                                        fused_window_ref)
 from repro.optim.optimizers import Optimizer
 
 PyTree = Any
@@ -77,6 +78,24 @@ LossFn = Callable[[PyTree, PyTree], jax.Array]
 # execution of the window path).
 _WINDOW_MODES = ("window", "window_interpret", "window_ref")
 _FUSED_MODES = (False, "pallas", "interpret") + _WINDOW_MODES
+# optimizer kinds the window kernel can lower IN-KERNEL (fused_window's
+# OPT_KINDS); stateful kinds carry [W, D] moment state in VMEM scratch
+_WINDOW_STATEFUL = ("momentum", "nesterov", "adam")
+
+
+def _opt_kind(opt: Optimizer) -> Optional[str]:
+    """The kernel-lowerable optimizer kind, or None for opaque optimizers.
+
+    Reads the `Optimizer.spec` introspection dict that the named factories
+    in optim/optimizers.py attach; optimizers without a spec (adamw, chain,
+    hand-rolled) are opaque — the window path then only supports them if
+    they are stateless (probed sgd fallback, PR 5 behavior).
+    """
+    spec = getattr(opt, "spec", None)
+    if spec is None:
+        return None
+    kind = spec.get("kind")
+    return kind if kind in ("sgd",) + _WINDOW_STATEFUL else None
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
@@ -307,6 +326,9 @@ class RoundEngine:
         combine_impl: str = "einsum",
         fused: str | bool = False,
         layout: str = "arena",
+        window_dtype: str = "float32",
+        window_autotune: bool = False,
+        opt_state_mode: str = "combine",
     ):
         if combine_impl not in ("einsum", "kernel", "kernel_interpret"):
             raise ValueError(f"bad combine_impl {combine_impl!r}")
@@ -316,6 +338,24 @@ class RoundEngine:
             raise ValueError(f"bad layout {layout!r}")
         if fused and layout != "arena":
             raise ValueError("fused round requires the arena layout")
+        if window_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"bad window_dtype {window_dtype!r}")
+        if opt_state_mode not in ("combine", "reset"):
+            raise ValueError(f"bad opt_state_mode {opt_state_mode!r}")
+        if fused not in _WINDOW_MODES and (
+            window_dtype != "float32" or window_autotune
+            or opt_state_mode != "combine"
+        ):
+            raise ValueError(
+                "window_dtype/window_autotune/opt_state_mode only apply to "
+                "the fused window modes")
+        kind = _opt_kind(opt)
+        if fused in _WINDOW_MODES and kind in _WINDOW_STATEFUL \
+                and opt_state_mode == "combine" and not policy.combine_opt_state:
+            raise ValueError(
+                "fused window carries lambda-COMBINED optimizer state "
+                "(policy.combine_opt_state=True); use opt_state_mode='reset' "
+                "for combine-then-reset semantics")
         if policy.generalized and max_comm_steps < 1:
             raise ValueError("generalized policy needs max_comm_steps >= 1")
         if fused and (
@@ -335,6 +375,10 @@ class RoundEngine:
         self.max_comm_steps = max_comm_steps
         self.combine_impl = combine_impl
         self.fused = fused
+        self.window_dtype = window_dtype
+        self.window_autotune = window_autotune
+        self.opt_state_mode = opt_state_mode
+        self._opt_kind_cached = kind
         self._scales = (
             jnp.asarray(policy.step_scales, jnp.float32)
             if policy.step_scales is not None
@@ -558,12 +602,25 @@ class RoundEngine:
         self.ospec = AR.arena_spec(opt_state)
         if self.fused and (
             self.pspec.n_leaves != 1 or len(self.pspec.shapes[0]) != 1
-            or self.ospec.size != 0
         ):
             raise ValueError(
-                "fused round needs a single flat [D] parameter leaf and a "
-                "stateless optimizer (the arena linreg workload)"
+                "fused round needs a single flat [D] parameter leaf "
+                "(the arena linreg workload)"
             )
+        if self.fused:
+            d = self.pspec.shapes[0][0]
+            kind = self._opt_kind_cached
+            # the window kernel lowers momentum/nesterov/adam in-kernel;
+            # the per-round fused path stays stateless-only
+            want = {"momentum": d, "nesterov": d, "adam": 2 * d + 1}.get(
+                kind, 0) if self.fused in _WINDOW_MODES else 0
+            if self.ospec.size != want:
+                raise ValueError(
+                    f"fused={self.fused!r} with optimizer kind {kind!r} "
+                    f"expects an opt-state arena of size {want}, got "
+                    f"{self.ospec.size} (window modes lower sgd/momentum/"
+                    f"nesterov/adam; per-round fused is stateless-only)"
+                )
         vec = AR.to_arena(params, self.pspec)
         ovec = AR.to_arena(opt_state, self.ospec)
         if self.policy.generalized:
@@ -604,36 +661,162 @@ class RoundEngine:
         """[K, Q] per-(round, step) learning rates from the optimizer's
         (linear, stateless) update map, starting at round counter rstep —
         the window analogue of the per-round `lrs` vector, so schedules
-        advance across rounds exactly as the scan driver's rstep does."""
+        advance across rounds exactly as the scan driver's rstep does.
+        Optimizers with a `spec` expose their schedule directly; opaque
+        stateless ones keep the PR-5 linear-update probe."""
         opt = self.opt if opt is None else opt
-        lr_at = lambda step: -opt.update(jnp.ones((), jnp.float32), (), None,
-                                         step)[0]
+        spec = getattr(opt, "spec", None)
+        if spec is not None and "lr" in spec:
+            lr_at = lambda step: jnp.asarray(spec["lr"](step), jnp.float32)
+        else:
+            lr_at = lambda step: -opt.update(jnp.ones((), jnp.float32), (),
+                                             None, step)[0]
         steps = ((rstep + jnp.arange(n_rounds))[:, None] * self.max_local_steps
                  + jnp.arange(n_steps)[None, :])
         return jax.vmap(jax.vmap(lr_at))(steps)
 
-    def _window_call(self, x0_e, batches, qs_e, lrs_e, keep_history: bool,
-                     batch_shared: bool):
+    def _window_hp(self, opt: Optional[Optimizer] = None) -> jax.Array:
+        """[5] f32 hyperparameter row for the kernel's hp table:
+        (beta|b1, b2, eps, 1-b1, 1-b2).  The complements are computed HERE
+        (outside the kernel) so their f32 rounding matches the python-float
+        arithmetic in optim/optimizers.py bit for bit; entries may be
+        traced scalars (SweepEngine per-experiment opt_factory hypers)."""
+        opt = self.opt if opt is None else opt
+        spec = getattr(opt, "spec", None) or {}
+        kind = spec.get("kind")
+        if kind == "adam":
+            b1, b2, eps = spec["b1"], spec["b2"], spec["eps"]
+            row = (b1, b2, eps, 1.0 - b1, 1.0 - b2)
+        elif kind in ("momentum", "nesterov"):
+            beta = spec["beta"]
+            row = (beta, 0.0, 0.0, 1.0 - beta, 0.0)
+        else:
+            row = (0.0, 0.0, 0.0, 0.0, 0.0)
+        return jnp.stack([jnp.asarray(v, jnp.float32) for v in row])
+
+    def _window_opt_unpack(self, opt_vec):
+        """(m0 [D], v0 [D], cnt0 []) f32 from ONE opt-arena vector.
+
+        Mirrors `AR.from_arena`'s dtype rule: the Adam count slot is
+        truncated f32->int32 on the way out of the arena, which is exactly
+        the combine-then-truncate base `adam_count_base` expects."""
+        leaves = jax.tree.leaves(AR.from_arena(opt_vec, self.ospec))
+        if self._opt_kind_cached == "adam":
+            cnt, m, v = leaves  # arena flatten order: count, m, v
+            return m, v, cnt.astype(jnp.float32)
+        (m,) = leaves
+        return m, jnp.zeros_like(m), jnp.zeros((), jnp.float32)
+
+    def _window_opt_repack(self, m, v, cnt):
+        """ONE opt-arena vector from window-end combined state.  The
+        fractional f32 count goes straight into the arena slot (to_arena
+        keeps f32) — truncation happens on the NEXT unpack, exactly like
+        the unfused engine's round-entry `from_arena`."""
+        if self._opt_kind_cached == "adam":
+            leaves = [cnt, m, v]
+        else:
+            leaves = [m]
+        tree = jax.tree.unflatten(self.ospec.treedef, leaves)
+        return AR.to_arena(tree, self.ospec)
+
+    def _window_tile(self, n_exp: int, n_rounds: int, n_steps: int,
+                     local_batch: int, d: int):
+        """(d_block, two_sweep) for the kernel launch — `pick_d_block`'s
+        fixed defaults unless window_autotune, then the roofline-guided
+        cached search (kernels/autotune.py).  Runs at trace time on host
+        ints, so the choice is baked into the jitted window like any
+        other static argument."""
+        if not self.window_autotune:
+            return None, True
+        from repro.kernels.autotune import autotune_window
+        cfg = autotune_window(
+            n_exp, n_rounds, self.n_workers, n_steps, local_batch, d,
+            dtype=self.window_dtype, opt=self._opt_kind_cached or "sgd",
+            backend=("interpret" if self.fused == "window_interpret"
+                     else None))
+        return cfg.d_block, cfg.two_sweep
+
+    def _window_call(self, x0_e, opt_e, batches, qs_e, lrs_e, hp_e,
+                     keep_history: bool, batch_shared: bool):
         """E-stacked window execution: ONE kernel (or oracle) call for the
         whole [E, K] grid.  `_window_driver_fn` wraps it with E = 1; the
         SweepEngine maps its experiment axis onto the kernel's E grid
         dimension through this same entry point instead of vmapping the
-        `pallas_call`."""
+        `pallas_call`.
+
+        opt_e [E, S] is the stacked opt arena (S = 0 for stateless kinds)
+        and hp_e [E, 5] the per-experiment hyperparameter table
+        (`_window_hp`); returns (x_fin [E, D], new_opt_e [E, S], metrics).
+        Stateful kinds in 'combine' mode chain state across consecutive
+        windows through the arena exactly like the unfused scan driver;
+        'reset' zeroes the arena at every window/round boundary."""
+        x_dt = (jnp.bfloat16 if self.window_dtype == "bfloat16"
+                else jnp.float32)
         if isinstance(batches, IndexedBatches):
-            a, y = gather_window_tiles(batches)
+            a, y = gather_window_tiles(batches, dtype=x_dt)
         else:
             a, y = batches
+        kind = self._opt_kind_cached
+        stateful = kind in _WINDOW_STATEFUL
+        carry = stateful and self.opt_state_mode == "combine"
+        adam = kind == "adam"
+        n_exp, n_rounds = qs_e.shape[0], qs_e.shape[1]
+        n_steps, b = a.shape[-3], a.shape[-2]
+        d = x0_e.shape[-1]
         lam = jax.vmap(jax.vmap(lambda qk: self._weights(qk, None)))(qs_e)
-        if self.fused == "window_ref":
-            x_fin, loss_sums, xhist = fused_window_ref(
-                a, y, x0_e, qs_e, lam, lrs_e, batch_shared=batch_shared)
+        if stateful:
+            m0, v0, cnt0 = jax.vmap(self._window_opt_unpack)(opt_e)
         else:
+            m0 = v0 = cnt0 = None
+        if adam:
+            if carry:
+                cbase, cnt_fin = adam_count_base(qs_e, lam, cnt0)
+            else:  # reset: the count restarts at every round boundary
+                cbase = jnp.zeros((n_exp, n_rounds), jnp.float32)
+                cnt_fin = jnp.zeros((n_exp,), jnp.float32)
+        else:
+            cbase = None
+        if self.fused == "window_ref":
+            out = fused_window_ref(
+                a, y, x0_e, qs_e, lam, lrs_e, batch_shared=batch_shared,
+                opt=kind or "sgd", state_mode=self.opt_state_mode,
+                dtype=x_dt, hp=hp_e if stateful else None,
+                m0=m0, v0=v0, cnt0=cnt0)
+            x_fin, loss_sums, xhist = out[0], out[1], out[2]
+            if carry:
+                st = out[3]
+                m_fin = st["m"]
+                v_fin = st.get("v")
+                cnt_fin = st.get("count", jnp.zeros((n_exp,), jnp.float32))
+        else:
+            d_block, two_sweep = self._window_tile(
+                n_exp, n_rounds, n_steps, b, d)
             out = fused_window(
-                a, y, x0_e, qs_e, lam, lrs_e, keep_history=keep_history,
+                a, y, x0_e, qs_e, lam, lrs_e,
+                hp=hp_e if stateful else None, cbase=cbase, m0=m0, v0=v0,
+                opt=kind or "sgd", state_mode=self.opt_state_mode,
+                dtype=x_dt, keep_history=keep_history,
                 batch_shared=batch_shared,
-                interpret=(self.fused == "window_interpret"))
+                interpret=(self.fused == "window_interpret"),
+                d_block=d_block, two_sweep=two_sweep)
             x_fin, loss_sums = out[0], out[1]
-            xhist = out[2] if keep_history else None
+            idx = 2
+            xhist = None
+            if keep_history:
+                xhist = out[idx]
+                idx += 1
+            if carry:
+                m_fin = out[idx]
+                v_fin = out[idx + 1] if adam else None
+        if carry:
+            new_opt_e = jax.vmap(self._window_opt_repack)(
+                m_fin,
+                v_fin if adam else jnp.zeros_like(m_fin),
+                cnt_fin if adam else jnp.zeros((n_exp,), jnp.float32))
+        elif stateful:  # reset mode: zeroed moments and count
+            new_opt_e = jnp.zeros_like(opt_e)
+        else:
+            new_opt_e = opt_e
         losses = fused_mean_losses(loss_sums, qs_e)
         metrics = {
             "loss": jax.vmap(jax.vmap(_mean_loss))(lam, losses),
@@ -642,7 +825,7 @@ class RoundEngine:
         }
         if keep_history:
             metrics["arena"] = xhist
-        return x_fin, metrics
+        return x_fin, new_opt_e, metrics
 
     def _window_driver_fn(self, state, batches, qs, lams, comm_batches, qbars,
                           batch_per_round, keep_history):
@@ -667,10 +850,11 @@ class RoundEngine:
             n_steps = jax.tree.leaves(batches)[0].shape[2]
             b_e = jax.tree.map(lambda l: l[None], batches)
         lrs = self._window_lrs(state.rstep, n_rounds, n_steps)[None]
-        x_fin, metrics = self._window_call(
-            state.arena[None], b_e, qs[None], lrs, keep_history,
-            batch_shared=False)
-        new_state = EngineState(x_fin[0], state.opt_arena,
+        hp = self._window_hp()[None]
+        x_fin, new_opt_e, metrics = self._window_call(
+            state.arena[None], state.opt_arena[None], b_e, qs[None], lrs, hp,
+            keep_history, batch_shared=False)
+        new_state = EngineState(x_fin[0], new_opt_e[0],
                                 state.rstep + n_rounds)
         return new_state, jax.tree.map(lambda l: l[0], metrics)
 

@@ -52,7 +52,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import arena as AR
-from repro.core.engine import _WINDOW_MODES, EngineState, RoundEngine
+from repro.core.engine import (_WINDOW_MODES, EngineState, RoundEngine,
+                               _opt_kind)
 from repro.data.device import IndexedBatches
 from repro.optim.optimizers import Optimizer
 
@@ -145,18 +146,31 @@ class SweepEngine:
         else:
             n_steps = jax.tree.leaves(batches)[0].shape[2 if batch_shared else 3]
 
-        def lrs_for(rstep_e, hyper_v):
+        def tables_for(rstep_e, hyper_v):
+            """Per-experiment (lrs [K, Q], hp [5]) — the kernel's scalar
+            tables.  opt_factory runs at TRACE time with a scalar tracer:
+            schedules close over the traced hyper, and the traced
+            hyperparameters land in the hp row (the kernel reads hypers
+            from the table, so a hyper sweep never retraces the kernel)."""
             opt = self.opt_factory(hyper_v) if hyper_v is not None else None
-            return self.engine._window_lrs(rstep_e, n_rounds, n_steps, opt=opt)
+            if opt is not None and _opt_kind(opt) != self.engine._opt_kind_cached:
+                raise ValueError(
+                    f"opt_factory produced optimizer kind {_opt_kind(opt)!r} "
+                    f"but the engine was built for "
+                    f"{self.engine._opt_kind_cached!r}; the window kernel's "
+                    f"opt lowering and state layout are compiled structure — "
+                    f"sweep hypers may change values, not the kind")
+            lrs_e = self.engine._window_lrs(rstep_e, n_rounds, n_steps, opt=opt)
+            return lrs_e, self.engine._window_hp(opt)
 
         if hyper is None:
-            lrs = jax.vmap(lambda r: lrs_for(r, None))(state.rstep)
+            lrs, hp = jax.vmap(lambda r: tables_for(r, None))(state.rstep)
         else:
-            lrs = jax.vmap(lrs_for)(state.rstep, hyper)
-        x_fin, metrics = self.engine._window_call(
-            state.arena, batches, qs, lrs, keep_history, batch_shared)
-        new_state = EngineState(x_fin, state.opt_arena,
-                                state.rstep + n_rounds)
+            lrs, hp = jax.vmap(tables_for)(state.rstep, hyper)
+        x_fin, new_opt, metrics = self.engine._window_call(
+            state.arena, state.opt_arena, batches, qs, lrs, hp,
+            keep_history, batch_shared)
+        new_state = EngineState(x_fin, new_opt, state.rstep + n_rounds)
         return new_state, metrics
 
     def _make_driver(self):

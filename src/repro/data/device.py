@@ -86,7 +86,7 @@ jax.tree_util.register_dataclass(
 )
 
 
-def gather_window_tiles(source: IndexedBatches):
+def gather_window_tiles(source: IndexedBatches, dtype=None):
     """Materialize a window's (A, y) tile stack for the fused window kernel.
 
     `kernels/fused_window.py` streams one `[W, B, d_block]` design tile
@@ -100,6 +100,10 @@ def gather_window_tiles(source: IndexedBatches):
     gather (§7: one round's batch live at a time), the whole window's
     tiles are live for the kernel call — DESIGN.md §9 has the HBM budget
     math for when that trade is right.
+
+    `dtype` (e.g. jnp.bfloat16 for the bf16 window path) casts the tiles
+    AT the gather, so the materialized window stack occupies the reduced
+    footprint in HBM rather than being cast again inside the kernel call.
     """
     batch = source.gather()
     leaves = jax.tree.leaves(batch)
@@ -109,7 +113,10 @@ def gather_window_tiles(source: IndexedBatches):
             f"{len(leaves)} leaves with ndims "
             f"{[l.ndim for l in leaves]}"
         )
-    return leaves[0], leaves[1]
+    a, y = leaves[0], leaves[1]
+    if dtype is not None:
+        a, y = a.astype(dtype), y.astype(dtype)
+    return a, y
 
 
 class DeviceCorpus:

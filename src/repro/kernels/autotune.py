@@ -1,0 +1,212 @@
+"""Roofline-guided autotuner for the fused window kernel.
+
+`fused_window` has two launch-shape knobs the hard-coded defaults leave on
+the table: the D-tile width `d_block` (PR 5 fixed 128..512 via
+`pick_d_block`) and `two_sweep` (whether the residual and update phases
+get separate grid visits per block, or collapse into one visit when the
+whole padded D fits a single block).  The right choice depends on the
+window shape: small-D windows want ONE wide block and a single sweep
+(every extra grid step pays sequencing overhead and a second A-tile
+fetch), huge-D windows are VMEM-bound and must tile.
+
+Instead of timing candidates on device, the tuner scores each candidate
+with the `launch/roofline.py` cost model — FLOPs / HBM bytes / per-grid-
+step overhead under the VMEM feasibility constraint — which is exact
+enough for a monotone knob like this and keeps tuning free of device
+dispatch (it runs at trace time inside the engine's jit).  Selection is
+deterministic: feasible candidates sorted by (modeled time, wider block,
+fewer sweeps).
+
+Results persist in a JSON cache keyed by CACHE_VERSION + backend + shape
++ dtype + optimizer (the full key spec is DESIGN.md §10), so repeated
+sweeps and CI runs skip the search.  Cache path resolution order:
+explicit `cache_path` arg > $REPRO_AUTOTUNE_CACHE > $XDG_CACHE_HOME/
+repro/window_autotune.json > ~/.cache/repro/window_autotune.json.  CI
+jobs point REPRO_AUTOTUNE_CACHE at a tmpdir; every cache I/O failure
+degrades to an in-memory search, never an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+from typing import Optional
+
+from repro.launch.roofline import (PEAK_FLOPS, VMEM_BYTES, Roofline,
+                                   kernel_time)
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+# f32 [W, D] moment tensors resident in VMEM per optimizer kind
+N_STATE = {"sgd": 0, "momentum": 1, "nesterov": 1, "adam": 2}
+# elementwise flops per parameter per update step (rough, per kind)
+_OPT_FLOPS = {"sgd": 2, "momentum": 4, "nesterov": 6, "adam": 12}
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2}
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowConfig:
+    """One fused_window launch configuration (+ its modeled runtime)."""
+
+    d_block: int
+    two_sweep: bool
+    model_s: float  # modeled window wall-clock (diagnostic, not a key)
+
+    def as_dict(self) -> dict:
+        return {"d_block": self.d_block, "two_sweep": self.two_sweep,
+                "model_s": self.model_s}
+
+
+def window_cost(n_exp: int, n_rounds: int, n_workers: int, q_max: int,
+                local_batch: int, d: int, dtype: str, opt: str,
+                d_block: int, two_sweep: bool) -> tuple[float, int, bool]:
+    """(modeled seconds, VMEM bytes, feasible) for one candidate config.
+
+    Mirrors fused_window's padding/layout exactly: wp/bp round to the
+    dtype sublane multiple, D rounds to 128 lanes then to a d_block
+    multiple.  HBM traffic counts the A stream once per step per sweep
+    that touches it (blocks are re-fetched on the second sweep only when
+    n_dblk > 1 — consecutive visits to the SAME block are pipelined), the
+    y stream once per step, plus the small per-round outputs.  VMEM
+    counts the resident stack + moments + racc scratch and double-
+    buffered A/y stream tiles.
+    """
+    bytes_x = _DTYPE_BYTES[dtype]
+    sub = 16 if bytes_x == 2 else 8
+    wp = _round_up(n_workers, sub)
+    bp = _round_up(local_batch, sub)
+    dp = _round_up(_round_up(d, 128), d_block)
+    n_dblk = dp // d_block
+    n_state = N_STATE[opt]
+
+    vmem = (
+        wp * dp * bytes_x                # X iterate stack (resident)
+        + n_state * wp * dp * 4          # M/V moments (resident, f32)
+        + wp * bp * 4                    # racc
+        + 2 * wp * bp * d_block * bytes_x  # A tile, double-buffered
+        + 2 * wp * bp * bytes_x          # y tile, double-buffered
+    )
+    feasible = vmem <= VMEM_BYTES
+
+    steps = n_exp * n_rounds * q_max
+    a_reads = 2 if n_dblk > 1 else 1     # second sweep re-fetches blocks
+    hbm = (
+        steps * a_reads * wp * bp * dp * bytes_x   # A stream
+        + steps * wp * bp * bytes_x                # y stream
+        + n_exp * n_rounds * (dp * bytes_x + wp * 4)  # history + losses
+        + n_exp * (1 + n_state) * dp * 4           # x_fin, m_fin, v_fin
+    )
+    flops = steps * (4 * wp * bp * dp              # residual + update matmuls
+                     + _OPT_FLOPS[opt] * wp * dp)  # in-kernel optimizer
+    grid_steps = steps * (2 * n_dblk if two_sweep else 1)
+    peak = PEAK_FLOPS if bytes_x == 2 else PEAK_FLOPS / 2
+    rf = Roofline(flops=float(flops), hbm_bytes=float(hbm), coll_bytes=0.0,
+                  coll_by_kind={}, peak_flops=peak)
+    return kernel_time(rf, grid_steps), vmem, feasible
+
+
+def candidate_configs(d: int, dtype: str):
+    """All (d_block, two_sweep) pairs worth scoring for a given D."""
+    dp0 = _round_up(d, 128)
+    blocks = [blk for blk in (128, 256, 512, 1024, 2048, 4096) if blk <= dp0]
+    if not blocks:
+        blocks = [128]
+    for blk in blocks:
+        yield blk, True
+        if _round_up(dp0, blk) // blk == 1:
+            yield blk, False
+
+
+def search(n_exp: int, n_rounds: int, n_workers: int, q_max: int,
+           local_batch: int, d: int, dtype: str, opt: str) -> WindowConfig:
+    """Deterministic roofline search over the candidate grid."""
+    scored = []
+    for blk, two in candidate_configs(d, dtype):
+        t, vmem, ok = window_cost(n_exp, n_rounds, n_workers, q_max,
+                                  local_batch, d, dtype, opt, blk, two)
+        scored.append((not ok, t, -blk, two, vmem, blk))
+    # feasible first, then modeled time, then wider blocks / fewer sweeps
+    scored.sort()
+    infeasible, t, neg_blk, two, _, blk = scored[0]
+    return WindowConfig(d_block=blk, two_sweep=two, model_s=t)
+
+
+def cache_key(n_exp: int, n_rounds: int, n_workers: int, q_max: int,
+              local_batch: int, d: int, dtype: str, opt: str,
+              backend: str) -> str:
+    """DESIGN.md §10: version / backend / shape / dtype / optimizer."""
+    return (f"v{CACHE_VERSION}/{backend}"
+            f"/E{n_exp}.K{n_rounds}.W{n_workers}.Q{q_max}"
+            f".B{local_batch}.D{d}/{dtype}/{opt}")
+
+
+def cache_path(explicit: Optional[str] = None) -> pathlib.Path:
+    if explicit:
+        return pathlib.Path(explicit)
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return pathlib.Path(env)
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return pathlib.Path(base) / "repro" / "window_autotune.json"
+
+
+def _load_cache(path: pathlib.Path) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_cache(path: pathlib.Path, data: dict) -> None:
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # a read-only FS never breaks tuning; next run re-searches
+
+
+def autotune_window(n_exp: int, n_rounds: int, n_workers: int, q_max: int,
+                    local_batch: int, d: int, dtype: str = "float32",
+                    opt: str = "sgd", backend: Optional[str] = None,
+                    path: Optional[str] = None,
+                    refresh: bool = False) -> WindowConfig:
+    """(d_block, two_sweep) for a window shape, via cache then search.
+
+    `backend` defaults to jax.default_backend() — the cache key includes
+    it so a CPU-interpret cache never leaks onto a TPU run.
+    """
+    if dtype not in _DTYPE_BYTES:
+        raise ValueError(f"bad dtype {dtype!r}")
+    if opt not in N_STATE:
+        raise ValueError(f"bad opt {opt!r}")
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    key = cache_key(n_exp, n_rounds, n_workers, q_max, local_batch, d,
+                    dtype, opt, backend)
+    p = cache_path(path)
+    cache = _load_cache(p)
+    if not refresh and key in cache:
+        hit = cache[key]
+        try:
+            return WindowConfig(d_block=int(hit["d_block"]),
+                                two_sweep=bool(hit["two_sweep"]),
+                                model_s=float(hit.get("model_s", 0.0)))
+        except (KeyError, TypeError, ValueError):
+            pass  # stale/corrupt entry: fall through to re-search
+    cfg = search(n_exp, n_rounds, n_workers, q_max, local_batch, d, dtype, opt)
+    cache[key] = cfg.as_dict()
+    _save_cache(p, cache)
+    return cfg

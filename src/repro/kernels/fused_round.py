@@ -42,6 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import scalar_grid_call
+
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
@@ -134,38 +136,18 @@ def fused_round(
         ),
     )
 
-    q32 = q.astype(jnp.int32)
-    lam32 = lam.astype(jnp.float32)
-    if not scalar_prefetch:
-        # interpret-safe fallback: scalars as plain (whole-array) inputs;
-        # the shared index maps take (t, *scalar_refs) and *refs is simply
-        # empty here.
-        x_out, losses = pl.pallas_call(
-            kernel,
-            grid=(n_steps,),
-            in_specs=[
-                pl.BlockSpec((wp,), lambda t: (0,)),
-                pl.BlockSpec((wp,), lambda t: (0,)),
-                pl.BlockSpec((n_steps,), lambda t: (0,)),
-                *tensor_specs["in_specs"],
-            ],
-            out_specs=tensor_specs["out_specs"],
-            out_shape=out_shape,
-            scratch_shapes=scratch,
-            interpret=interpret,
-        )(q32, lam32, lrs, x0, a, y)
-    else:
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=(n_steps,),
-            in_specs=tensor_specs["in_specs"],
-            out_specs=tensor_specs["out_specs"],
-            scratch_shapes=scratch,
-        )
-        x_out, losses = pl.pallas_call(
-            kernel, grid_spec=grid_spec, out_shape=out_shape,
-            interpret=interpret,
-        )(q32, lam32, lrs, x0, a, y)
+    x_out, losses = scalar_grid_call(
+        kernel,
+        grid=(n_steps,),
+        scalar_args=(q.astype(jnp.int32), lam.astype(jnp.float32), lrs),
+        tensor_args=(x0, a, y),
+        tensor_in_specs=tensor_specs["in_specs"],
+        out_specs=tensor_specs["out_specs"],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        scalar_prefetch=scalar_prefetch,
+        interpret=interpret,
+    )
     return x_out[:d], losses[:w]
 
 

@@ -8,10 +8,11 @@ per step, and the SweepEngine reaches it by vmapping the `pallas_call`
 over E experiments instead of giving the kernel the experiment axis.
 This kernel executes the ENTIRE window in ONE `pallas_call`:
 
-  grid = (E, K, q_max, 2 * n_dblk)   e - experiment   (size-1 for single runs)
+  grid = (E, K, q_max, P)            e - experiment   (size-1 for single runs)
                                      k - round
                                      t - local-SGD step
                                      p - phase x D-block (minor; see below)
+                                     P = 2 * n_dblk two-sweep, 1 single-sweep
 
   X scratch [W, D]  every worker's iterate, VMEM-RESIDENT across ALL K
                     rounds of an experiment; initialized from x0[e] at the
@@ -29,34 +30,66 @@ cannot run its steps independently):
                                     (racc starts at -y_t; at the last
                                     block racc IS the residual and the
                                     pre-update loss is accumulated)
-  phase 1 (p in [n_dblk, 2*n_dblk)) X[:, blk] -= active * lr_t * (2/B) *
-                                    A_t[:, :, blk]^T racc
+  phase 1 (p in [n_dblk, 2*n_dblk)) X[:, blk] -= active * lr_t * step dir
+                                    from g = A_t[:, :, blk]^T ((2/B) racc)
+                                    through the in-kernel optimizer below
   epilogue (t == q_max-1, phase 1)  per block: xc = sum_v lam_v X[v, blk]
                                     -> history out [E, K, D] (optional),
                                     final out [E, D] at k == K-1, and
                                     X[:, blk] = xc (the rebroadcast)
 
-The per-step batch tile is therefore [W, B, d_block] instead of
-[W, B, D]: the VMEM budget drops from `W*(2B+1)*D*4 <= VMEM` (untiled
-stream + stack) to `W*D*4 + 2*W*B*d_block*4 <= VMEM` — the iterate stack
-is the only full-width resident, so feasible linreg D grows by ~2B x
-(DESIGN.md SS9 has the budget math).  The price is a second read of each
-A block per step (phase 0 and phase 1); n_dblk == 1 revisits the same
-block consecutively and pays nothing.
+`two_sweep=False` collapses the two phases into ONE grid visit per step
+(residual then update back to back) — only legal when n_dblk == 1, where
+the second read of the A tile buys nothing; the autotuner
+(kernels/autotune.py) picks d_block/two_sweep per shape.
 
-q [E, K, W], lambda [E, K, W] and the per-step learning rates [E, K, Q]
-ride scalar prefetch (`pltpu.PrefetchScalarGridSpec`) so no grid step
-re-fetches them from HBM; `scalar_prefetch=False` is the interpret-safe
-fallback with the same kernel body.  `batch_shared=True` accepts a batch
-stream WITHOUT the leading E axis and simply drops `e` from the index
-maps — a shared-stream sweep (SweepEngine batch_axis=None) reads ONE
-stream from HBM for all E experiments instead of materializing E copies.
+In-kernel stateful optimizers: momentum/Nesterov keep an f32 [W, D]
+first-moment scratch M, Adam adds the [W, D] second moment V; both advance
+only on ACTIVE steps (exactly `local_sgd`'s masked-state rule) and live in
+VMEM across the whole window like X does.  At each round epilogue the
+state follows `state_mode`:
 
-Workload contract (same as fused_round, validated by RoundEngine):
-flat-arena linreg rounds — params = one [D] vector, loss = mean squared
-residual, stateless SGD, non-affine policy, iterate_mode='last'.  Parity
-with the unfused engine is pinned by tests/test_fused_window.py;
-`fused_window_ref` is the pure-jnp oracle (a scan of `fused_round_ref`).
+  'combine'  M/V are lambda-combined and rebroadcast like the iterate
+             (the unfused engine's `combine_opt_state=True` oracle); the
+             window-start moments stream in as m0/v0 [E, D] and the
+             window-end combined moments stream out as m_fin/v_fin, so
+             consecutive windows chain bit-identically in f32.
+  'reset'    M/V zero at every round boundary (combine-then-reset); no
+             state I/O crosses the kernel boundary.
+
+Adam's bias-correction count is NOT a kernel tensor: under the f32 arena
+the unfused engine truncates the lambda-combined (fractional) count to
+int32 at every round entry, so the in-round count at active step t is a
+per-(e, k) SCALAR cbase[e, k] + t + 1 with cbase precomputed on the host
+side by `adam_count_base` (the same combine-then-truncate recurrence).
+Optimizer hyperparameters ride a per-experiment hp[E, 5] scalar table
+(beta|b1, b2, eps, 1-b1, 1-b2 — the complements precomputed OUTSIDE the
+kernel so f32 rounding matches `optim/optimizers.py` bit for bit).
+
+bf16 iterate stacks (dtype=jnp.bfloat16): X, the gathered batch tiles
+A/y, and the history output store bf16 while EVERY accumulation stays
+f32 — racc, the gradient contraction (`preferred_element_type`), the
+optimizer moments M/V, the update arithmetic, and the lambda combine
+(xc is computed in f32 and only rounded to bf16 when rebroadcast /
+written to history; x_fin and m_fin/v_fin stream out in f32).  This
+halves the VMEM footprint of the stack and the A tiles (~2x feasible
+W x D) at a documented loss-trajectory tolerance (DESIGN.md §9).
+
+q [E, K, W], lambda [E, K, W], the per-step learning rates [E, K, Q] and
+the hp/cbase tables ride scalar prefetch (`pltpu.PrefetchScalarGridSpec`)
+so no grid step re-fetches them from HBM; `scalar_prefetch=False` is the
+interpret-safe fallback with the same kernel body (the shared dispatch
+lives in `kernels/ops.py:scalar_grid_call`).  `batch_shared=True` accepts
+a batch stream WITHOUT the leading E axis and simply drops `e` from the
+index maps — a shared-stream sweep (SweepEngine batch_axis=None) reads
+ONE stream from HBM for all E experiments instead of materializing E
+copies.
+
+Workload contract (validated by RoundEngine): flat-arena linreg rounds —
+params = one [D] vector, loss = mean squared residual, sgd/momentum/
+nesterov/adam local steps, non-affine policy, iterate_mode='last'.
+Parity with the unfused engine is pinned by tests/test_fused_window.py;
+`fused_window_ref` is the pure-jnp oracle.
 """
 from __future__ import annotations
 
@@ -67,7 +100,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fused_round import _round_up, fused_round_ref
+from repro.kernels.fused_round import _round_up
+from repro.kernels.ops import scalar_grid_call
+
+_STATEFUL = ("momentum", "nesterov", "adam")
+OPT_KINDS = ("sgd",) + _STATEFUL
 
 
 def pick_d_block(d_padded: int, cap: int = 512) -> int:
@@ -78,37 +115,89 @@ def pick_d_block(d_padded: int, cap: int = 512) -> int:
     return min(blk, d_padded)
 
 
+def adam_count_base(q: jax.Array, lam: jax.Array,
+                    cnt0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Per-round Adam count bases under the arena's combine-then-truncate rule.
+
+    The unfused engine stores the lambda-combined count as an f32 arena slot
+    and truncates it to int32 at EVERY round entry (`AR.from_arena`), so the
+    count base of round k obeys
+
+        cb_k     = trunc(cf_k)                       (int32 truncation)
+        cf_{k+1} = sum_v lam[e, k, v] * (cb_k + q[e, k, v])    (f32)
+
+    q, lam: [E, K, W]; cnt0: [E] f32 fractional count at window start
+    (defaults to 0).  Returns (cbase [E, K] f32 — the truncated base the
+    kernel adds t+1 to — and cnt_fin [E] f32, the fractional combined count
+    after the last round, i.e. the value the arena slot carries forward).
+    """
+    qf = q.astype(jnp.float32)
+    lamf = lam.astype(jnp.float32)
+    cf0 = (jnp.zeros(qf.shape[0], jnp.float32) if cnt0 is None
+           else cnt0.astype(jnp.float32))
+
+    def step(cf, xs):
+        q_k, lam_k = xs  # [E, W]
+        cb = cf.astype(jnp.int32).astype(jnp.float32)
+        cf_next = jnp.einsum("ew,ew->e", lam_k, cb[:, None] + q_k)
+        return cf_next, cb
+
+    cf_fin, cb = jax.lax.scan(
+        step, cf0, (jnp.swapaxes(qf, 0, 1), jnp.swapaxes(lamf, 0, 1)))
+    return jnp.swapaxes(cb, 0, 1), cf_fin
+
+
 def _window_kernel(n_dblk: int, d_blk: int, b_real: int, keep_history: bool,
-                   q_ref, lam_ref, lrs_ref,   # scalar-prefetch / plain inputs
-                   x0_ref, a_ref, y_ref,      # tensor inputs
-                   *rest):
-    if keep_history:
-        xfin_ref, loss_ref, xhist_ref, X, racc = rest
-    else:
-        xfin_ref, loss_ref, X, racc = rest
-        xhist_ref = None
+                   opt_kind: str, carry_state: bool, two_sweep: bool,
+                   x_dtype, *refs):
+    stateful = opt_kind in _STATEFUL
+    adam = opt_kind == "adam"
+    rs = list(refs)
+    q_ref, lam_ref, lrs_ref = rs.pop(0), rs.pop(0), rs.pop(0)
+    hp_ref = rs.pop(0) if stateful else None
+    cb_ref = rs.pop(0) if adam else None
+    x0_ref, a_ref, y_ref = rs.pop(0), rs.pop(0), rs.pop(0)
+    m0_ref = rs.pop(0) if carry_state else None
+    v0_ref = rs.pop(0) if (carry_state and adam) else None
+    xfin_ref, loss_ref = rs.pop(0), rs.pop(0)
+    xhist_ref = rs.pop(0) if keep_history else None
+    mfin_ref = rs.pop(0) if carry_state else None
+    vfin_ref = rs.pop(0) if (carry_state and adam) else None
+    X, racc = rs.pop(0), rs.pop(0)
+    M = rs.pop(0) if stateful else None
+    V = rs.pop(0) if adam else None
+    assert not rs
+
     e, k = pl.program_id(0), pl.program_id(1)
     t, p = pl.program_id(2), pl.program_id(3)
     n_rounds, n_steps = pl.num_programs(1), pl.num_programs(2)
     w_p, b_p = racc.shape
-    phase = p // n_dblk
     blk = p % n_dblk
     dsl = pl.dslice(blk * d_blk, d_blk)
 
     a = a_ref[...].reshape(w_p, b_p, d_blk)      # this step's [W, B, blk] tile
     active = (t < q_ref[e, k]).astype(jnp.float32)   # [W]
 
-    @pl.when(phase == 0)
+    def _bcast(row):  # [d_blk] -> [W, d_blk]
+        return jnp.broadcast_to(row[None, :], (w_p, d_blk))
+
     def _residual_sweep():
-        # first grid visit of this experiment: seed the resident stack
+        # first grid visit of this experiment: seed the resident stack/state
         @pl.when(jnp.logical_and(k == 0, t == 0))
         def _init_block():
-            X[:, dsl] = jnp.broadcast_to(x0_ref[...].reshape(1, d_blk),
-                                         (w_p, d_blk))
+            X[:, dsl] = _bcast(x0_ref[...].reshape(d_blk).astype(x_dtype))
+            if M is not None:
+                M[:, dsl] = (_bcast(m0_ref[...].reshape(d_blk))
+                             if m0_ref is not None
+                             else jnp.zeros((w_p, d_blk), jnp.float32))
+            if V is not None:
+                V[:, dsl] = (_bcast(v0_ref[...].reshape(d_blk))
+                             if v0_ref is not None
+                             else jnp.zeros((w_p, d_blk), jnp.float32))
 
         @pl.when(blk == 0)
         def _start_residual():
-            racc[...] = -y_ref[...].reshape(w_p, b_p)
+            racc[...] = -y_ref[...].reshape(w_p, b_p).astype(jnp.float32)
             # zero this round's loss row once per (e, k) block visit
             @pl.when(t == 0)
             def _():
@@ -125,19 +214,43 @@ def _window_kernel(n_dblk: int, d_blk: int, b_real: int, keep_history: bool,
             loss_t = jnp.sum(r * r, axis=1) / b_real
             loss_ref[...] += (active * loss_t).reshape(loss_ref.shape)
 
-    @pl.when(phase == 1)
     def _update_sweep():
-        g = (2.0 / b_real) * jnp.einsum("wb,wbd->wd", racc[...], a,
-                                        preferred_element_type=jnp.float32)
+        # scale the residual FIRST (matching autodiff's VJP order through
+        # the mean-squared loss), then contract — keeps f32 parity bitwise
+        g = jnp.einsum("wb,wbd->wd", (2.0 / b_real) * racc[...], a,
+                       preferred_element_type=jnp.float32)
         lr_t = lrs_ref[e, k, t]
-        X[:, dsl] = X[:, dsl] - (active * lr_t)[:, None] * g
+        if opt_kind == "sgd":
+            direction = lr_t * g
+        elif opt_kind in ("momentum", "nesterov"):
+            beta = hp_ref[e, 0]
+            m_old = M[:, dsl]
+            m_new = beta * m_old + g
+            M[:, dsl] = jnp.where(active[:, None] > 0, m_new, m_old)
+            d_vec = beta * m_new + g if opt_kind == "nesterov" else m_new
+            direction = lr_t * d_vec
+        else:  # adam
+            b1, b2, eps = hp_ref[e, 0], hp_ref[e, 1], hp_ref[e, 2]
+            omb1, omb2 = hp_ref[e, 3], hp_ref[e, 4]
+            m_old, v_old = M[:, dsl], V[:, dsl]
+            m_new = b1 * m_old + omb1 * g
+            v_new = b2 * v_old + omb2 * jnp.square(g)
+            M[:, dsl] = jnp.where(active[:, None] > 0, m_new, m_old)
+            V[:, dsl] = jnp.where(active[:, None] > 0, v_new, v_old)
+            cnt = cb_ref[e, k] + (t + 1).astype(jnp.float32)
+            c1 = 1.0 - b1 ** cnt
+            c2 = 1.0 - b2 ** cnt
+            direction = lr_t * (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        X[:, dsl] = (X[:, dsl].astype(jnp.float32)
+                     - active[:, None] * direction).astype(x_dtype)
 
         @pl.when(t == n_steps - 1)
         def _epilogue():
             lam = lam_ref[e, k].astype(jnp.float32)          # [W]
-            xc = jnp.sum(lam[:, None] * X[:, dsl], axis=0)   # [d_blk]
+            # f32 combine regardless of the stack dtype (the bf16 contract)
+            xc = jnp.einsum("wd,w->d", X[:, dsl].astype(jnp.float32), lam)
             if xhist_ref is not None:
-                xhist_ref[...] = xc.reshape(xhist_ref.shape)
+                xhist_ref[...] = xc.astype(x_dtype).reshape(xhist_ref.shape)
 
             @pl.when(k == n_rounds - 1)
             def _():
@@ -145,57 +258,131 @@ def _window_kernel(n_dblk: int, d_blk: int, b_real: int, keep_history: bool,
 
             # rebroadcast: every worker starts the next round from the
             # combined iterate — in VMEM, never through HBM
-            X[:, dsl] = jnp.broadcast_to(xc[None, :], (w_p, d_blk))
+            X[:, dsl] = _bcast(xc.astype(x_dtype))
+            if M is not None:
+                if carry_state:
+                    mc = jnp.einsum("wd,w->d", M[:, dsl], lam)
+                    M[:, dsl] = _bcast(mc)
+
+                    @pl.when(k == n_rounds - 1)
+                    def _():
+                        mfin_ref[...] = mc.reshape(mfin_ref.shape)
+                else:
+                    M[:, dsl] = jnp.zeros((w_p, d_blk), jnp.float32)
+            if V is not None:
+                if carry_state:
+                    vc = jnp.einsum("wd,w->d", V[:, dsl], lam)
+                    V[:, dsl] = _bcast(vc)
+
+                    @pl.when(k == n_rounds - 1)
+                    def _():
+                        vfin_ref[...] = vc.reshape(vfin_ref.shape)
+                else:
+                    V[:, dsl] = jnp.zeros((w_p, d_blk), jnp.float32)
+
+    if two_sweep:
+        phase = p // n_dblk
+
+        @pl.when(phase == 0)
+        def _():
+            _residual_sweep()
+
+        @pl.when(phase == 1)
+        def _():
+            _update_sweep()
+    else:
+        _residual_sweep()
+        _update_sweep()
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("keep_history", "batch_shared", "interpret",
-                     "scalar_prefetch", "d_block"),
+    static_argnames=("opt", "state_mode", "dtype", "keep_history",
+                     "batch_shared", "interpret", "scalar_prefetch",
+                     "d_block", "two_sweep"),
 )
 def fused_window(
-    a: jax.Array,     # [E, K, W, Q, B, D] f32 ([K, W, Q, B, D] batch_shared)
-    y: jax.Array,     # [E, K, W, Q, B]    f32 ([K, W, Q, B]    batch_shared)
+    a: jax.Array,     # [E, K, W, Q, B, D] ([K, W, Q, B, D] batch_shared)
+    y: jax.Array,     # [E, K, W, Q, B]    ([K, W, Q, B]    batch_shared)
     x0: jax.Array,    # [E, D]       f32 round-0 iterate per experiment
     q: jax.Array,     # [E, K, W]    int32 realized step counts
     lam: jax.Array,   # [E, K, W]    f32 combine weights
     lrs: jax.Array,   # [E, K, Q]    f32 per-(round, step) learning rates
+    hp: jax.Array | None = None,     # [E, 5] f32 (beta|b1, b2, eps, 1-b1, 1-b2)
+    cbase: jax.Array | None = None,  # [E, K] f32 Adam count bases
+    m0: jax.Array | None = None,     # [E, D] f32 window-start first moment
+    v0: jax.Array | None = None,     # [E, D] f32 window-start second moment
+    opt: str = "sgd",
+    state_mode: str = "combine",
+    dtype=jnp.float32,
     keep_history: bool = False,
     batch_shared: bool = False,
     interpret: bool = False,
     scalar_prefetch: bool = True,
     d_block: int | None = None,
+    two_sweep: bool = True,
 ):
     """K rounds x E experiments in one kernel.
 
-    Returns (x_fin [E, D], loss_sums [E, K, W]) — plus xhist [E, K, D]
-    (the per-round combined iterate) as a third element when
-    keep_history=True.  loss_sums[e, k, v] is the sum of worker v's ACTIVE
-    per-step mean-squared losses in round k (`fused_mean_losses` in
+    Returns (x_fin [E, D] f32, loss_sums [E, K, W] f32), then optionally
+    xhist [E, K, D] in `dtype` (keep_history=True), then optionally
+    m_fin [E, D] f32 (+ v_fin for Adam) when the optimizer is stateful and
+    state_mode='combine'.  loss_sums[e, k, v] is the sum of worker v's
+    ACTIVE per-step mean-squared losses in round k (`fused_mean_losses` in
     core/engine.py is the shared normalization to the local_sgd mean-loss
     convention).
 
-    Compiled-path padding: D -> x128 lanes, B -> x8 sublanes, W -> x8
-    (pad workers carry q = lam = 0, pad rows/lanes are zero, so padding
-    changes no result bit); the interpret path pads D only up to a
-    d_block multiple.  `d_block` must be a 128-multiple divisor of the
-    padded D on the compiled path (default: `pick_d_block`).
+    Compiled-path padding: D -> x128 lanes, B and W -> x8 sublanes (x16
+    for bf16 stacks — the bf16 tile is (16, 128)); pad workers carry
+    q = lam = 0, pad rows/lanes are zero, so padding changes no result
+    bit.  The interpret path pads D only up to a d_block multiple.
+    `d_block` must be a 128-multiple divisor of the padded D on the
+    compiled path (default: `pick_d_block`); `two_sweep=False` needs
+    n_dblk == 1.
     """
+    if opt not in OPT_KINDS:
+        raise ValueError(f"bad opt {opt!r}; one of {OPT_KINDS}")
+    if state_mode not in ("combine", "reset"):
+        raise ValueError(f"bad state_mode {state_mode!r}")
+    stateful = opt in _STATEFUL
+    adam = opt == "adam"
+    carry = stateful and state_mode == "combine"
+    if stateful and hp is None:
+        raise ValueError(f"opt={opt!r} needs the hp table")
+    if adam and cbase is None:
+        raise ValueError("opt='adam' needs cbase (see adam_count_base)")
+    x_dtype = jnp.dtype(dtype)
+    if x_dtype not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+        raise ValueError(f"dtype must be float32 or bfloat16, got {x_dtype}")
+
     n_exp, n_rounds, w, n_steps, b, d = (
         (x0.shape[0],) + a.shape if batch_shared else a.shape
     )
     lrs = jnp.broadcast_to(jnp.asarray(lrs, jnp.float32),
                            (n_exp, n_rounds, n_steps))
+    a = a.astype(x_dtype)
+    y = y.astype(x_dtype)
+    if carry:
+        m0 = jnp.zeros((n_exp, d), jnp.float32) if m0 is None \
+            else m0.astype(jnp.float32)
+    if carry and adam:
+        v0 = jnp.zeros((n_exp, d), jnp.float32) if v0 is None \
+            else v0.astype(jnp.float32)
     if interpret:
         wp, bp = w, b
         dp = d if d_block is None else _round_up(d, d_block)
     else:
-        wp, bp, dp = _round_up(w, 8), _round_up(b, 8), _round_up(d, 128)
+        sub = 16 if x_dtype == jnp.dtype(jnp.bfloat16) else 8
+        wp, bp, dp = _round_up(w, sub), _round_up(b, sub), _round_up(d, 128)
     d_blk = min(d_block or pick_d_block(dp), dp)
     dp = _round_up(dp, d_blk)  # ragged d_block: pad D up to a block multiple
     n_dblk = dp // d_blk
     if not interpret and d_blk % 128:
         raise ValueError(f"d_block must be a 128-multiple, got {d_blk}")
+    if not two_sweep and n_dblk != 1:
+        raise ValueError(
+            f"two_sweep=False needs a single D block; got n_dblk={n_dblk} "
+            f"(d_block={d_blk}, padded D={dp})")
     if (wp, bp, dp) != (w, b, d):
         pad_e = () if batch_shared else ((0, 0),)
         a = jnp.pad(a, (*pad_e, (0, 0), (0, wp - w), (0, 0), (0, bp - b),
@@ -204,9 +391,14 @@ def fused_window(
         x0 = jnp.pad(x0, ((0, 0), (0, dp - d)))
         q = jnp.pad(q, ((0, 0), (0, 0), (0, wp - w)))
         lam = jnp.pad(lam, ((0, 0), (0, 0), (0, wp - w)))
+        if carry:
+            m0 = jnp.pad(m0, ((0, 0), (0, dp - d)))
+        if carry and adam:
+            v0 = jnp.pad(v0, ((0, 0), (0, dp - d)))
 
-    kernel = functools.partial(_window_kernel, n_dblk, d_blk, b, keep_history)
-    grid = (n_exp, n_rounds, n_steps, 2 * n_dblk)
+    kernel = functools.partial(_window_kernel, n_dblk, d_blk, b, keep_history,
+                               opt, carry, two_sweep, x_dtype)
+    grid = (n_exp, n_rounds, n_steps, 2 * n_dblk if two_sweep else 1)
 
     if batch_shared:
         a_spec = pl.BlockSpec((1, wp, 1, bp, d_blk),
@@ -217,92 +409,186 @@ def fused_window(
                               lambda e, k, t, p, *_: (e, k, 0, t, 0, p % n_dblk))
         y_spec = pl.BlockSpec((1, 1, wp, 1, bp),
                               lambda e, k, t, p, *_: (e, k, 0, t, 0))
-    tensor_in_specs = [
-        pl.BlockSpec((1, d_blk), lambda e, k, t, p, *_: (e, p % n_dblk)),
-        a_spec,
-        y_spec,
-    ]
+    evec_spec = pl.BlockSpec((1, d_blk), lambda e, k, t, p, *_: (e, p % n_dblk))
+    tensor_in_specs = [evec_spec, a_spec, y_spec]
+    tensor_args = [x0, a, y]
+    if carry:
+        tensor_in_specs.append(evec_spec)
+        tensor_args.append(m0)
+    if carry and adam:
+        tensor_in_specs.append(evec_spec)
+        tensor_args.append(v0)
     out_shape = [
         jax.ShapeDtypeStruct((n_exp, dp), jnp.float32),
         jax.ShapeDtypeStruct((n_exp, n_rounds, wp), jnp.float32),
     ]
     out_specs = [
-        pl.BlockSpec((1, d_blk), lambda e, k, t, p, *_: (e, p % n_dblk)),
+        evec_spec,
         pl.BlockSpec((1, 1, wp), lambda e, k, t, p, *_: (e, k, 0)),
     ]
     if keep_history:
-        out_shape.append(
-            jax.ShapeDtypeStruct((n_exp, n_rounds, dp), jnp.float32))
+        out_shape.append(jax.ShapeDtypeStruct((n_exp, n_rounds, dp), x_dtype))
         out_specs.append(
             pl.BlockSpec((1, 1, d_blk), lambda e, k, t, p, *_: (e, k, p % n_dblk)))
+    if carry:
+        out_shape.append(jax.ShapeDtypeStruct((n_exp, dp), jnp.float32))
+        out_specs.append(evec_spec)
+    if carry and adam:
+        out_shape.append(jax.ShapeDtypeStruct((n_exp, dp), jnp.float32))
+        out_specs.append(evec_spec)
     scratch = [
-        pltpu.VMEM((wp, dp), jnp.float32),   # X: resident across all K rounds
+        pltpu.VMEM((wp, dp), x_dtype),       # X: resident across all K rounds
         pltpu.VMEM((wp, bp), jnp.float32),   # racc: per-step partial residual
     ]
+    if stateful:
+        scratch.append(pltpu.VMEM((wp, dp), jnp.float32))   # M (f32 always)
+    if adam:
+        scratch.append(pltpu.VMEM((wp, dp), jnp.float32))   # V
 
-    q32 = q.astype(jnp.int32)
-    lam32 = lam.astype(jnp.float32)
-    if not scalar_prefetch:
-        # interpret-safe fallback: the scalars become plain whole-array
-        # inputs; the shared index maps take (e, k, t, p, *scalar_refs) and
-        # *_ is simply empty here.
-        outs = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((n_exp, n_rounds, wp), lambda e, k, t, p: (0, 0, 0)),
-                pl.BlockSpec((n_exp, n_rounds, wp), lambda e, k, t, p: (0, 0, 0)),
-                pl.BlockSpec((n_exp, n_rounds, n_steps),
-                             lambda e, k, t, p: (0, 0, 0)),
-                *tensor_in_specs,
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=scratch,
-            interpret=interpret,
-        )(q32, lam32, lrs, x0, a, y)
-    else:
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=grid,
-            in_specs=tensor_in_specs,
-            out_specs=out_specs,
-            scratch_shapes=scratch,
-        )
-        outs = pl.pallas_call(
-            kernel, grid_spec=grid_spec, out_shape=out_shape,
-            interpret=interpret,
-        )(q32, lam32, lrs, x0, a, y)
+    scalar_args = [q.astype(jnp.int32), lam.astype(jnp.float32), lrs]
+    if stateful:
+        scalar_args.append(jnp.asarray(hp, jnp.float32))
+    if adam:
+        scalar_args.append(jnp.asarray(cbase, jnp.float32))
 
-    x_fin, loss_sums = outs[0][:, :d], outs[1][..., :w]
+    outs = scalar_grid_call(
+        kernel,
+        grid=grid,
+        scalar_args=scalar_args,
+        tensor_args=tensor_args,
+        tensor_in_specs=tensor_in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        scalar_prefetch=scalar_prefetch,
+        interpret=interpret,
+    )
+
+    res = [outs[0][:, :d], outs[1][..., :w]]
+    idx = 2
     if keep_history:
-        return x_fin, loss_sums, outs[2][..., :d]
-    return x_fin, loss_sums
+        res.append(outs[idx][..., :d])
+        idx += 1
+    if carry:
+        res.append(outs[idx][:, :d])
+        idx += 1
+    if carry and adam:
+        res.append(outs[idx][:, :d])
+        idx += 1
+    return tuple(res)
 
 
-def fused_window_ref(a, y, x0, q, lam, lrs, batch_shared: bool = False):
-    """Pure-jnp oracle: a scan of `fused_round_ref` rounds, vmapped over E.
+def fused_window_ref(a, y, x0, q, lam, lrs, batch_shared: bool = False,
+                     opt: str = "sgd", state_mode: str = "combine",
+                     dtype=jnp.float32, hp=None, m0=None, v0=None, cnt0=None):
+    """Pure-jnp oracle of the window kernel, vmapped over E.
 
-    Same signature/shapes as `fused_window` (keep_history is implicit:
-    the full history is always returned).  Returns
-    (x_fin [E, D], loss_sums [E, K, W], xhist [E, K, D]).
+    Same shapes/semantics as `fused_window` (keep_history is implicit: the
+    full history is always returned).  Returns
+    (x_fin [E, D] f32, loss_sums [E, K, W], xhist [E, K, D] in `dtype`);
+    stateful optimizers with state_mode='combine' append a state dict
+    {"m": [E, D], ("v": [E, D], "count": [E] fractional f32)} — the
+    window-end combined state the engine writes back to the opt arena.
+
+    The bf16 path emulates the kernel's mixed precision exactly: iterates
+    and batch tiles round to bf16, every contraction/accumulation and the
+    optimizer state stay f32.
     """
+    if opt not in OPT_KINDS:
+        raise ValueError(f"bad opt {opt!r}; one of {OPT_KINDS}")
+    stateful = opt in _STATEFUL
+    adam = opt == "adam"
+    carry = stateful and state_mode == "combine"
+    x_dt = jnp.dtype(dtype)
     n_exp = x0.shape[0]
+    n_rounds = a.shape[0] if batch_shared else a.shape[1]
     n_steps = a.shape[2 if batch_shared else 3]
+    b = a.shape[-2]
+    d = x0.shape[1]
     lrs = jnp.broadcast_to(jnp.asarray(lrs, jnp.float32),
-                           (n_exp, a.shape[0] if batch_shared else a.shape[1],
-                            n_steps))
+                           (n_exp, n_rounds, n_steps))
+    a = a.astype(x_dt)
+    y = y.astype(x_dt)
+    if stateful:
+        hp = jnp.broadcast_to(jnp.asarray(hp, jnp.float32), (n_exp, 5))
+    else:
+        hp = jnp.zeros((n_exp, 5), jnp.float32)
+    m0 = jnp.zeros((n_exp, d), jnp.float32) if m0 is None else m0
+    v0 = jnp.zeros((n_exp, d), jnp.float32) if v0 is None else v0
+    cnt0 = jnp.zeros((n_exp,), jnp.float32) if cnt0 is None else cnt0
 
-    def one_experiment(a_e, y_e, x0_e, q_e, lam_e, lrs_e):
-        def round_body(x, xs):
+    def one_experiment(a_e, y_e, x0_e, q_e, lam_e, lrs_e, hp_e, m0_e, v0_e, c0_e):
+        beta = b1 = hp_e[0]
+        b2, eps, omb1, omb2 = hp_e[1], hp_e[2], hp_e[3], hp_e[4]
+
+        def round_body(rcarry, xs):
+            x, m, v, cf = rcarry
             a_k, y_k, q_k, lam_k, lrs_k = xs
-            x_next, loss_sums = fused_round_ref(a_k, y_k, x, q_k, lam_k, lrs_k)
-            return x_next, (x_next, loss_sums)
+            cb = cf.astype(jnp.int32).astype(jnp.float32)
 
-        x_fin, (xhist, losses) = jax.lax.scan(
-            round_body, x0_e, (a_e, y_e, q_e, lam_e, lrs_e))
-        return x_fin, losses, xhist
+            def worker(a_v, y_v, q_v):
+                def body(wc, xs2):
+                    xv, mv, vv, loss_acc = wc
+                    a_t, y_t, t, lr_t = xs2
+                    act = (t < q_v).astype(jnp.float32)
+                    r = (jnp.einsum("bd,d->b", a_t, xv,
+                                    preferred_element_type=jnp.float32)
+                         - y_t.astype(jnp.float32))
+                    loss = jnp.sum(r * r) / b
+                    g = jnp.einsum("b,bd->d", (2.0 / b) * r, a_t,
+                                   preferred_element_type=jnp.float32)
+                    if opt == "sgd":
+                        direction = lr_t * g
+                    elif opt in ("momentum", "nesterov"):
+                        m_new = beta * mv + g
+                        d_vec = beta * m_new + g if opt == "nesterov" else m_new
+                        direction = lr_t * d_vec
+                        mv = jnp.where(act > 0, m_new, mv)
+                    else:
+                        m_new = b1 * mv + omb1 * g
+                        v_new = b2 * vv + omb2 * jnp.square(g)
+                        cnt = cb + (t + 1).astype(jnp.float32)
+                        c1 = 1.0 - b1 ** cnt
+                        c2 = 1.0 - b2 ** cnt
+                        direction = (lr_t * (m_new / c1)
+                                     / (jnp.sqrt(v_new / c2) + eps))
+                        mv = jnp.where(act > 0, m_new, mv)
+                        vv = jnp.where(act > 0, v_new, vv)
+                    xv = (xv.astype(jnp.float32) - act * direction).astype(x_dt)
+                    return (xv, mv, vv, loss_acc + act * loss), None
+
+                (x_fin, m_fin, v_fin, loss_sum), _ = jax.lax.scan(
+                    body, (x, m, v, jnp.zeros((), jnp.float32)),
+                    (a_v, y_v, jnp.arange(n_steps), lrs_k))
+                return x_fin, m_fin, v_fin, loss_sum
+
+            xs_w, ms_w, vs_w, losses = jax.vmap(worker)(a_k, y_k, q_k)
+            xc = jnp.einsum("wd,w->d", xs_w.astype(jnp.float32), lam_k)
+            if carry:
+                mc = jnp.einsum("wd,w->d", ms_w, lam_k)
+                vc = jnp.einsum("wd,w->d", vs_w, lam_k)
+                cf_next = jnp.einsum("w,w->", lam_k, cb + q_k.astype(jnp.float32))
+            else:
+                mc = jnp.zeros_like(m0_e)
+                vc = jnp.zeros_like(v0_e)
+                cf_next = jnp.zeros((), jnp.float32)
+            return (xc.astype(x_dt), mc, vc, cf_next), (xc, losses)
+
+        x0v = x0_e.astype(x_dt)
+        (x_last, m_fin, v_fin, cf_fin), (xhist, losses) = jax.lax.scan(
+            round_body, (x0v, m0_e, v0_e, c0_e),
+            (a_e, y_e, q_e, lam_e, lrs_e))
+        return xhist[-1], losses, xhist.astype(x_dt), m_fin, v_fin, cf_fin
 
     batch_ax = None if batch_shared else 0
-    return jax.vmap(one_experiment, in_axes=(batch_ax, batch_ax, 0, 0, 0, 0))(
-        a, y, x0, q, lam, lrs)
+    x_fin, losses, xhist, m_fin, v_fin, cf_fin = jax.vmap(
+        one_experiment,
+        in_axes=(batch_ax, batch_ax, 0, 0, 0, 0, 0, 0, 0, 0),
+    )(a, y, x0, q, lam, lrs, hp, m0, v0, cnt0)
+    if not carry:
+        return x_fin, losses, xhist
+    state = {"m": m_fin}
+    if adam:
+        state["v"] = v_fin
+        state["count"] = cf_fin
+    return x_fin, losses, xhist, state

@@ -8,10 +8,12 @@ weighted_combine kernel one flattened chunk at a time.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref  # noqa: F401  (oracles re-exported for tests)
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
@@ -21,6 +23,66 @@ from repro.kernels.moe_gemm import moe_gemm as _moe_gemm_pallas
 from repro.kernels.weighted_combine import weighted_combine as _combine_pallas
 
 PyTree = Any
+
+
+def _whole_array_map(nd: int):
+    """Index map that pins a whole-array block regardless of grid position."""
+    return lambda *_: (0,) * nd
+
+
+def scalar_grid_call(
+    kernel,
+    *,
+    grid: tuple,
+    scalar_args: Sequence[jax.Array],
+    tensor_args: Sequence[jax.Array],
+    tensor_in_specs: Sequence,
+    out_specs,
+    out_shape,
+    scratch_shapes,
+    scalar_prefetch: bool = True,
+    interpret: bool = False,
+):
+    """Dispatch a Pallas kernel whose leading operands are scalar tables.
+
+    The fused round/window kernels carry small control tables (q, lambda,
+    learning rates, optimizer hypers, count bases) that every grid step
+    reads.  On the compiled TPU path these ride SMEM via
+    `pltpu.PrefetchScalarGridSpec`; `scalar_prefetch=False` is the
+    interpret-safe fallback that passes the SAME kernel body the scalars
+    as plain whole-array inputs.  Both paths keep identical kernel
+    signatures: tensor/output index maps must accept `(*grid_idx, *_)` so
+    the trailing scalar refs the prefetch path appends are absorbed, and
+    the fallback's scalar BlockSpecs pin block (0, ...) everywhere.
+
+    This is the single home for the plumbing that was previously copied
+    between `fused_round.py` and `fused_window.py`.
+    """
+    scalar_args = tuple(scalar_args)
+    tensor_args = tuple(tensor_args)
+    if scalar_prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(scalar_args),
+            grid=grid,
+            in_specs=list(tensor_in_specs),
+            out_specs=out_specs,
+            scratch_shapes=scratch_shapes,
+        )
+        call = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)
+    else:
+        scalar_specs = [pl.BlockSpec(s.shape, _whole_array_map(s.ndim))
+                        for s in scalar_args]
+        call = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[*scalar_specs, *tensor_in_specs],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )
+    return call(*scalar_args, *tensor_args)
 
 
 def flash_attention(

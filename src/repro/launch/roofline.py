@@ -24,6 +24,8 @@ from typing import Optional
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s
 LINK_BW = 50e9  # bytes/s per ICI link
+VMEM_BYTES = 16 * 2**20  # per-core VMEM budget (scratch + pipeline buffers)
+GRID_STEP_OVERHEAD_S = 1e-6  # amortized sequencing cost per Pallas grid step
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -127,6 +129,16 @@ def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
         coll_bytes=float(sum(coll.values())),
         coll_by_kind=coll,
     )
+
+
+def kernel_time(rf: Roofline, grid_steps: int = 0,
+                step_overhead: float = GRID_STEP_OVERHEAD_S) -> float:
+    """Modeled kernel wall-clock: the roofline max plus a per-grid-step
+    sequencing term (Pallas pays block-index/DMA bookkeeping per grid
+    visit, which dominates for small tiles — the term the window
+    autotuner trades against VMEM footprint; see kernels/autotune.py)."""
+    return (max(rf.t_compute, rf.t_memory, rf.t_collective)
+            + grid_steps * step_overhead)
 
 
 def model_flops_per_round(n_params_active: int, tokens: int, kind: str) -> float:

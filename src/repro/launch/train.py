@@ -54,7 +54,8 @@ from repro.data.synthetic import synthetic_tokens
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import resolve_layout
 from repro.models import model as M
-from repro.optim import adam, clip_by_global_norm, chain, linear_warmup_cosine, sgd
+from repro.optim import (adam, clip_by_global_norm, chain,
+                         linear_warmup_cosine, momentum, sgd)
 from repro.sharding.specs import corpus_shardings, named, param_pspecs
 
 
@@ -85,7 +86,8 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--local-batch", type=int, default=4)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--optimizer", choices=["sgd", "adam"], default="adam")
+    ap.add_argument("--optimizer", choices=["sgd", "momentum", "adam"],
+                    default="adam")
     ap.add_argument("--weighting", choices=["anytime", "uniform"], default="anytime")
     ap.add_argument("--straggler", default="shifted_exp")
     ap.add_argument("--persistent-frac", type=float, default=0.0)
@@ -122,6 +124,8 @@ def main(argv=None):
     if args.optimizer == "adam":
         sched = linear_warmup_cosine(args.lr, 20, args.rounds * args.q_max)
         opt = chain(clip_by_global_norm(1.0), adam(sched))
+    elif args.optimizer == "momentum":
+        opt = momentum(args.lr, 0.9)
     else:
         opt = sgd(args.lr)
     opt_state = opt.init(params)

@@ -13,7 +13,7 @@ lambda-averages them (see core/anytime.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,13 @@ Schedule = Callable[[jax.Array], jax.Array]
 class Optimizer:
     init: Callable[[PyTree], PyTree]
     update: Callable[..., tuple[PyTree, PyTree]]  # (grads, state, params, step)
+    # Static self-description for kernel lowering (kernels/fused_window.py):
+    # {"kind": 'sgd'|'momentum'|'nesterov'|'adam', "lr": schedule, and the
+    # scalar hyperparameters of that kind}.  None means "opaque": the fused
+    # paths then fall back to the stateless linear-update probe and reject
+    # stateful states.  Values may be python floats OR traced scalars (the
+    # SweepEngine's per-experiment opt_factory hyper tables).
+    spec: Optional[dict] = None
 
 
 def _as_schedule(lr) -> Schedule:
@@ -45,7 +52,7 @@ def sgd(lr) -> Optimizer:
         lrv = sched(step)
         return jax.tree.map(lambda g: (-lrv * g).astype(g.dtype), grads), state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, spec={"kind": "sgd", "lr": sched})
 
 
 def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
@@ -63,7 +70,8 @@ def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
             upd = jax.tree.map(lambda m_: (-lrv * m_).astype(m_.dtype), m)
         return upd, {"m": m}
 
-    return Optimizer(init, update)
+    spec = {"kind": "nesterov" if nesterov else "momentum", "lr": sched, "beta": beta}
+    return Optimizer(init, update, spec=spec)
 
 
 def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
@@ -92,7 +100,8 @@ def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer
         upd = jax.tree.map(_upd, m, v, grads)
         return upd, {"m": m, "v": v, "count": count}
 
-    return Optimizer(init, update)
+    spec = {"kind": "adam", "lr": sched, "b1": b1, "b2": b2, "eps": eps}
+    return Optimizer(init, update, spec=spec)
 
 
 def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
@@ -120,10 +129,37 @@ def clip_by_global_norm(max_norm: float) -> Callable[[PyTree], PyTree]:
     return clip
 
 
-def chain(clip_fn: Callable[[PyTree], PyTree], opt: Optimizer) -> Optimizer:
-    """Compose a gradient transform (e.g. clipping) in front of an optimizer."""
+def chain(*steps) -> Optimizer:
+    """Compose gradient transforms and optimizers left-to-right.
+
+    Each step is either a pure gradient transform (callable pytree -> pytree,
+    e.g. `clip_by_global_norm(...)`) or an `Optimizer`; the output of each
+    step feeds the next. State is passed through for real: every member
+    optimizer keeps its own state pytree, stacked as a tuple in step order.
+    With a single member optimizer (the common `chain(clip_fn, opt)` shape)
+    the chain state IS that optimizer's state — existing checkpoints and
+    call sites see no wrapper.
+    """
+    if not steps:
+        raise ValueError("chain() needs at least one step")
+    opts = [s for s in steps if isinstance(s, Optimizer)]
+
+    def init(params):
+        states = tuple(o.init(params) for o in opts)
+        return states[0] if len(opts) == 1 else states
 
     def update(grads, state, params=None, step=0):
-        return opt.update(clip_fn(grads), state, params, step)
+        states = (state,) if len(opts) == 1 else tuple(state)
+        new_states = []
+        out = grads
+        i = 0
+        for s in steps:
+            if isinstance(s, Optimizer):
+                out, st = s.update(out, states[i], params, step)
+                new_states.append(st)
+                i += 1
+            else:
+                out = s(out)
+        return out, (new_states[0] if len(opts) == 1 else tuple(new_states))
 
-    return Optimizer(opt.init, update)
+    return Optimizer(init, update)

@@ -1,0 +1,146 @@
+"""Roofline-guided window autotuner (kernels/autotune): selection
+behavior, VMEM feasibility, and the persistent shape+backend-keyed cache
+(DESIGN.md §10)."""
+import json
+
+import pytest
+
+from repro.kernels.autotune import (
+    CACHE_ENV,
+    WindowConfig,
+    autotune_window,
+    cache_key,
+    cache_path,
+    candidate_configs,
+    search,
+    window_cost,
+)
+
+_SHAPE = dict(n_exp=2, n_rounds=4, n_workers=8, q_max=4, local_batch=8)
+
+
+# ---------------------------------------------------------------------------
+# cost model + selection
+# ---------------------------------------------------------------------------
+def test_small_d_prefers_single_wide_block():
+    """D that fits one block: single sweep, whole-D block (every extra grid
+    step is pure sequencing overhead at small D)."""
+    cfg = search(**_SHAPE, d=256, dtype="float32", opt="sgd")
+    assert cfg.d_block == 256
+    assert cfg.two_sweep is False
+
+
+def test_huge_d_is_vmem_constrained():
+    """D = 64k: a whole-D block would blow VMEM — the tuner must tile and
+    take the two-sweep path."""
+    cfg = search(**_SHAPE, d=65536, dtype="float32", opt="sgd")
+    assert cfg.two_sweep is True
+    _, vmem, ok = window_cost(**_SHAPE, d=65536, dtype="float32", opt="sgd",
+                              d_block=cfg.d_block, two_sweep=True)
+    assert ok, f"selected config infeasible ({vmem} bytes)"
+
+
+def test_bf16_halves_stack_footprint():
+    """The bf16 stack fits bigger blocks: at 16-aligned (W, B) — where the
+    bf16 sublane padding costs nothing extra — the VMEM footprint is
+    strictly below f32's."""
+    kw = dict(n_exp=2, n_rounds=4, n_workers=32, q_max=4, local_batch=16,
+              d=8192, opt="adam", d_block=1024, two_sweep=True)
+    _, v_f32, _ = window_cost(**kw, dtype="float32")
+    _, v_bf16, _ = window_cost(**kw, dtype="bfloat16")
+    assert v_bf16 < v_f32
+
+
+def test_stateful_opt_costs_vmem():
+    """Adam's two f32 [W, D] moments count against feasibility."""
+    kw = dict(**_SHAPE, d=4096, dtype="float32", d_block=512, two_sweep=True)
+    _, v_sgd, _ = window_cost(**kw, opt="sgd")
+    _, v_mom, _ = window_cost(**kw, opt="momentum")
+    _, v_adam, _ = window_cost(**kw, opt="adam")
+    assert v_sgd < v_mom < v_adam
+
+
+def test_candidates_gate_single_sweep():
+    """two_sweep=False only ever offered when the block covers padded D."""
+    for blk, two in candidate_configs(d=1000, dtype="float32"):
+        if not two:
+            assert blk >= 1024  # padded D = 1024
+
+
+def test_search_is_deterministic():
+    a = search(**_SHAPE, d=3000, dtype="bfloat16", opt="momentum")
+    b = search(**_SHAPE, d=3000, dtype="bfloat16", opt="momentum")
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+# ---------------------------------------------------------------------------
+def test_cache_key_spec():
+    k = cache_key(2, 4, 8, 4, 8, 3000, "bfloat16", "adam", "tpu")
+    assert k == "v1/tpu/E2.K4.W8.Q4.B8.D3000/bfloat16/adam"
+
+
+def test_cache_path_resolution(tmp_path, monkeypatch):
+    explicit = tmp_path / "explicit.json"
+    assert cache_path(str(explicit)) == explicit
+    monkeypatch.setenv(CACHE_ENV, str(tmp_path / "env.json"))
+    assert cache_path() == tmp_path / "env.json"
+    monkeypatch.delenv(CACHE_ENV)
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+    assert cache_path() == tmp_path / "xdg" / "repro" / "window_autotune.json"
+
+
+def test_cache_roundtrip(tmp_path, monkeypatch):
+    """First call searches and persists; the second is a pure cache hit —
+    and the cache never leaks across backends."""
+    monkeypatch.setenv(CACHE_ENV, str(tmp_path / "tune.json"))
+    cfg = autotune_window(**_SHAPE, d=512, dtype="float32", opt="momentum",
+                          backend="cpu")
+    data = json.loads((tmp_path / "tune.json").read_text())
+    [key] = data.keys()
+    assert "/cpu/" in key and data[key]["d_block"] == cfg.d_block
+    hit = autotune_window(**_SHAPE, d=512, dtype="float32", opt="momentum",
+                          backend="cpu")
+    assert hit == cfg
+    autotune_window(**_SHAPE, d=512, dtype="float32", opt="momentum",
+                    backend="tpu")
+    assert len(json.loads((tmp_path / "tune.json").read_text())) == 2
+
+
+def test_cache_corrupt_entry_research(tmp_path, monkeypatch):
+    """A stale/corrupt cache entry falls back to a fresh search (and a
+    corrupt FILE degrades to in-memory, never an error)."""
+    p = tmp_path / "tune.json"
+    monkeypatch.setenv(CACHE_ENV, str(p))
+    key = cache_key(**_SHAPE, d=512, dtype="float32", opt="sgd", backend="cpu")
+    p.write_text(json.dumps({key: {"d_block": "nonsense"}}))
+    cfg = autotune_window(**_SHAPE, d=512, dtype="float32", opt="sgd",
+                          backend="cpu")
+    assert isinstance(cfg, WindowConfig) and cfg.d_block % 128 == 0
+    p.write_text("{ not json")
+    cfg2 = autotune_window(**_SHAPE, d=512, dtype="float32", opt="sgd",
+                           backend="cpu")
+    assert cfg2 == cfg
+
+
+def test_refresh_overrides_cache(tmp_path, monkeypatch):
+    p = tmp_path / "tune.json"
+    monkeypatch.setenv(CACHE_ENV, str(p))
+    key = cache_key(**_SHAPE, d=512, dtype="float32", opt="sgd", backend="cpu")
+    p.write_text(json.dumps({key: {"d_block": 99999, "two_sweep": True}}))
+    stale = autotune_window(**_SHAPE, d=512, dtype="float32", opt="sgd",
+                            backend="cpu")
+    assert stale.d_block == 99999  # the (valid-shaped) poisoned entry wins
+    fresh = autotune_window(**_SHAPE, d=512, dtype="float32", opt="sgd",
+                            backend="cpu", refresh=True)
+    assert fresh.d_block != 99999
+    # refresh also REPAIRED the persisted entry
+    assert json.loads(p.read_text())[key]["d_block"] == fresh.d_block
+
+
+def test_bad_args_raise():
+    with pytest.raises(ValueError):
+        autotune_window(**_SHAPE, d=512, dtype="float16", backend="cpu")
+    with pytest.raises(ValueError):
+        autotune_window(**_SHAPE, d=512, opt="adamw", backend="cpu")

@@ -7,6 +7,8 @@ normalization, LR schedules advancing across rounds, D-tiling (including
 ragged padding), scalar-prefetch fallback, shared-vs-per-experiment batch
 streams, and the RoundEngine / SweepEngine drivers that put the
 experiment axis on the kernel grid (DESIGN.md §9)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,8 +24,9 @@ from repro.core.engine import (
 from repro.core.sweep import SweepEngine
 from repro.data.device import DeviceCorpus, gather_window_tiles
 from repro.data.linreg import make_linreg
-from repro.kernels.fused_window import fused_window, fused_window_ref, pick_d_block
-from repro.optim import sgd
+from repro.kernels.fused_window import (adam_count_base, fused_window,
+                                        fused_window_ref, pick_d_block)
+from repro.optim import adam, adamw, momentum, sgd
 
 E, K, W, QMAX, B, D = 3, 4, 6, 5, 4, 12
 
@@ -389,3 +392,283 @@ def test_sweep_window_hyper(lin, rng):
                         keep_history=True)
     np.testing.assert_allclose(np.asarray(out_w["arena"]),
                                np.asarray(out_u["arena"]), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel stateful optimizers (momentum / nesterov / adam)
+# ---------------------------------------------------------------------------
+def _hp_row(kind, beta=0.9, b1=0.9, b2=0.999, eps=1e-8):
+    if kind == "adam":
+        return jnp.asarray([[b1, b2, eps, 1.0 - b1, 1.0 - b2]] , jnp.float32
+                           ).repeat(E, 0)
+    return jnp.asarray([[beta, 0.0, 0.0, 1.0 - beta, 0.0]], jnp.float32
+                       ).repeat(E, 0)
+
+
+@pytest.mark.parametrize("kind", ["momentum", "nesterov", "adam"])
+@pytest.mark.parametrize("state_mode", ["combine", "reset"])
+def test_kernel_stateful_matches_ref(lin, rng, kind, state_mode):
+    """Stateful kernel == oracle for both round-boundary state semantics,
+    including the window-end combined state outputs in 'combine' mode."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    hp = _hp_row(kind)
+    kw = dict(opt=kind, state_mode=state_mode, hp=hp)
+    if kind == "adam":
+        cb = (adam_count_base(qv, lam)[0] if state_mode == "combine"
+              else jnp.zeros((E, K), jnp.float32))
+        kw_k = dict(kw, cbase=cb)
+    else:
+        kw_k = kw
+    ref = fused_window_ref(a, y, x0, qv, lam, lrs, **kw)
+    out = fused_window(a, y, x0, qv, lam, lrs, keep_history=True,
+                       interpret=True, **kw_k)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref[1]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[2]), np.asarray(ref[2]),
+                               rtol=1e-5, atol=1e-6)
+    if state_mode == "combine":
+        st = ref[3]
+        np.testing.assert_allclose(np.asarray(out[3]), np.asarray(st["m"]),
+                                   rtol=1e-5, atol=1e-6)
+        if kind == "adam":
+            np.testing.assert_allclose(np.asarray(out[4]),
+                                       np.asarray(st["v"]),
+                                       rtol=1e-5, atol=1e-6)
+    else:
+        assert len(out) == 3  # reset mode streams no state out
+
+
+def test_kernel_stateful_window_chaining(lin, rng):
+    """Two chained 'combine'-mode windows (state threaded via m0/v0/cnt0)
+    == one double-length window, bitwise in f32."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    hp = _hp_row("adam")
+    cb_full, cnt_fin = adam_count_base(qv, lam)
+    full = fused_window(a, y, x0, qv, lam, lrs, opt="adam", hp=hp,
+                        cbase=cb_full, interpret=True)
+    h = K // 2
+    cb1, cnt1 = adam_count_base(qv[:, :h], lam[:, :h])
+    o1 = fused_window(a[:, :h], y[:, :h], x0, qv[:, :h], lam[:, :h],
+                      lrs[:, :h], opt="adam", hp=hp, cbase=cb1,
+                      interpret=True)
+    cb2, _ = adam_count_base(qv[:, h:], lam[:, h:], cnt0=cnt1)
+    o2 = fused_window(a[:, h:], y[:, h:], o1[0], qv[:, h:], lam[:, h:],
+                      lrs[:, h:], opt="adam", hp=hp, cbase=cb2, m0=o1[2],
+                      v0=o1[3], interpret=True)
+    np.testing.assert_array_equal(np.asarray(o2[0]), np.asarray(full[0]))
+    np.testing.assert_array_equal(np.asarray(o2[2]), np.asarray(full[2]))
+    np.testing.assert_array_equal(np.asarray(o2[3]), np.asarray(full[3]))
+
+
+def test_kernel_single_sweep(lin, rng):
+    """two_sweep=False (one grid visit per step; n_dblk == 1) == two-sweep."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    hp = _hp_row("momentum")
+    two = fused_window(a, y, x0, qv, lam, lrs, opt="momentum", hp=hp,
+                       interpret=True)
+    one = fused_window(a, y, x0, qv, lam, lrs, opt="momentum", hp=hp,
+                       interpret=True, two_sweep=False)
+    np.testing.assert_array_equal(np.asarray(one[0]), np.asarray(two[0]))
+    np.testing.assert_array_equal(np.asarray(one[1]), np.asarray(two[1]))
+    with pytest.raises(ValueError):  # single sweep needs one D block
+        fused_window(a, y, x0, qv, lam, lrs, interpret=True, d_block=4,
+                     two_sweep=False)
+
+
+def test_kernel_bf16_matches_bf16_ref(lin, rng):
+    """bf16 kernel == the bf16-emulating oracle (f32 accumulate contract),
+    and the bf16 trajectory tracks f32 within the documented tolerance."""
+    a, y, x0, qv, lam, lrs = _window_inputs(lin, rng)
+    hp = _hp_row("momentum")
+    kw = dict(opt="momentum", hp=hp)
+    ref = fused_window_ref(a, y, x0, qv, lam, lrs, dtype=jnp.bfloat16, **kw)
+    out = fused_window(a, y, x0, qv, lam, lrs, dtype=jnp.bfloat16,
+                       keep_history=True, interpret=True, **kw)
+    # exact: the kernel and oracle round at identical points
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref[0]))
+    assert out[2].dtype == jnp.bfloat16
+    assert out[0].dtype == out[3].dtype == jnp.float32
+    f32 = fused_window(a, y, x0, qv, lam, lrs, keep_history=True,
+                       interpret=True, **kw)
+    # documented tolerance (DESIGN.md §9): bf16 mantissa ~ 8 bits
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(f32[0]),
+                               rtol=0.05, atol=0.05)
+
+
+def test_adam_count_base_recurrence():
+    """combine-then-truncate: cb_k = trunc(cf_k), cf' = sum lam (cb + q)."""
+    q = jnp.asarray([[[3, 1], [2, 2]]], jnp.int32)       # [1, 2, 2]
+    lam = jnp.asarray([[[0.75, 0.25], [0.5, 0.5]]], jnp.float32)
+    cb, cf = adam_count_base(q, lam)
+    # round 0: cb=0; cf = .75*3 + .25*1 = 2.5 -> round 1 cb = 2
+    np.testing.assert_allclose(np.asarray(cb), [[0.0, 2.0]])
+    np.testing.assert_allclose(np.asarray(cf), [0.5 * 4 + 0.5 * 4])
+    cb2, _ = adam_count_base(q, lam, cnt0=jnp.asarray([7.9], jnp.float32))
+    np.testing.assert_allclose(np.asarray(cb2)[:, 0], [7.0])
+
+
+# ---------------------------------------------------------------------------
+# RoundEngine window modes with stateful optimizers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["window_ref", "window_interpret"])
+@pytest.mark.parametrize("make_opt", [
+    lambda s: momentum(s, 0.9),
+    lambda s: momentum(s, 0.9, nesterov=True),
+    lambda s: adam(0.05),
+], ids=["momentum", "nesterov", "adam"])
+def test_engine_window_stateful_matches_unfused(lin, rng, mode, make_opt):
+    """Stateful window engine == unfused scan engine: BITWISE f32 iterate
+    parity and matching combined opt arenas, with an LR schedule advancing
+    across rounds and windows chaining through the opt arena."""
+    sched = lambda step: 0.02 / (1.0 + 0.1 * step.astype(jnp.float32))
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    opt_u, opt_w = make_opt(sched), make_opt(sched)
+    eng_u = RoundEngine(_loss, opt_u, W, QMAX, anytime_policy())
+    eng_w = RoundEngine(_loss, opt_w, W, QMAX, anytime_policy(), fused=mode)
+    st_u = eng_u.init_state(params, opt_u.init(params))
+    st_w = eng_w.init_state(params, opt_w.init(params))
+    st_u, out_u = eng_u.run(st_u, batches, q_mat, keep_history=True)
+    # two chained windows (state threads through the opt arena) == one scan
+    h = K // 2
+    st_w, out_w1 = eng_w.run(st_w, (batches[0][:h], batches[1][:h]),
+                             q_mat[:h], keep_history=True)
+    st_w, out_w2 = eng_w.run(st_w, (batches[0][h:], batches[1][h:]),
+                             q_mat[h:], keep_history=True)
+    np.testing.assert_array_equal(np.asarray(st_w.arena),
+                                  np.asarray(st_u.arena))
+    np.testing.assert_allclose(np.asarray(st_w.opt_arena),
+                               np.asarray(st_u.opt_arena), rtol=1e-6,
+                               atol=1e-7)
+    hist = np.concatenate([np.asarray(out_w1["arena"]),
+                           np.asarray(out_w2["arena"])])
+    np.testing.assert_allclose(hist, np.asarray(out_u["arena"]), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_engine_window_reset_mode(lin, rng):
+    """opt_state_mode='reset' zeroes moments at every round boundary: equal
+    to the oracle's reset semantics, and the engine's opt arena comes back
+    zeroed."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = rng.integers(1, QMAX + 1, size=(K, W))
+    opt = momentum(0.02, 0.9)
+    pol = anytime_policy()
+    pol = dataclasses.replace(pol, combine_opt_state=False)
+    eng = RoundEngine(_loss, opt, W, QMAX, pol, fused="window_interpret",
+                      opt_state_mode="reset")
+    st = eng.init_state(params, opt.init(params))
+    st, _ = eng.run(st, batches, q_mat)
+    assert np.all(np.asarray(st.opt_arena) == 0.0)
+    # oracle cross-check through the kernel-level API
+    qv = jnp.asarray(q_mat, jnp.int32)[None]
+    lam = (qv / jnp.maximum(jnp.sum(qv, -1, keepdims=True), 1)).astype(jnp.float32)
+    lrs = jnp.full((1, K, QMAX), 0.02, jnp.float32)
+    x_r, _, _ = fused_window_ref(
+        batches[0][None], batches[1][None], params["x"][None], qv, lam, lrs,
+        opt="momentum", state_mode="reset", hp=_hp_row("momentum")[:1])
+    np.testing.assert_array_equal(np.asarray(st.arena), np.asarray(x_r[0]))
+
+
+def test_engine_window_bf16(lin, rng):
+    """window_dtype='bfloat16' == the bf16-emulating oracle exactly, and
+    tracks the f32 engine within the documented tolerance."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    q_mat = rng.integers(0, QMAX + 1, size=(K, W))
+    def make(mode, dtype):
+        opt = momentum(0.02, 0.9)
+        eng = RoundEngine(_loss, opt, W, QMAX, anytime_policy(), fused=mode,
+                          window_dtype=dtype)
+        st = eng.init_state(params, opt.init(params))
+        return eng.run(st, batches, q_mat)
+    st_k, _ = make("window_interpret", "bfloat16")
+    st_r, _ = make("window_ref", "bfloat16")
+    st_f, _ = make("window_interpret", "float32")
+    np.testing.assert_array_equal(np.asarray(st_k.arena),
+                                  np.asarray(st_r.arena))
+    np.testing.assert_allclose(np.asarray(st_k.arena), np.asarray(st_f.arena),
+                               rtol=0.05, atol=0.05)
+
+
+def test_engine_window_stateful_validation(lin, rng):
+    """Kind/state contracts: stateful kinds need combine_opt_state (or
+    explicit 'reset'); opaque stateful optimizers are rejected; non-window
+    engines reject the window-only knobs."""
+    pol_nc = dataclasses.replace(anytime_policy(), combine_opt_state=False)
+    with pytest.raises(ValueError):  # combine semantics need the policy flag
+        RoundEngine(_loss, momentum(0.02, 0.9), W, QMAX, pol_nc,
+                    fused="window_ref")
+    with pytest.raises(ValueError):  # window-only knob on the scan engine
+        RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                    window_dtype="bfloat16")
+    with pytest.raises(ValueError):  # opaque stateful opt: no spec, state>0
+        eng = RoundEngine(_loss, adamw(0.02), W, QMAX, anytime_policy(),
+                          fused="window_ref")
+        eng.init_state(_params(rng), adamw(0.02).init(_params(rng)))
+    # per-round fused modes stay stateless-only
+    with pytest.raises(ValueError):
+        eng = RoundEngine(_loss, momentum(0.02, 0.9), W, QMAX,
+                          anytime_policy(), fused="interpret")
+        eng.init_state(_params(rng),
+                       momentum(0.02, 0.9).init(_params(rng)))
+
+
+def test_sweep_window_stateful_hyper(lin, rng):
+    """Per-experiment momentum hypers ride the kernel's hp table: a
+    (lr, beta) opt_factory sweep == a python loop of unfused engines."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(E, K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    betas = [0.5, 0.8, 0.95]
+    hyper = jnp.asarray(betas, jnp.float32)
+    factory = lambda h: momentum(0.02, h)
+    sw = SweepEngine(RoundEngine(_loss, momentum(0.02, 0.9), W, QMAX,
+                                 anytime_policy(), fused="window_interpret"),
+                     opt_factory=factory)
+    opt0 = momentum(0.02, 0.9)
+    st0 = sw.init_state(params, E, opt_state=opt0.init(params))
+    st, out = sw.run(st0, batches, qs, hyper=hyper, keep_history=True)
+    for e, beta in enumerate(betas):
+        opt_e = momentum(0.02, beta)
+        eng = RoundEngine(_loss, opt_e, W, QMAX, anytime_policy())
+        st_e = eng.init_state(params, opt_e.init(params))
+        st_e, out_e = eng.run(st_e, (batches[0][e], batches[1][e]), qs[e],
+                              keep_history=True)
+        np.testing.assert_allclose(np.asarray(st.arena[e]),
+                                   np.asarray(st_e.arena),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st.opt_arena[e]),
+                                   np.asarray(st_e.opt_arena),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out["arena"][e]),
+                                   np.asarray(out_e["arena"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_sweep_window_kind_mismatch_raises(lin, rng):
+    """opt_factory may sweep hyper VALUES, not the optimizer KIND — the
+    kernel's opt lowering is compiled structure."""
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(0, QMAX + 1, size=(E, K, W))
+    sw = SweepEngine(RoundEngine(_loss, sgd(0.02), W, QMAX, anytime_policy(),
+                                 fused="window_ref"),
+                     opt_factory=lambda h: momentum(0.02, h))
+    with pytest.raises(ValueError, match="kind"):
+        sw.run(sw.init_state(params, E), batches, qs,
+               hyper=jnp.asarray([0.5, 0.8, 0.9]), batch_axis=None)

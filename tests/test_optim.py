@@ -92,3 +92,85 @@ def test_adam_state_is_combinable():
     stacked = jax.tree.map(lambda a: jnp.stack([a, a]), s)
     merged = combine_pytrees(stacked, jnp.asarray([0.5, 0.5]))
     np.testing.assert_allclose(np.asarray(merged["m"]["w"]), np.asarray(s["m"]["w"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer.spec introspection + closed-form single steps (the contract the
+# window kernel's in-kernel lowering is pinned against)
+# ---------------------------------------------------------------------------
+def test_spec_kinds():
+    assert sgd(0.1).spec["kind"] == "sgd"
+    assert momentum(0.1, 0.8).spec["kind"] == "momentum"
+    assert momentum(0.1, 0.8, nesterov=True).spec["kind"] == "nesterov"
+    a = adam(0.1, b1=0.85, b2=0.95, eps=1e-7).spec
+    assert (a["kind"], a["b1"], a["b2"], a["eps"]) == ("adam", 0.85, 0.95, 1e-7)
+    # the spec lr IS the schedule: sgd(callable) exposes it verbatim
+    sched = lambda step: 0.5 * jnp.ones(())
+    assert float(sgd(sched).spec["lr"](7)) == 0.5
+    # opaque optimizers advertise nothing
+    assert adamw(0.1).spec is None
+    assert chain(clip_by_global_norm(1.0), sgd(0.1)).spec is None
+
+
+def test_momentum_closed_form():
+    """m' = beta*m + g; update = -lr*m (heavy ball), -lr*(beta*m' + g) (nesterov)."""
+    g = {"x": jnp.asarray([1.0, -2.0])}
+    beta, lr = 0.9, 0.1
+    opt = momentum(lr, beta)
+    st = {"m": {"x": jnp.asarray([0.5, 0.5])}}
+    upd, st2 = opt.update(g, st, None, 0)
+    m_new = beta * np.asarray([0.5, 0.5]) + np.asarray([1.0, -2.0])
+    np.testing.assert_allclose(np.asarray(st2["m"]["x"]), m_new, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(upd["x"]), -lr * m_new, rtol=1e-6)
+    nest = momentum(lr, beta, nesterov=True)
+    upd_n, _ = nest.update(g, st, None, 0)
+    np.testing.assert_allclose(
+        np.asarray(upd_n["x"]), -lr * (beta * m_new + np.asarray([1.0, -2.0])),
+        rtol=1e-6)
+
+
+def test_adam_closed_form():
+    g = {"x": jnp.asarray([2.0])}
+    lr, b1, b2, eps = 0.1, 0.9, 0.999, 1e-8
+    opt = adam(lr, b1, b2, eps)
+    st = opt.init({"x": jnp.zeros(1)})
+    upd, st2 = opt.update(g, st, None, 0)
+    m = (1 - b1) * 2.0
+    v = (1 - b2) * 4.0
+    np.testing.assert_allclose(np.asarray(st2["m"]["x"]), [m], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st2["v"]["x"]), [v], rtol=1e-6)
+    assert int(st2["count"]) == 1
+    mhat, vhat = m / (1 - b1), v / (1 - b2)
+    np.testing.assert_allclose(
+        np.asarray(upd["x"]), [-lr * mhat / (np.sqrt(vhat) + eps)], rtol=1e-5)
+
+
+def test_chain_variadic_state_passthrough():
+    """Every member optimizer of a chain keeps its own REAL state pytree."""
+    lr = 0.1
+    opt = chain(clip_by_global_norm(100.0), momentum(lr, 0.9),
+                clip_by_global_norm(100.0), adam(lr))
+    p = {"x": jnp.ones(2)}
+    st = opt.init(p)
+    assert isinstance(st, tuple) and len(st) == 2
+    assert set(st[0]) == {"m"} and set(st[1]) == {"m", "v", "count"}
+    g = {"x": jnp.asarray([1.0, -1.0])}
+    upd, st2 = opt.update(g, st, p, 0)
+    # momentum state advanced from the raw grads; adam from momentum's output
+    np.testing.assert_allclose(np.asarray(st2[0]["m"]["x"]), [1.0, -1.0],
+                               rtol=1e-6)
+    assert int(st2[1]["count"]) == 1
+    # chaining twice keeps feeding each member its own state
+    _, st3 = opt.update(g, st2, p, 1)
+    np.testing.assert_allclose(np.asarray(st3[0]["m"]["x"]), [1.9, -1.9],
+                               rtol=1e-6)
+    assert int(st3[1]["count"]) == 2
+
+
+def test_chain_single_optimizer_unwrapped_state():
+    """chain(clip, opt) state IS opt's state (checkpoint back-compat)."""
+    opt = chain(clip_by_global_norm(1.0), momentum(0.1, 0.9))
+    st = opt.init({"x": jnp.ones(2)})
+    assert isinstance(st, dict) and set(st) == {"m"}
+    _, st2 = opt.update({"x": jnp.ones(2)}, st, None, 0)
+    assert isinstance(st2, dict) and set(st2) == {"m"}

@@ -6,12 +6,13 @@ exactly (window-partition invariance, DESIGN.md §7/§8)."""
 import json
 
 import numpy as np
+import pytest
 
 from repro.launch.train import main
 
 _BASE = ["--arch", "qwen2-0.5b", "--reduced", "--workers", "4", "--q-max", "2",
          "--seq-len", "32", "--local-batch", "2", "--n-seqs", "128",
-         "--lr", "3e-3", "--optimizer", "sgd", "--log-every", "100"]
+         "--lr", "3e-3", "--log-every", "100"]
 
 
 def _losses(path):
@@ -19,18 +20,23 @@ def _losses(path):
         return {r["round"]: r["loss"] for r in map(json.loads, f)}
 
 
-def test_killed_run_resumes_bit_identical(tmp_path):
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum"])
+def test_killed_run_resumes_bit_identical(tmp_path, optimizer):
+    """Stateless AND stateful resume: the momentum case pins that the
+    optimizer moments round-trip through the checkpoint's opt arena — an
+    f32 trajectory that continues bit-identically mid-window."""
+    base = _BASE + ["--optimizer", optimizer]
     full_dir, part_dir = tmp_path / "full", tmp_path / "part"
     m_full, m_part = tmp_path / "full.jsonl", tmp_path / "part.jsonl"
 
     # reference: 8 uninterrupted rounds
-    main(_BASE + ["--rounds", "8", "--checkpoint-dir", str(full_dir),
-                  "--metrics-file", str(m_full)])
+    main(base + ["--rounds", "8", "--checkpoint-dir", str(full_dir),
+                 "--metrics-file", str(m_full)])
     # "killed" run: stops after 4 rounds (checkpoint saved at round 4) ...
-    main(_BASE + ["--rounds", "4", "--checkpoint-dir", str(part_dir)])
+    main(base + ["--rounds", "4", "--checkpoint-dir", str(part_dir)])
     # ... then resumes to the full budget
-    loss = main(_BASE + ["--rounds", "8", "--checkpoint-dir", str(part_dir),
-                         "--resume", "--metrics-file", str(m_part)])
+    loss = main(base + ["--rounds", "8", "--checkpoint-dir", str(part_dir),
+                        "--resume", "--metrics-file", str(m_part)])
     assert np.isfinite(loss)
 
     full, part = _losses(m_full), _losses(m_part)
@@ -42,6 +48,7 @@ def test_killed_run_resumes_bit_identical(tmp_path):
 def test_resume_with_no_checkpoint_starts_fresh(tmp_path):
     d = tmp_path / "empty"
     m = tmp_path / "m.jsonl"
-    main(_BASE + ["--rounds", "2", "--checkpoint-dir", str(d), "--resume",
+    main(_BASE + ["--optimizer", "sgd", "--rounds", "2",
+                  "--checkpoint-dir", str(d), "--resume",
                   "--metrics-file", str(m)])
     assert sorted(_losses(m)) == [0, 1]
