@@ -15,6 +15,7 @@
   fused_window  whole-window kernel vs per-round fused (BENCH_fused_window.json)
   window_opt  autotuned bf16 stateful-optimizer window (BENCH_window_opt.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
+  runtime  real multi-process fleet vs simulated oracle (BENCH_runtime.json)
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
 figure's headline number where a wall-time makes no sense).  With
@@ -61,6 +62,7 @@ def main() -> None:
         kernel_bench,
         lm_ablation,
         roofline_bench,
+        runtime_bench,
         sweep_bench,
         tree_bench,
         variance_decay,
@@ -83,6 +85,7 @@ def main() -> None:
         "fused_window": fused_window_bench.run,
         "window_opt": window_opt_bench.run,
         "roofline": roofline_bench.run,
+        "runtime": runtime_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -2,14 +2,25 @@
 
 Format: a single .ckpt file — msgpack map {treedef: str, leaves: [...]}
 where each leaf is {dtype, shape, data(bytes)}.  bfloat16 round-trips via a
-uint16 view.  Atomic writes (tmp + rename); a step-indexed manager keeps
-the last k checkpoints, mirroring production trainer expectations.
+uint16 view.  Atomic writes (unique tmp + fsync + os.replace, so a `.ckpt`
+either is a complete previous save or a complete new one — never a torn
+write); a step-indexed manager keeps the last k checkpoints, mirroring
+production trainer expectations.
+
+Crash tolerance: a process killed MID-SAVE (exactly what the runtime's
+fault harness does to workers) leaves a `*.tmp` partial and, in the worst
+pre-replace-crash interleavings on some filesystems, a truncated newest
+`.ckpt`.  `CheckpointManager` therefore sweeps stale tmp files on
+construction, and `restore(step=None)` falls back to the newest READABLE
+checkpoint with a warning instead of crashing on the corrupt one —
+restoring a slightly older step is recovery; raising is an outage.
 """
 from __future__ import annotations
 
 
 import os
 import pathlib
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -17,6 +28,12 @@ import msgpack
 import numpy as np
 
 PyTree = Any
+
+# everything a truncated/garbled file can throw out of load_pytree:
+# msgpack unpack errors subclass ValueError, frombuffer size mismatches are
+# ValueError, malformed payload maps raise KeyError/TypeError, and a
+# vanished file is OSError
+_CORRUPT_ERRORS = (OSError, ValueError, KeyError, TypeError)
 
 
 def _to_numpy(leaf) -> np.ndarray:
@@ -48,10 +65,17 @@ def save_pytree(path: str | pathlib.Path, tree: PyTree) -> None:
         "paths": [jax.tree_util.keystr(p) for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]],
         "leaves": [_pack_leaf(_to_numpy(l)) for l in leaves],
     }
-    tmp = path.with_suffix(".tmp")
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, path)
+    # pid-unique tmp name: two writers racing on the same step never tear
+    # each other's partial, and a crash leaves an identifiable orphan
+    tmp = path.with_name(f"{path.name}.{os.getpid()}.tmp")
+    try:
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic: readers see old-complete or new-complete
+    finally:
+        tmp.unlink(missing_ok=True)
 
 
 def load_pytree(path: str | pathlib.Path, like: PyTree) -> PyTree:
@@ -76,6 +100,10 @@ class CheckpointManager:
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        # sweep orphaned partials from writers that died mid-save; anything
+        # still `.tmp` by construction time lost its race and is garbage
+        for stale in self.dir.glob("*.tmp"):
+            stale.unlink(missing_ok=True)
 
     def _path(self, step: int) -> pathlib.Path:
         return self.dir / f"step_{step:08d}.ckpt"
@@ -95,7 +123,25 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, like: PyTree, step: Optional[int] = None) -> tuple[PyTree, int]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        """Restore `step` (explicit: corrupt file raises — the caller asked
+        for THAT step) or, with step=None, the newest READABLE checkpoint:
+        a truncated/corrupt newest file — the state a killed writer leaves
+        behind — is skipped with a warning and the next-older one loads."""
+        if step is not None:
+            return load_pytree(self._path(step), like), step
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        return load_pytree(self._path(step), like), step
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return load_pytree(self._path(s), like), s
+            except _CORRUPT_ERRORS as e:
+                last_err = e
+                warnings.warn(
+                    f"skipping unreadable checkpoint {self._path(s).name} "
+                    f"({type(e).__name__}: {e}); falling back to an older step",
+                    RuntimeWarning, stacklevel=2)
+        raise FileNotFoundError(
+            f"no readable checkpoint in {self.dir} "
+            f"({len(steps)} candidates, newest error: {last_err})")

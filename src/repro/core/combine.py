@@ -39,10 +39,17 @@ def anytime_lambdas(q: jax.Array) -> jax.Array:
 
 
 def uniform_lambdas(mask: jax.Array) -> jax.Array:
-    """Classical Sync-SGD weights: 1/|chi| on received workers (mask==True)."""
+    """Classical Sync-SGD weights: 1/|chi| on received workers (mask==True).
+
+    All-false mask (nobody reported — the all-straggle round) falls back
+    to uniform 1/W like `anytime_lambdas`: the combine then averages W
+    identical round-start iterates — the x0-rebroadcast identity — instead
+    of scaling the parameters to zero.
+    """
     m = mask.astype(jnp.float32)
-    cnt = jnp.maximum(jnp.sum(m), 1.0)
-    return m / cnt
+    cnt = jnp.sum(m)
+    n = m.shape[0]
+    return jnp.where(cnt > 0, m / jnp.maximum(cnt, 1.0), jnp.ones_like(m) / n)
 
 
 def generalized_mixing_lambda(q_total: jax.Array, q_bar_v: jax.Array) -> jax.Array:
@@ -80,12 +87,17 @@ def combine_mean_axis(worker_params: PyTree, q: jax.Array, axis_name: str | tupl
     parameter vector, identical on all workers:
 
         x = psum(q_v * x_v) / psum(q_v)
+
+    The all-straggle round (psum(q) == 0) degrades to pmean(x_v) — every
+    replica holds the identical round-start iterate then, so the combine
+    is the x0-rebroadcast identity rather than 0/1 = zeroed parameters.
     """
     qf = q.astype(jnp.float32)
     total = jax.lax.psum(qf, axis_name)
 
     def _one(leaf: jax.Array) -> jax.Array:
         num = jax.lax.psum((qf.astype(leaf.dtype)) * leaf, axis_name)
-        return num / jnp.maximum(total, 1.0).astype(leaf.dtype)
+        weighted = num / jnp.maximum(total, 1.0).astype(leaf.dtype)
+        return jnp.where(total > 0, weighted, jax.lax.pmean(leaf, axis_name))
 
     return jax.tree.map(_one, worker_params)

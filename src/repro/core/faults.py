@@ -1,0 +1,190 @@
+"""Deterministic fault injection for the real multi-process runtime.
+
+The paper's robustness story is about what the MASTER survives: workers
+that die (persistent stragglers), workers that stall past the deadline,
+and reports that never arrive (Algorithm 1 l.12-14 treats all of them as
+q_v = 0).  The simulated path injects these through the StragglerModel's
+q-tensors; the real runtime (core/runtime.py) needs them as *events on
+real processes*.  This module is the shared schedule language:
+
+  kill      the worker process exits hard (os._exit) at round start —
+            the paper's node failure / permanent unavailability
+  hang      the worker sleeps `arg` seconds at round start without
+            heartbeating — a frozen process the master must not wait on
+  slow      every local step costs an extra `arg` seconds this round —
+            a contended machine; the deadline then binds at a small q_v
+            (arg > deadline_s forces q_v = 0: the all-straggle round)
+  drop      the worker completes the round but never sends its report —
+            a lost message; the master's retry window must expire cleanly
+  delay     the report is sent `arg` seconds late — exercises the
+            master's bounded retry/backoff instead of its give-up path
+
+Schedules are DETERMINISTIC: an explicit grammar (`FaultSpec.parse`)
+round-trips through `str()`, and `FaultSpec.seeded` derives a schedule
+from an integer seed so a fault-matrix benchmark is reproducible
+bit-for-bit.  The grammar (one event per comma-separated token):
+
+    <kind>@<round>:<worker>[:<arg>]
+
+    kill@3:1            worker 1 dies at round 3
+    hang@5:0:2.5        worker 0 hangs 2.5 s at round 5
+    slow@2:2:0.04       worker 2 pays +40 ms per step in round 2
+    drop@7:1            worker 1's round-7 report is lost
+    delay@9:0:0.8       worker 0's round-9 report arrives 0.8 s late
+
+Workers are addressed by their runtime worker id (the admission-order id
+the master assigns), so a schedule stays meaningful under elastic
+membership: an event for an id that has left the fleet is simply never
+delivered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+KINDS = ("kill", "hang", "slow", "drop", "delay")
+# kinds whose grammar carries a float argument (seconds)
+_ARG_KINDS = ("hang", "slow", "delay")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One scheduled fault: `kind` hits `worker` at global round `round`."""
+
+    round: int
+    worker: int
+    kind: str
+    arg: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} (know {KINDS})")
+        if self.round < 0 or self.worker < 0:
+            raise ValueError(f"round/worker must be >= 0: {self}")
+        if self.arg < 0:
+            raise ValueError(f"fault arg must be >= 0: {self}")
+
+    def token(self) -> str:
+        base = f"{self.kind}@{self.round}:{self.worker}"
+        return f"{base}:{self.arg:g}" if self.kind in _ARG_KINDS else base
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """An immutable, deterministic schedule of FaultEvents."""
+
+    events: tuple[FaultEvent, ...] = ()
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def parse(cls, text: Optional[str]) -> "FaultSpec":
+        """Parse the `--fault-spec` grammar (None/'' -> empty schedule)."""
+        if not text or not text.strip():
+            return cls(())
+        events = []
+        for token in text.split(","):
+            token = token.strip()
+            if not token:
+                continue
+            try:
+                kind, rest = token.split("@", 1)
+                parts = rest.split(":")
+                rnd, worker = int(parts[0]), int(parts[1])
+                arg = float(parts[2]) if len(parts) > 2 else 0.0
+            except (ValueError, IndexError) as e:
+                raise ValueError(
+                    f"bad fault token {token!r} (want kind@round:worker[:arg])"
+                ) from e
+            if kind in _ARG_KINDS and len(parts) < 3:
+                raise ValueError(f"fault kind {kind!r} needs an :arg seconds field "
+                                 f"in token {token!r}")
+            events.append(FaultEvent(rnd, worker, kind, arg))
+        return cls(tuple(sorted(events)))
+
+    @classmethod
+    def seeded(
+        cls,
+        seed: int,
+        n_rounds: int,
+        n_workers: int,
+        p_kill: float = 0.0,
+        p_hang: float = 0.0,
+        p_slow: float = 0.0,
+        p_drop: float = 0.0,
+        p_delay: float = 0.0,
+        hang_s: float = 1.0,
+        slow_s: float = 0.05,
+        delay_s: float = 0.3,
+    ) -> "FaultSpec":
+        """A random-but-reproducible schedule: each (round, worker) cell
+        draws at most one fault with the given per-kind probabilities.
+        A killed worker draws no further events (it is gone)."""
+        if n_rounds < 1 or n_workers < 1:
+            raise ValueError("seeded schedule needs n_rounds, n_workers >= 1")
+        probs = {"kill": p_kill, "hang": p_hang, "slow": p_slow,
+                 "drop": p_drop, "delay": p_delay}
+        for k, p in probs.items():
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"p_{k} must be in [0, 1], got {p}")
+        args = {"hang": hang_s, "slow": slow_s, "delay": delay_s}
+        rng = np.random.default_rng(seed)
+        events, killed = [], set()
+        for r in range(n_rounds):
+            for w in range(n_workers):
+                # one uniform draw per cell regardless of membership, so the
+                # schedule for worker w does not depend on who else died
+                u = rng.random()
+                if w in killed:
+                    continue
+                acc = 0.0
+                for kind in KINDS:
+                    acc += probs[kind]
+                    if u < acc:
+                        events.append(FaultEvent(r, w, kind, args.get(kind, 0.0)))
+                        if kind == "kill":
+                            killed.add(w)
+                        break
+        return cls(tuple(sorted(events)))
+
+    # -- views ---------------------------------------------------------------
+    def __str__(self) -> str:
+        return ",".join(e.token() for e in self.events)
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def for_worker(self, worker: int) -> dict[int, list[tuple[str, float]]]:
+        """{round: [(kind, arg), ...]} — the slice shipped in a worker's
+        welcome message (plain containers: travels over the connection
+        without importing this module's classes on the other side)."""
+        out: dict[int, list[tuple[str, float]]] = {}
+        for e in self.events:
+            if e.worker == worker:
+                out.setdefault(e.round, []).append((e.kind, e.arg))
+        return out
+
+    def rounds_hit(self) -> dict[str, list[int]]:
+        """{kind: sorted rounds where it fires} — benchmark labeling."""
+        out: dict[str, list[int]] = {}
+        for e in self.events:
+            out.setdefault(e.kind, []).append(e.round)
+        return {k: sorted(v) for k, v in out.items()}
+
+    def merged(self, other: "FaultSpec") -> "FaultSpec":
+        return FaultSpec(tuple(sorted(self.events + other.events)))
+
+
+def matrix_spec(rounds: Iterable[int], workers: Iterable[int],
+                kinds: Iterable[str], **kind_args: float) -> FaultSpec:
+    """Zip rounds x workers x kinds into one schedule (benchmark helper:
+    `matrix_spec([3, 6, 9], [0, 1, 2], ['kill', 'hang', 'drop'])` puts one
+    fault kind at one seeded round on one worker each)."""
+    defaults = {"hang": 1.0, "slow": 0.05, "delay": 0.3}
+    defaults.update(kind_args)
+    events = [
+        FaultEvent(r, w, k, defaults.get(k, 0.0))
+        for r, w, k in zip(rounds, workers, kinds)
+    ]
+    return FaultSpec(tuple(sorted(events)))

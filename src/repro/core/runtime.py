@@ -1,0 +1,803 @@
+"""Real multi-process anytime training runtime (DESIGN.md §11).
+
+Everything before this module *simulates* the paper's mechanism: a
+StragglerModel samples q-tensors and the RoundEngine replays them on one
+host.  Here the mechanism is real: W worker PROCESSES each run local SGD
+against a wall-clock deadline T (Algorithm 2 verbatim — work until T
+expires), report their achieved q_v and iterate, and the master combines
+whatever arrived with Theorem-3 lambda weights computed from the
+*observed* q-vector.  The simulated path stays the oracle: every worker
+step IS the RoundEngine round body at W = 1, q_max = 1, and
+`replay_oracle` re-runs an observed window through the engine to check
+the real fleet against the single-host result.
+
+Robust by construction — the master NEVER blocks unboundedly:
+
+  * every receive is poll/wait with a timeout; the per-round wait is
+    bounded by deadline + grace + the (finite) retry/backoff budget
+  * sends go through a per-worker writer thread, so a hung worker whose
+    socket buffer fills cannot stall the round loop
+  * a worker that misses the deadline window entirely degrades to
+    q_v = 0 — the paper's combine already tolerates this (lambda
+    renormalizes over survivors; an all-zero round is the x0-rebroadcast
+    identity) — and is evicted only after `evict_after` consecutive
+    silent rounds
+  * worker death (EOF, dead process) removes the member at the round
+    boundary; membership changes re-shard the Table-I assignment by
+    building a fresh epoch-seeded index planner
+  * elastic membership: processes may join mid-run (master-scheduled
+    spawns, or externally via `python -m repro.launch.worker --address`)
+    and leave gracefully; rejoin replay leans on the window-partition
+    invariant per-worker index streams (DESIGN.md §7)
+  * crash recovery: the master checkpoints (x, opt, round, epoch)
+    through CheckpointManager's atomic writes; --resume restores the
+    newest *readable* checkpoint (a truncated file from a killed process
+    is skipped with a warning) and restarts as a new membership epoch
+
+Fault injection (core/faults.py) is shipped to each worker in its welcome
+message, so kill / hang / slow / drop / delay fire deterministically at
+scheduled rounds inside the worker loop — the master is never told; it
+must survive on protocol alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import tempfile
+import threading
+import time
+import warnings
+from multiprocessing import connection as mpc
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import arena as AR
+from repro.core.combine import anytime_lambdas
+from repro.core.engine import EngineState, RoundEngine, anytime_policy
+from repro.core.faults import FaultSpec
+from repro.data.pipeline import membership_planner
+from repro.optim import adam, momentum, sgd
+
+PyTree = Any
+
+PROTOCOL_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Workload / optimizer builders (shared by master and worker processes)
+# ---------------------------------------------------------------------------
+def build_opt(spec: dict):
+    """Optimizer from a picklable spec dict: {"kind", "lr", ...}."""
+    kind = spec.get("kind", "sgd")
+    lr = spec.get("lr", 1e-2)
+    if kind == "sgd":
+        return sgd(lr)
+    if kind == "momentum":
+        return momentum(lr, spec.get("beta", 0.9))
+    if kind == "adam":
+        return adam(lr, spec.get("b1", 0.9), spec.get("b2", 0.999),
+                    spec.get("eps", 1e-8))
+    raise ValueError(f"unknown optimizer kind {kind!r}")
+
+
+def build_workload(spec: dict, arrays: dict[str, np.ndarray]):
+    """(loss_fn, params_template) from a picklable workload spec.
+
+    'linreg' — the paper's Sec.-IV regression over {"a": [m, d], "y": [m]}
+    'lm'     — token LM over TokenBatcher arrays ({"tokens", "labels",
+               "loss_mask"}); params come from the config named in the
+               spec with a shared seed, so master and workers derive the
+               SAME pytree structure (the arena spec) independently.
+    """
+    kind = spec["workload"]
+    if kind == "linreg":
+        d = arrays["a"].shape[1]
+
+        def loss_fn(p, mb):
+            r = mb["a"] @ p["x"] - mb["y"]
+            return jnp.mean(r * r)
+
+        return loss_fn, {"x": jnp.zeros((d,), jnp.float32)}
+    if kind == "lm":
+        from repro.configs import get_config
+        from repro.models import model as M
+
+        cfg = get_config(spec["arch"])
+        if spec.get("reduced", True):
+            cfg = cfg.reduced()
+        template = M.init(jax.random.PRNGKey(spec.get("params_seed", 0)), cfg)
+        return (lambda p, mb: M.loss_fn(p, cfg, mb)), template
+    raise ValueError(f"unknown workload {kind!r}")
+
+
+def make_worker_step(spec: dict, arrays: dict[str, np.ndarray]):
+    """(engine, x0_vec, opt0_vec, step_fn) — the worker's compute stack.
+
+    `step_fn(arena, opt_arena, rstep, mb)` runs EXACTLY one engine round
+    at W = 1, q = [1]: the same `_state_round` body the simulated driver
+    scans, so a real worker's step-t arithmetic is the oracle's step-t
+    arithmetic (float-tolerance: the two jits may fuse differently).
+    rstep is the GLOBAL step counter (max_local_steps = 1), so LR
+    schedules advance exactly as the engine's step0 = r * q_max rule.
+    """
+    loss_fn, template = build_workload(spec, arrays)
+    opt = build_opt(spec["opt"])
+    engine = RoundEngine(loss_fn, opt, n_workers=1, max_local_steps=1,
+                         policy=anytime_policy())
+    state0 = engine.init_state(template)
+
+    @jax.jit
+    def step_fn(arena, opt_arena, rstep, mb):
+        st = EngineState(arena, opt_arena, jnp.asarray(rstep, jnp.int32))
+        batch = jax.tree.map(lambda l: l[None, None], mb)
+        new_st, m = engine._state_round(st, batch, jnp.ones((1,), jnp.int32))
+        return new_st.arena, new_st.opt_arena, m["loss"]
+
+    return engine, np.asarray(state0.arena), np.asarray(state0.opt_arena), step_fn
+
+
+def gather_microbatch(arrays: dict[str, np.ndarray], ids: np.ndarray) -> dict:
+    """One local step's microbatch: {key: arr[ids]} (ids int [b])."""
+    return {k: v[ids] for k, v in arrays.items()}
+
+
+def linreg_objective(arrays: dict[str, np.ndarray]) -> Callable[[np.ndarray], float]:
+    """Global objective F(x) = mean((A x - y)^2) on the master (numpy)."""
+    a = np.asarray(arrays["a"], np.float64)
+    y = np.asarray(arrays["y"], np.float64)
+
+    def obj(x_vec: np.ndarray) -> float:
+        r = a @ np.asarray(x_vec, np.float64) - y
+        return float(np.mean(r * r))
+
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Config / result
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Deadline semantics and robustness envelope (DESIGN.md §11).
+
+    deadline_s      the paper's T: a worker counts a step toward q_v only
+                    if the step STARTED before its local deadline.
+    q_max           the index-plan envelope: q_v <= q_max even if the
+                    clock allows more (the SPMD contract, DESIGN.md §3).
+    report_grace_s  master waits deadline + grace before the retry phase
+                    (covers report serialization/transport).
+    report_retries / retry_backoff_s
+                    bounded retry: after grace, the master polls missing
+                    reports retry_backoff_s * 2^i seconds for
+                    i in [0, report_retries) — then gives up (q_v = 0).
+    hb_interval_s   workers heartbeat at this cadence while stepping.
+    evict_after     consecutive rounds with NO message from a worker
+                    before the master removes it (a hang shorter than one
+                    round degrades to q_v = 0 but keeps membership).
+    join_schedule   {round: n} master-side spawns at round boundaries
+                    (deterministic elastic-join testing).
+    leave_schedule  {round: [ordinal, ...]} master retires the ordinal-th
+                    member(s) at the round boundary (elastic shrink).
+    """
+
+    n_workers: int = 2
+    rounds: int = 8
+    deadline_s: float = 0.25
+    q_max: int = 8
+    local_batch: int = 16
+    s_redundancy: int = 0
+    seed: int = 0
+    report_grace_s: float = 0.25
+    report_retries: int = 3
+    retry_backoff_s: float = 0.1
+    hb_interval_s: float = 0.05
+    evict_after: int = 2
+    spawn_timeout_s: float = 120.0
+    join_schedule: dict[int, int] = dataclasses.field(default_factory=dict)
+    leave_schedule: dict[int, tuple[int, ...]] = dataclasses.field(default_factory=dict)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"empty fleet: n_workers must be >= 1, got {self.n_workers}")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if not self.deadline_s > 0:
+            raise ValueError(f"non-positive deadline_s {self.deadline_s} "
+                             f"(the paper's T is a positive time budget)")
+        if self.q_max < 1 or self.local_batch < 1:
+            raise ValueError("q_max and local_batch must be >= 1")
+        if self.s_redundancy < 0:
+            raise ValueError(f"s_redundancy must be >= 0, got {self.s_redundancy}")
+        if self.report_grace_s < 0 or self.report_retries < 0:
+            raise ValueError("report_grace_s/report_retries must be >= 0")
+        if not self.retry_backoff_s > 0 or not self.hb_interval_s > 0:
+            raise ValueError("retry_backoff_s and hb_interval_s must be > 0")
+        if self.evict_after < 1:
+            raise ValueError("evict_after must be >= 1")
+
+    def round_wall_bound(self) -> float:
+        """Upper bound on ONE round's master wait (the no-stall contract)."""
+        retry = sum(self.retry_backoff_s * 2**i for i in range(self.report_retries))
+        return self.deadline_s + self.report_grace_s + retry
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    """One run's observable history (everything the oracle replay needs)."""
+
+    x0: np.ndarray
+    x_final: np.ndarray
+    opt_final: np.ndarray
+    losses: np.ndarray            # [K] lambda-weighted reported worker loss
+    objective: np.ndarray         # [K] master-side global objective (nan if none)
+    round_wall_s: np.ndarray      # [K] master wall-clock per round
+    wall_clock_s: np.ndarray      # [K] cumulative wall clock at round end
+    q: list[np.ndarray]           # per-round observed q over that round's members
+    members: list[list[int]]      # per-round worker ids (combine order)
+    index_plans: list[np.ndarray]  # per-round [W, q_max, b] sample ids
+    epochs: list[int]             # membership epoch per round
+    events: list[dict]            # joins / leaves / evictions / deaths
+    start_round: int = 0
+
+    def q_matrix(self) -> np.ndarray:
+        """[K, W] q-matrix; only valid for constant-membership windows."""
+        widths = {len(q) for q in self.q}
+        if len(widths) != 1:
+            raise ValueError(f"membership changed mid-run (sizes {sorted(widths)}); "
+                             f"slice a constant-membership window first")
+        return np.stack(self.q).astype(np.int64)
+
+    def summary(self) -> dict:
+        return {
+            "rounds": len(self.q),
+            "final_loss": float(self.losses[-1]) if len(self.losses) else None,
+            "final_objective": float(self.objective[-1]) if len(self.objective) else None,
+            "q_mean": float(np.concatenate(self.q).mean()) if self.q else 0.0,
+            "wall_s": float(self.wall_clock_s[-1]) if len(self.wall_clock_s) else 0.0,
+            "events": self.events,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Master-side worker handle
+# ---------------------------------------------------------------------------
+class _WorkerHandle:
+    """One admitted connection: writer thread + liveness bookkeeping."""
+
+    def __init__(self, worker_id: int, conn, proc=None):
+        self.id = worker_id
+        self.conn = conn
+        self.proc = proc  # Process for master-spawned fleets, None for joiners
+        self.ready = False
+        self.dead = False
+        self.leaving = False
+        self.misses = 0
+        self.last_seen = time.monotonic()
+        self._outbox: queue.Queue = queue.Queue()
+        self._writer = threading.Thread(target=self._write_loop, daemon=True)
+        self._writer.start()
+
+    def _write_loop(self):
+        while True:
+            item = self._outbox.get()
+            if item is None:
+                return
+            try:
+                self.conn.send(item)
+            except (OSError, ValueError, BrokenPipeError):
+                self.dead = True
+                return
+
+    def post(self, msg) -> None:
+        """Enqueue a send; NEVER blocks the round loop (a hung worker's
+        full socket buffer stalls only its own writer thread)."""
+        if not self.dead:
+            self._outbox.put(msg)
+
+    def alive_process(self) -> bool:
+        return self.proc is None or self.proc.is_alive()
+
+    def close(self, terminate_grace_s: float = 1.0) -> None:
+        self._outbox.put(None)
+        # let the writer flush queued messages (e.g. a final "stop") so the
+        # worker sees a graceful goodbye, not a mid-send EOF
+        self._writer.join(timeout=0.5)
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        if self.proc is not None:
+            self.proc.join(timeout=terminate_grace_s)
+            if self.proc.is_alive():
+                self.proc.terminate()
+                self.proc.join(timeout=0.5)
+                if self.proc.is_alive():
+                    self.proc.kill()
+                    self.proc.join(timeout=0.5)
+
+
+# ---------------------------------------------------------------------------
+# The master
+# ---------------------------------------------------------------------------
+class AnytimeRuntime:
+    """Master loop: deadline rounds over a fleet of real worker processes.
+
+    spec     picklable workload + optimizer description, shipped verbatim
+             to every worker: {"workload": "linreg"|"lm", ...,
+             "opt": {"kind", "lr", ...}}.
+    arrays   sample-major corpus arrays (the Table-I dataset); shipped
+             once per worker in the welcome message.
+    """
+
+    def __init__(
+        self,
+        spec: dict,
+        arrays: dict[str, np.ndarray],
+        config: RuntimeConfig,
+        fault_spec: Optional[FaultSpec] = None,
+        objective: Optional[Callable[[np.ndarray], float]] = None,
+        x0: Optional[np.ndarray] = None,
+        resume: bool = False,
+    ):
+        self.spec = dict(spec)
+        self.arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        self.config = config
+        self.faults = fault_spec or FaultSpec()
+        if spec["workload"] == "linreg" and objective is None:
+            objective = linreg_objective(self.arrays)
+        self.objective = objective
+
+        loss_fn, template = build_workload(self.spec, self.arrays)
+        opt = build_opt(self.spec["opt"])
+        self._pspec = AR.arena_spec(template)
+        self._ospec = AR.arena_spec(opt.init(template))
+        self.x = np.asarray(AR.to_arena(template, self._pspec)) if x0 is None \
+            else np.asarray(x0, np.float32)
+        self.opt_vec = np.zeros((self._ospec.size,), np.float32)
+        self._loss_fn, self._opt = loss_fn, opt
+
+        self._authkey = os.urandom(16)
+        self._listener = None
+        self._accept_thread = None
+        self._accept_q: queue.Queue = queue.Queue()
+        self._await_hello: list[tuple[Any, float]] = []
+        self._pending: list[_WorkerHandle] = []
+        self._members: list[_WorkerHandle] = []
+        self._next_id = 0
+        self._epoch = 0
+        self._planner = None
+        self._planner_members: Optional[tuple[int, ...]] = None
+        self._events: list[dict] = []
+        self._started = False
+        self._sockdir = None
+        self._spawned_unclaimed: list = []
+
+        self._ckpt = None
+        self.start_round = 0
+        if config.ckpt_dir:
+            self._ckpt = CheckpointManager(config.ckpt_dir, keep=3)
+            if resume:
+                self._restore()
+
+    # -- checkpointing -------------------------------------------------------
+    def _ckpt_like(self):
+        return {"x": np.zeros_like(self.x),
+                "opt": np.zeros_like(self.opt_vec),
+                "round": np.zeros((), np.int64),
+                "epoch": np.zeros((), np.int64)}
+
+    def _restore(self) -> None:
+        if self._ckpt.latest_step() is None:
+            print(f"[runtime] no checkpoint in {self.config.ckpt_dir}; starting fresh")
+            return
+        payload, step = self._ckpt.restore(self._ckpt_like())
+        self.x = np.asarray(payload["x"], np.float32)
+        self.opt_vec = np.asarray(payload["opt"], np.float32)
+        self.start_round = int(payload["round"])
+        # a restart is a membership change by definition (fresh processes):
+        # resume into the NEXT epoch so the planner re-shards deterministically
+        self._epoch = int(payload["epoch"]) + 1
+        print(f"[runtime] resumed at round {self.start_round} "
+              f"(checkpoint step {step}, epoch {self._epoch})")
+
+    def _save(self, next_round: int) -> None:
+        if self._ckpt is None:
+            return
+        self._ckpt.save(next_round, {
+            "x": self.x, "opt": self.opt_vec,
+            "round": np.asarray(next_round, np.int64),
+            "epoch": np.asarray(self._epoch, np.int64),
+        })
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def address(self):
+        """The join address (pass to `python -m repro.launch.worker`)."""
+        return self._listener.address if self._listener else None
+
+    @property
+    def authkey(self) -> bytes:
+        return self._authkey
+
+    def start(self) -> None:
+        """Open the listener, spawn the initial fleet, wait until at least
+        one worker is ready (bounded by spawn_timeout_s)."""
+        if self._started:
+            return
+        if hasattr(os, "fork"):  # AF_UNIX where available, AF_INET fallback
+            self._sockdir = tempfile.mkdtemp(prefix="anytime_rt_")
+            addr = os.path.join(self._sockdir, "master.sock")
+            self._listener = mpc.Listener(addr, "AF_UNIX", authkey=self._authkey)
+        else:  # pragma: no cover
+            self._listener = mpc.Listener(("127.0.0.1", 0), authkey=self._authkey)
+        self._accept_thread = threading.Thread(target=self._accept_loop, daemon=True)
+        self._accept_thread.start()
+        self._started = True
+        self._spawn(self.config.n_workers)
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < self.config.spawn_timeout_s:
+            self._pump_pending()
+            if sum(h.ready for h in self._pending) >= self.config.n_workers:
+                break
+            all_dead = (all(not p.is_alive() for p in self._spawned_unclaimed)
+                        and not self._await_hello
+                        and all(h.dead for h in self._pending))
+            if all_dead:
+                break  # every spawn crashed pre-hello: fail fast, not at timeout
+            time.sleep(0.02)
+        self._admit_ready(round_no=self.start_round)
+        if not self._members:
+            self.shutdown()
+            raise RuntimeError(
+                f"no worker became ready within {self.config.spawn_timeout_s}s")
+
+    def _accept_loop(self):
+        while True:
+            try:
+                self._accept_q.put(self._listener.accept())
+            except (OSError, EOFError, mpc.AuthenticationError):
+                return
+
+    def _spawn(self, n: int) -> None:
+        from repro.launch import worker as W
+
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        for _ in range(n):
+            p = ctx.Process(target=W.spawn_entry,
+                            args=(self.address, self._authkey), daemon=True)
+            p.start()
+            self._events.append({"event": "spawn", "pid": p.pid})
+            self._spawned_unclaimed.append(p)  # claimed on hello, spawn order
+
+    # -- admission -----------------------------------------------------------
+    def _pump_pending(self) -> None:
+        """Drive handshakes without blocking: accept-queue -> hello ->
+        welcome -> ready.  Anything silent past spawn_timeout_s is dropped."""
+        while True:
+            try:
+                conn = self._accept_q.get_nowait()
+            except queue.Empty:
+                break
+            self._await_hello.append((conn, time.monotonic()))
+        still = []
+        for conn, t0 in self._await_hello:
+            try:
+                if conn.poll(0):
+                    tag, info = conn.recv()
+                    if tag != "hello":
+                        raise ValueError(f"expected hello, got {tag!r}")
+                    self._welcome(conn, info)
+                elif time.monotonic() - t0 > self.config.spawn_timeout_s:
+                    conn.close()
+                else:
+                    still.append((conn, t0))
+            except (EOFError, OSError, ValueError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        self._await_hello = still
+        for h in self._pending:
+            self._drain(h, current_round=None)
+
+    def _welcome(self, conn, info: dict) -> None:
+        wid = self._next_id
+        self._next_id += 1
+        # claim the Process object by PID (hellos arrive in ARBITRARY order;
+        # claiming in spawn order would hand a handle someone else's process
+        # — and its close() would then terminate the wrong worker)
+        proc = next((p for p in self._spawned_unclaimed
+                     if p.pid == info.get("pid")), None)
+        if proc is not None:
+            self._spawned_unclaimed.remove(proc)
+        h = _WorkerHandle(wid, conn, proc)
+        h.post(("welcome", {
+            "protocol": PROTOCOL_VERSION,
+            "worker_id": wid,
+            "spec": self.spec,
+            "arrays": self.arrays,
+            "faults": self.faults.for_worker(wid),
+            "hb_interval_s": self.config.hb_interval_s,
+            "q_max": self.config.q_max,
+            "local_batch": self.config.local_batch,
+        }))
+        self._pending.append(h)
+
+    def _admit_ready(self, round_no: int) -> bool:
+        ready = [h for h in self._pending if h.ready and not h.dead]
+        if not ready:
+            return False
+        for h in ready:
+            self._pending.remove(h)
+            self._members.append(h)
+            self._events.append({"round": round_no, "event": "join", "worker": h.id})
+        self._members.sort(key=lambda h: h.id)
+        return True
+
+    # -- message pump --------------------------------------------------------
+    def _drain(self, h: _WorkerHandle, current_round: Optional[int],
+               reports: Optional[dict] = None) -> None:
+        """Consume every queued message from one worker (non-blocking)."""
+        try:
+            while not h.dead and h.conn.poll(0):
+                tag, payload = h.conn.recv()
+                h.last_seen = time.monotonic()
+                if tag == "ready":
+                    h.ready = True
+                elif tag == "hb":
+                    pass  # last_seen already updated
+                elif tag == "leave":
+                    h.leaving = True
+                elif tag == "report":
+                    if reports is not None and payload["r"] == current_round:
+                        reports[h.id] = payload
+                    # stale reports (a worker waking from a hang) are dropped
+        except (EOFError, OSError):
+            h.dead = True
+
+    def _collect(self, round_no: int) -> dict[int, dict]:
+        """Bounded report collection: deadline + grace, then retry/backoff."""
+        cfg = self.config
+        reports: dict[int, dict] = {}
+        deadline = time.monotonic() + cfg.deadline_s + cfg.report_grace_s
+
+        def pump(conns, timeout):
+            hit = mpc.wait(conns, timeout=timeout) if conns else []
+            for c in hit:
+                h = next(m for m in self._members if m.conn is c)
+                self._drain(h, round_no, reports)
+
+        while True:
+            live = [h.conn for h in self._members
+                    if not h.dead and h.id not in reports]
+            left = deadline - time.monotonic()
+            if not live or left <= 0:
+                break
+            pump(live, left)
+        for attempt in range(cfg.report_retries):
+            live = [h.conn for h in self._members
+                    if not h.dead and h.id not in reports]
+            if not live:
+                break
+            pump(live, cfg.retry_backoff_s * (2 ** attempt))
+        return reports
+
+    # -- membership / planning ----------------------------------------------
+    def _apply_schedules(self, round_no: int) -> None:
+        for ordinal in sorted(self.config.leave_schedule.get(round_no, ()),
+                              reverse=True):
+            if 0 <= ordinal < len(self._members):
+                h = self._members.pop(ordinal)
+                self._events.append({"round": round_no, "event": "retire",
+                                     "worker": h.id})
+                h.post(("stop", {}))
+                h.close()
+        n_join = self.config.join_schedule.get(round_no, 0)
+        if n_join:
+            self._spawn(n_join)
+
+    def _ensure_planner(self) -> None:
+        """(Re)build the index planner when the member SET changed: any
+        join/leave/evict re-shards the Table-I assignment into a fresh
+        membership epoch (window-partition invariance makes the old epoch's
+        plans replayable for the oracle, DESIGN.md §7)."""
+        members = tuple(h.id for h in self._members)
+        if self._planner is not None and self._planner_members == members:
+            return
+        self._epoch += 1 if self._planner is not None else 0
+        w = len(members)
+        s = min(self.config.s_redundancy, max(w - 1, 0))
+        self._planner = membership_planner(
+            self.arrays, w, s, self.config.q_max, self.config.local_batch,
+            self.config.seed, self._epoch)
+        self._planner_members = members
+
+    def _remove_dead(self, round_no: int) -> None:
+        keep = []
+        for h in self._members:
+            if h.dead or not h.alive_process():
+                self._events.append({"round": round_no, "event": "dead",
+                                     "worker": h.id})
+                h.close()
+            elif h.leaving:
+                self._events.append({"round": round_no, "event": "leave",
+                                     "worker": h.id})
+                h.post(("stop", {}))
+                h.close()
+            elif h.misses >= self.config.evict_after:
+                self._events.append({"round": round_no, "event": "evict",
+                                     "worker": h.id})
+                h.post(("stop", {}))
+                h.close(terminate_grace_s=0.2)
+            else:
+                keep.append(h)
+        self._members = keep
+
+    # -- the round loop ------------------------------------------------------
+    def run(self) -> RuntimeResult:
+        self.start()
+        cfg = self.config
+        x0_record = self.x.copy()
+        losses, objective, walls, cumwall = [], [], [], []
+        qs, members_hist, plans, epochs_hist = [], [], [], []
+        t_run0 = time.monotonic()
+        try:
+            for r in range(self.start_round, cfg.rounds):
+                t_r0 = time.monotonic()
+                self._apply_schedules(r)
+                self._pump_pending()
+                self._admit_ready(r)
+                if not self._members:
+                    # degraded fleet of zero: the round is the identity
+                    # (x0 rebroadcast); wait briefly for a joiner
+                    qs.append(np.zeros((0,), np.int64))
+                    members_hist.append([])
+                    plans.append(np.zeros((0, cfg.q_max, cfg.local_batch), np.int64))
+                    epochs_hist.append(self._epoch)
+                    losses.append(float("nan"))
+                    objective.append(self.objective(self.x) if self.objective else float("nan"))
+                    walls.append(time.monotonic() - t_r0)
+                    cumwall.append(time.monotonic() - t_run0)
+                    time.sleep(min(cfg.deadline_s, 0.1))
+                    continue
+                self._ensure_planner()
+                idx = self._planner.round_indices()  # [W, q_max, b]
+                step0 = r * cfg.q_max
+                for v, h in enumerate(self._members):
+                    h.post(("round", {
+                        "r": r, "x": self.x, "opt": self.opt_vec,
+                        "idx": idx[v], "deadline_s": cfg.deadline_s,
+                        "step0": step0,
+                    }))
+                reports = self._collect(r)
+                self._combine(r, reports, losses, objective)
+                qs.append(np.asarray(
+                    [reports[h.id]["q"] if h.id in reports else 0
+                     for h in self._members], np.int64))
+                members_hist.append([h.id for h in self._members])
+                plans.append(idx)
+                epochs_hist.append(self._epoch)
+                for h in self._members:
+                    if h.id in reports:
+                        h.misses = 0
+                    elif time.monotonic() - h.last_seen <= cfg.round_wall_bound():
+                        h.misses = 0  # heartbeated: alive but past deadline
+                    else:
+                        h.misses += 1
+                self._remove_dead(r)
+                walls.append(time.monotonic() - t_r0)
+                cumwall.append(time.monotonic() - t_run0)
+                if cfg.ckpt_every and (r + 1) % cfg.ckpt_every == 0:
+                    self._save(r + 1)
+            if self._ckpt is not None:
+                self._save(cfg.rounds)
+        finally:
+            self.shutdown()
+        return RuntimeResult(
+            x0=x0_record, x_final=self.x.copy(), opt_final=self.opt_vec.copy(),
+            losses=np.asarray(losses, np.float64),
+            objective=np.asarray(objective, np.float64),
+            round_wall_s=np.asarray(walls, np.float64),
+            wall_clock_s=np.asarray(cumwall, np.float64),
+            q=qs, members=members_hist, index_plans=plans,
+            epochs=epochs_hist, events=self._events,
+            start_round=self.start_round,
+        )
+
+    def _combine(self, round_no: int, reports: dict[int, dict],
+                 losses: list, objective: list) -> None:
+        """Algorithm 1 l.15 on the OBSERVED q-vector.  Non-reporters hold
+        the round-start iterate (exactly the engine's masked q_v = 0 row),
+        so lambda renormalizes over survivors and the all-zero round is
+        the x0-rebroadcast identity — the same jnp einsum the arena
+        engine lowers its combine to."""
+        w = len(self._members)
+        q = np.zeros((w,), np.int64)
+        stack = np.broadcast_to(self.x, (w,) + self.x.shape).copy()
+        ostack = np.broadcast_to(self.opt_vec, (w,) + self.opt_vec.shape).copy()
+        mean_loss = np.zeros((w,), np.float64)
+        for v, h in enumerate(self._members):
+            rep = reports.get(h.id)
+            if rep is None or rep["q"] <= 0:
+                continue
+            q[v] = rep["q"]
+            stack[v] = rep["x"]
+            ostack[v] = rep["opt"]
+            mean_loss[v] = rep["loss_sum"] / rep["q"]
+        lam = np.asarray(anytime_lambdas(jnp.asarray(q, jnp.int32)), np.float32)
+        self.x = np.asarray(jnp.einsum(
+            "wn,w->n", jnp.asarray(stack), jnp.asarray(lam)))
+        if self.opt_vec.size:
+            self.opt_vec = np.asarray(jnp.einsum(
+                "wn,w->n", jnp.asarray(ostack), jnp.asarray(lam)))
+        losses.append(float(np.sum(lam.astype(np.float64) * mean_loss))
+                      if q.sum() > 0 else float("nan"))
+        objective.append(self.objective(self.x) if self.objective else float("nan"))
+
+    def shutdown(self) -> None:
+        if not self._started:
+            return
+        for h in self._members + self._pending:
+            h.post(("stop", {}))
+        time.sleep(0.05)  # let writer threads flush the tiny stop messages
+        for h in self._members + self._pending:
+            h.close()
+        self._members, self._pending = [], []
+        for conn, _ in self._await_hello:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._await_hello = []
+        for p in self._spawned_unclaimed:
+            p.terminate()
+            p.join(timeout=0.5)
+        self._spawned_unclaimed = []
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            self._listener = None
+        if self._sockdir is not None:
+            import shutil
+
+            shutil.rmtree(self._sockdir, ignore_errors=True)
+            self._sockdir = None
+        self._started = False
+
+
+# ---------------------------------------------------------------------------
+# The simulated path as the oracle
+# ---------------------------------------------------------------------------
+def replay_oracle(spec: dict, arrays: dict[str, np.ndarray],
+                  config: RuntimeConfig, result: RuntimeResult):
+    """Re-run an observed constant-membership window through RoundEngine.
+
+    Feeds the engine the runtime's OWN index plans and observed q-matrix,
+    from the runtime's x0 — the single-host simulated path executing the
+    exact realized schedule.  Returns (losses [K], x_final [N]); tests
+    pin the real fleet against this to float tolerance (the two paths jit
+    different graphs, so bitwise equality is not contractual —
+    DESIGN.md §11 lists what IS bit-identical)."""
+    q_mat = result.q_matrix()
+    n_rounds, w = q_mat.shape
+    loss_fn, template = build_workload(spec, arrays)
+    opt = build_opt(spec["opt"])
+    engine = RoundEngine(loss_fn, opt, n_workers=w,
+                         max_local_steps=config.q_max, policy=anytime_policy())
+    state = engine.init_state(template, step=result.start_round)
+    state = EngineState(jnp.asarray(result.x0), jnp.asarray(result.opt_final * 0),
+                        state.rstep)
+    idx = np.stack(result.index_plans)  # [K, W, q_max, b]
+    batches = {k: jnp.asarray(v[idx]) for k, v in arrays.items()}
+    state, metrics = engine.run(state, batches, q_mat)
+    return np.asarray(metrics["loss"], np.float64), np.asarray(state.arena)

@@ -54,11 +54,41 @@ class StragglerModel:
     persistent_frac: float = 0.0
     hetero_spread: float = 0.0
 
+    def __post_init__(self):
+        # fail loudly at construction: a bad parameter here otherwise
+        # surfaces rounds later as NaN/inf q-tensors inside a jit, where
+        # the cause is unrecoverable from the symptom
+        if self.kind not in ("constant", "shifted_exp", "pareto", "bimodal"):
+            raise ValueError(f"unknown straggler kind {self.kind!r}")
+        if not self.base_iter_time > 0:
+            raise ValueError(f"base_iter_time must be > 0 (seconds/iteration), "
+                             f"got {self.base_iter_time}")
+        if not self.rate > 0:
+            raise ValueError(f"rate must be > 0, got {self.rate}")
+        if not self.alpha > 0:
+            raise ValueError(f"alpha must be > 0, got {self.alpha}")
+        if not 0.0 <= self.p_slow <= 1.0:
+            raise ValueError(f"p_slow must be in [0, 1], got {self.p_slow}")
+        if not self.slow_factor >= 1.0:
+            raise ValueError(f"slow_factor must be >= 1 (a slowdown), "
+                             f"got {self.slow_factor}")
+        if not 0.0 <= self.persistent_frac <= 1.0:
+            raise ValueError(f"persistent_frac must be in [0, 1], "
+                             f"got {self.persistent_frac}")
+        if self.hetero_spread < 0:
+            raise ValueError(f"hetero_spread must be >= 0, got {self.hetero_spread}")
+
+    @staticmethod
+    def _check_fleet(n_workers: int) -> None:
+        if n_workers < 1:
+            raise ValueError(f"empty fleet: n_workers must be >= 1, got {n_workers}")
+
     def n_persistent(self, n_workers: int) -> int:
         return int(np.ceil(self.persistent_frac * n_workers)) if self.persistent_frac > 0 else 0
 
     def worker_speed(self, rng: np.random.Generator, n_workers: int) -> np.ndarray:
         """Fixed per-worker multiplier (drawn once per experiment)."""
+        self._check_fleet(n_workers)
         if self.hetero_spread <= 0:
             return np.ones(n_workers)
         return 1.0 + rng.uniform(0.0, self.hetero_spread, size=n_workers)
@@ -70,6 +100,7 @@ class StragglerModel:
         worker_speed: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Sample per-worker seconds/iteration for ONE epoch. inf = persistent."""
+        self._check_fleet(n_workers)
         if self.kind == "constant":
             slowdown = np.zeros(n_workers)
         elif self.kind == "shifted_exp":
@@ -100,6 +131,9 @@ class StragglerModel:
         worker_speed: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """q_v = floor(T / iter_time_v), clipped to [0, max_steps]."""
+        if not budget_t > 0:
+            raise ValueError(f"non-positive time budget T = {budget_t}; the "
+                             f"anytime contract needs T > 0 (q_v = floor(T/t_v))")
         it = self.iter_times(rng, n_workers, worker_speed)
         q = np.floor(budget_t / it).astype(np.int64)
         q = np.where(np.isfinite(it), q, 0)
@@ -123,6 +157,8 @@ class StragglerModel:
         device).  Row k is exactly what realize_steps would have drawn on
         the k-th call against the same generator.
         """
+        if n_rounds < 1:
+            raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
         return np.stack(
             [
                 self.realize_steps(rng, n_workers, budget_t, max_steps, worker_speed)
@@ -139,6 +175,8 @@ class StragglerModel:
         worker_speed: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """t_v = k * iter_time_v (inf for persistent stragglers)."""
+        if k_steps < 1:
+            raise ValueError(f"k_steps must be >= 1, got {k_steps}")
         return k_steps * self.iter_times(rng, n_workers, worker_speed)
 
 

@@ -34,16 +34,38 @@ from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.straggler import StragglerModel
 
 ArrayLike = Union[float, jax.Array]
 
 
+def _check_fleet(n_workers: int) -> None:
+    if n_workers < 1:
+        raise ValueError(f"empty fleet: n_workers must be >= 1, got {n_workers}")
+
+
+def _check_budget(budget_t: ArrayLike) -> None:
+    """Reject non-positive time budgets when the value is CONCRETE.
+
+    Inside a jit/vmap the budget is a Tracer with no value to test — the
+    sweep's [E] budget axis stays traceable; host-side misuse still fails
+    loudly instead of producing q = 0/NaN tensors downstream.
+    """
+    if isinstance(budget_t, jax.core.Tracer):
+        return
+    vals = np.asarray(budget_t)
+    if vals.size and not np.all(vals > 0):
+        raise ValueError(f"non-positive time budget T = {budget_t}; the "
+                         f"anytime contract needs T > 0 (q_v = floor(T/t_v))")
+
+
 def sample_worker_speed(
     model: StragglerModel, key: jax.Array, n_workers: int
 ) -> jax.Array:
     """Fixed per-worker speed multipliers, f32 [W] (ones if no spread)."""
+    _check_fleet(n_workers)
     if model.hetero_spread <= 0:
         return jnp.ones((n_workers,), jnp.float32)
     return 1.0 + jax.random.uniform(
@@ -74,6 +96,7 @@ def sample_iter_times(
     worker_speed: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Seconds/iteration for ONE epoch, f32 [W]; inf marks persistent ids."""
+    _check_fleet(n_workers)
     t = model.base_iter_time * (1.0 + _sample_slowdown(model, key, (n_workers,)))
     if worker_speed is not None:
         t = t * worker_speed
@@ -97,6 +120,10 @@ def sample_steps_matrix(
     The jax analogue of `StragglerModel.realize_steps_matrix` — one call
     replaces K host draws, and the result never leaves the device.
     """
+    _check_fleet(n_workers)
+    if n_rounds < 1:
+        raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+    _check_budget(budget_t)
     slow = _sample_slowdown(model, key, (n_rounds, n_workers))
     t = model.base_iter_time * (1.0 + slow)
     if worker_speed is not None:
@@ -127,6 +154,11 @@ def sample_steps_tensor(
     and held fixed across that experiment's rounds, mirroring
     `SimSetup.speeds` in the benchmark harness.
     """
+    _check_fleet(n_workers)
+    if n_experiments < 1 or n_rounds < 1:
+        raise ValueError(f"n_experiments and n_rounds must be >= 1, got "
+                         f"({n_experiments}, {n_rounds})")
+    _check_budget(budget_t)
     budgets = jnp.broadcast_to(
         jnp.asarray(budget_t, jnp.float32), (n_experiments,)
     )

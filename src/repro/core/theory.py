@@ -92,6 +92,37 @@ def optimal_lambdas_minimize_thm2(q: np.ndarray) -> np.ndarray:
     return lam / lam.sum()
 
 
+def observed_window_bounds(
+    q_rounds: np.ndarray | list, c: ProblemConstants
+) -> dict:
+    """Per-round Thm-2/Cor-4 bounds over an OBSERVED q history.
+
+    The real runtime (core/runtime.py) produces a ragged q history — one
+    observed vector per round, widths varying with elastic membership —
+    where the simulated path consumes a rectangular pre-sampled matrix.
+    This evaluates, per round, the Theorem-2 variance bound at the
+    Theorem-3 weights the master actually used (lambda_v = q_v / sum q)
+    and the Corollary-4 collapse C / Q, so a benchmark can overlay the
+    realized fleet's bound trajectory on the simulated oracle's.
+    All-zero rounds (everyone missed the deadline) carry inf — the theory
+    has no information gain to bound there; the combine is the identity.
+    """
+    thm2, cor4, q_tot = [], [], []
+    for q in q_rounds:
+        q = np.asarray(q, dtype=float)
+        lam = optimal_lambdas_minimize_thm2(q) if q.size else np.zeros(0)
+        total = float(q.sum())
+        q_tot.append(total)
+        if total <= 0:
+            thm2.append(float("inf"))
+            cor4.append(float("inf"))
+        else:
+            thm2.append(thm2_variance_bound(q, lam, c))
+            cor4.append(cor4_variance_bound(q, c))
+    return {"thm2": np.asarray(thm2), "cor4": np.asarray(cor4),
+            "q_total": np.asarray(q_tot)}
+
+
 def thm5_high_prob_bound(
     q: np.ndarray, lam: np.ndarray, delta: float, c: ProblemConstants
 ) -> float:

@@ -205,3 +205,34 @@ class TokenBatcher:
 
     def rounds_batch(self, n_rounds: int) -> dict[str, np.ndarray]:
         return self.inner.rounds_batch(n_rounds)
+
+
+def membership_planner(
+    arrays: dict[str, np.ndarray],
+    n_workers: int,
+    s_redundancy: int,
+    max_local_steps: int,
+    local_batch: int,
+    seed: int,
+    epoch: int,
+) -> AnytimeBatcher:
+    """An AnytimeBatcher scoped to one membership EPOCH of the real runtime.
+
+    The multi-process runtime (core/runtime.py) re-shards the Table-I
+    assignment whenever the worker set changes (join / leave / eviction).
+    Each epoch gets its own planner seeded with SeedSequence entropy
+    [seed, epoch]: deterministic given (seed, epoch, fleet size), and
+    independent across epochs, so a rejoining worker cannot alias the
+    index stream of the worker whose ordinal slot it inherited.  Within
+    an epoch the per-worker streams keep the window-partition invariance
+    AnytimeBatcher guarantees — which is what makes the observed window
+    replayable through the simulated oracle after the fact.
+    """
+    if n_workers < 1:
+        raise ValueError(f"empty fleet: n_workers must be >= 1, got {n_workers}")
+    if epoch < 0:
+        raise ValueError(f"epoch must be >= 0, got {epoch}")
+    return AnytimeBatcher(
+        arrays, n_workers, s_redundancy, max_local_steps, local_batch,
+        seed=[seed, epoch],
+    )

@@ -13,6 +13,8 @@ pod (32 across two pods), each worker a 16-chip model-parallel group.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 from jax.sharding import Mesh
 
@@ -36,6 +38,24 @@ def n_workers(mesh: Mesh) -> int:
         if a in mesh.axis_names:
             w *= mesh.shape[a]
     return w
+
+
+def recommended_process_fleet(requested: int | None = None, *,
+                              reserve_master: int = 2) -> int:
+    """Worker-PROCESS count for the real anytime runtime (core/runtime.py).
+
+    Unlike the mesh builders above, the multi-process runtime's workers
+    are OS processes competing for host cores — oversubscription makes
+    every worker a straggler at once, which destroys the q_v signal the
+    benchmark exists to measure.  Cap the fleet at cpu_count minus a
+    reserve for the master (+ its accept/writer threads); always >= 1.
+    """
+    avail = max((os.cpu_count() or 2) - reserve_master, 1)
+    if requested is None:
+        return min(4, avail)
+    if requested < 1:
+        raise ValueError(f"empty fleet: requested {requested} workers")
+    return min(requested, avail)
 
 
 def recommended_mesh_shape(n_params: int, kind: str) -> tuple[int, int]:

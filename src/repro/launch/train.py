@@ -22,6 +22,13 @@ batch leaves worker-sharded — through the SAME single-jit K-round driver
 as the arena path, so a model-parallel run is still ONE dispatch for the
 whole --rounds budget.
 
+Runtime (DESIGN.md §11): ``--runtime real`` replaces the simulated
+q-sampling with the multi-process fleet — W spawned worker processes run
+the same jitted round body against a real wall-clock deadline
+(``--deadline-s``), the master combines with Theorem-3 weights from the
+OBSERVED q-vector, and ``--fault-spec`` injects seeded
+kill/hang/slow/drop/delay faults (core/faults.py grammar).
+
 Checkpointing: ``--checkpoint-dir`` saves the live EngineState (either
 layout) plus the data-plane index cursor every ~10 rounds; ``--resume``
 restores the newest checkpoint and fast-forwards the batcher/straggler rng
@@ -100,6 +107,16 @@ def main(argv=None):
                          "continue with a bit-identical trajectory")
     ap.add_argument("--metrics-file", default=None, help="JSONL per-round metrics")
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--runtime", choices=["sim", "real"], default="sim",
+                    help="sim: single-host engine fed by the StragglerModel's "
+                         "q-tensors; real: W worker PROCESSES against a "
+                         "wall-clock deadline (core/runtime.py), q observed")
+    ap.add_argument("--deadline-s", type=float, default=0.5,
+                    help="per-round wall-clock budget T for --runtime real")
+    ap.add_argument("--fault-spec", default=None,
+                    help="deterministic fault schedule for --runtime real, "
+                         "e.g. 'kill@3:1,hang@5:0:2.0,drop@7:2' "
+                         "(core/faults.py grammar)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -137,6 +154,8 @@ def main(argv=None):
         prefix = rng.standard_normal((args.n_seqs, p, cfg.prefix_source_dim or cfg.d_model)).astype(np.float32)
     batcher = TokenBatcher(toks, args.workers, args.s, args.q_max, args.local_batch,
                            seed=args.seed, prefix=prefix)
+    if args.runtime == "real":
+        return _run_real_runtime(args, batcher)
     smodel = StragglerModel(kind=args.straggler, persistent_frac=args.persistent_frac)
     speeds = smodel.worker_speed(rng, args.workers)
 
@@ -161,9 +180,26 @@ def main(argv=None):
         rckpt.save(step_no, {"state": state, "round": np.asarray(step_no, np.int64)})
 
     start_round = 0
-    if rckpt and args.resume and rckpt.latest_step() is not None:
-        like = {"state": state, "round": np.zeros((), np.int64)}
-        payload, ck_step = rckpt.restore(like)
+    resume_payload = None
+    if args.resume:
+        # an empty or missing checkpoint dir is a fresh run with a notice,
+        # not an error: the first launch of a crash-looped job hits exactly
+        # this state, and dying on it would wedge the restart loop
+        if rckpt is None:
+            print("[train] --resume requested but no --checkpoint-dir given; "
+                  "starting fresh")
+        elif rckpt.latest_step() is None:
+            print(f"[train] --resume requested but no checkpoint found in "
+                  f"{rckpt.dir}; starting fresh")
+        else:
+            like = {"state": state, "round": np.zeros((), np.int64)}
+            try:
+                resume_payload = rckpt.restore(like)
+            except FileNotFoundError as e:
+                print(f"[train] --resume found no readable checkpoint "
+                      f"({e}); starting fresh")
+    if resume_payload is not None:
+        payload, ck_step = resume_payload
 
         # re-place every restored leaf (params AND optimizer moments) on the
         # placement the freshly-built template state carries — under the
@@ -265,6 +301,61 @@ def main(argv=None):
     print(f"[train] done: final loss {loss:.4f} wall {wall:.1f}s "
           f"(jit dispatches: {engine.dispatch_count}, traces: {engine.trace_count}, "
           f"data uploaded: {upload_bytes / 1e6:.1f}MB)")
+    return loss
+
+
+def _run_real_runtime(args, batcher) -> float:
+    """--runtime real: hand the run to the multi-process anytime master.
+
+    The LM workload spec travels to each worker process, which rebuilds
+    params from (arch, seed) and steps the SAME engine round body against
+    the wall clock; q_v is OBSERVED, not sampled, so --straggler/--budget-t
+    are ignored here (DESIGN.md §11).  The optimizer maps to its plain
+    form (the runtime combines raw opt arenas; the sim path's clip+schedule
+    chain stays a sim-only nicety).
+    """
+    from repro.core.faults import FaultSpec
+    from repro.core.runtime import AnytimeRuntime, RuntimeConfig
+
+    spec = {"workload": "lm", "arch": args.arch, "reduced": args.reduced,
+            "params_seed": args.seed,
+            "opt": {"kind": args.optimizer, "lr": args.lr}}
+    rcfg = RuntimeConfig(
+        n_workers=args.workers, rounds=args.rounds, deadline_s=args.deadline_s,
+        q_max=args.q_max, local_batch=args.local_batch, s_redundancy=args.s,
+        seed=args.seed,
+        ckpt_dir=str(pathlib.Path(args.ckpt_dir) / "runtime") if args.ckpt_dir else None,
+        ckpt_every=10 if args.ckpt_dir else 0)
+    faults = FaultSpec.parse(args.fault_spec)
+    print(f"[train] runtime=real workers={args.workers} deadline={args.deadline_s}s"
+          + (f" faults={faults}" if faults else ""))
+    rt = AnytimeRuntime(spec, batcher.arrays, rcfg, fault_spec=faults,
+                        resume=args.resume)
+    res = rt.run()
+    metrics_cm = open(args.metrics_file, "a") if args.metrics_file \
+        else contextlib.nullcontext()
+    with metrics_cm as metrics_f:
+        for i, q in enumerate(res.q):
+            rr = res.start_round + i
+            if metrics_f:
+                metrics_f.write(json.dumps({
+                    "round": rr, "loss": float(res.losses[i]),
+                    "q": np.asarray(q).tolist(), "members": res.members[i],
+                    "epoch": res.epochs[i],
+                    "wall_s": float(res.wall_clock_s[i]),
+                }) + "\n")
+            if rr % args.log_every == 0:
+                print(f"round {rr:4d} loss {res.losses[i]:.4f} "
+                      f"q={np.asarray(q).tolist()} members={res.members[i]} "
+                      f"({res.wall_clock_s[i]:.1f}s)")
+    for e in res.events:
+        if e.get("event") != "spawn":
+            print(f"[train] event: {e}")
+    finite = res.losses[np.isfinite(res.losses)]
+    loss = float(finite[-1]) if len(finite) else float("nan")
+    print(f"[train] done: final loss {loss:.4f} "
+          f"wall {float(res.wall_clock_s[-1]) if len(res.wall_clock_s) else 0.0:.1f}s "
+          f"(runtime=real, {len(res.q)} rounds)")
     return loss
 
 

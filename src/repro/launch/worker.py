@@ -1,0 +1,173 @@
+"""Anytime worker process: Algorithm 2 against a REAL wall clock.
+
+One worker = one OS process connected to the master (core/runtime.py)
+over a multiprocessing Connection.  Per round it receives the current
+iterate, runs local SGD steps until the wall-clock deadline T expires —
+a step counts toward q_v only if it STARTS before the deadline — and
+reports (q_v, iterate, opt state, summed loss).  The compute is the
+RoundEngine round body at W = 1, q_max = 1 (`make_worker_step`), so a
+real worker's arithmetic is the simulated oracle's arithmetic.
+
+Protocol (all messages are ("tag", dict) tuples):
+
+  worker -> master   hello {pid}                      once, on connect
+  master -> worker   welcome {worker_id, spec, arrays, faults,
+                              hb_interval_s, q_max, protocol}
+  worker -> master   ready {}                         after jit warm-up,
+                     so round 0's deadline is not eaten by compilation
+  master -> worker   round {r, x, opt, idx, deadline_s, step0}
+  worker -> master   hb {}                            every hb_interval_s
+                     while stepping (liveness signal past the deadline)
+  worker -> master   report {worker_id, r, q, x, opt, loss_sum}
+  master -> worker   stop {}                          graceful shutdown
+
+A worker waking from a hang DRAINS its queue to the newest round message
+(stale rounds are skipped; the master has already closed them with
+q_v = 0), so a transient freeze rejoins the fleet instead of replaying
+history.  Scheduled faults arrive in the welcome message and fire
+deterministically here — the master is never told, it must survive on
+protocol alone (kill / hang / slow / drop / delay; core/faults.py).
+
+External elastic join (same grammar the master's own spawns use):
+
+    python -m repro.launch.worker --address /tmp/.../master.sock \
+        --authkey <hex>
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from multiprocessing.connection import Client
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _connect(address, authkey: bytes):
+    family = "AF_UNIX" if isinstance(address, str) else None
+    return Client(address, family=family, authkey=authkey)
+
+
+def worker_main(address, authkey: bytes) -> int:
+    """Connect, handshake, run rounds until stop/EOF.  Returns exit code."""
+    # import here: the spawn child pays these only after it exists
+    from repro.core.runtime import PROTOCOL_VERSION, gather_microbatch, make_worker_step
+
+    conn = _connect(address, authkey)
+    try:
+        conn.send(("hello", {"pid": os.getpid()}))
+        tag, welcome = conn.recv()
+        if tag != "welcome":
+            raise RuntimeError(f"expected welcome, got {tag!r}")
+        if welcome.get("protocol") != PROTOCOL_VERSION:
+            raise RuntimeError(f"protocol mismatch: master speaks "
+                               f"{welcome.get('protocol')}, worker {PROTOCOL_VERSION}")
+        wid = welcome["worker_id"]
+        spec = welcome["spec"]
+        arrays = {k: np.asarray(v) for k, v in welcome["arrays"].items()}
+        faults = welcome.get("faults", {})
+        hb_interval = welcome["hb_interval_s"]
+        q_max = welcome["q_max"]
+
+        _, x_warm, opt_warm, step_fn = make_worker_step(spec, arrays)
+        # warm-up: compile the step on a dummy microbatch AT THE ROUND
+        # SHAPE (a cold jit in round 0 would eat the whole deadline, and a
+        # wrong-shape warm-up recompiles there — same outcome)
+        warm_ids = np.zeros((welcome["local_batch"],), np.int64)
+        mb = {k: jnp.asarray(v) for k, v in gather_microbatch(arrays, warm_ids).items()}
+        a, o, l = step_fn(jnp.asarray(x_warm), jnp.asarray(opt_warm), 0, mb)
+        l.block_until_ready()
+        conn.send(("ready", {}))
+
+        while True:
+            tag, msg = conn.recv()
+            # drain to the NEWEST queued message: after a hang the backlog
+            # holds rounds the master already degraded to q_v = 0
+            while conn.poll(0):
+                nxt_tag, nxt_msg = conn.recv()
+                if nxt_tag == "stop":
+                    return 0
+                tag, msg = nxt_tag, nxt_msg
+            if tag == "stop":
+                return 0
+            if tag != "round":
+                continue
+            r = msg["r"]
+            deadline = time.monotonic() + msg["deadline_s"]
+
+            slow_s, drop, delay_s = 0.0, False, 0.0
+            for kind, arg in faults.get(r, ()):
+                if kind == "kill":
+                    os._exit(17)  # hard death: no report, no EOF courtesy
+                elif kind == "hang":
+                    time.sleep(arg)  # frozen: no heartbeats, budget burns
+                elif kind == "slow":
+                    slow_s = arg
+                elif kind == "drop":
+                    drop = True
+                elif kind == "delay":
+                    delay_s = arg
+
+            arena = jnp.asarray(np.asarray(msg["x"], np.float32))
+            opt_vec = jnp.asarray(np.asarray(msg["opt"], np.float32))
+            idx = np.asarray(msg["idx"])  # [q_max, b] sample ids
+            step0 = msg["step0"]
+            q, loss_sum = 0, 0.0
+            last_hb = time.monotonic()
+            while q < q_max:
+                if time.monotonic() >= deadline:
+                    break
+                if slow_s:
+                    time.sleep(slow_s)  # pre-step contention...
+                    if time.monotonic() >= deadline:
+                        break  # ...so the step never STARTED in budget
+                mb = {k: jnp.asarray(v)
+                      for k, v in gather_microbatch(arrays, idx[q]).items()}
+                arena, opt_vec, loss = step_fn(arena, opt_vec, step0 + q, mb)
+                loss_sum += float(loss)  # blocks: honest per-step wall time
+                q += 1
+                now = time.monotonic()
+                if now - last_hb >= hb_interval:
+                    conn.send(("hb", {}))
+                    last_hb = now
+            if drop:
+                continue  # completed, but the report is lost on the wire
+            if delay_s:
+                time.sleep(delay_s)  # late report: master's retry window
+            conn.send(("report", {
+                "worker_id": wid, "r": r, "q": q,
+                "x": np.asarray(arena), "opt": np.asarray(opt_vec),
+                "loss_sum": loss_sum,
+            }))
+    except (EOFError, OSError, BrokenPipeError):
+        return 1  # master gone: nothing to report to
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
+    return 0
+
+
+def spawn_entry(address, authkey: bytes) -> None:
+    """multiprocessing spawn target (module-level: picklable)."""
+    raise SystemExit(worker_main(address, authkey))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="join a running anytime master as an elastic worker")
+    ap.add_argument("--address", required=True,
+                    help="master socket path (AF_UNIX) or host:port")
+    ap.add_argument("--authkey", required=True, help="hex auth key")
+    args = ap.parse_args(argv)
+    address = args.address
+    if ":" in address and not os.path.exists(address):
+        host, port = address.rsplit(":", 1)
+        address = (host, int(port))
+    raise SystemExit(worker_main(address, bytes.fromhex(args.authkey)))
+
+
+if __name__ == "__main__":
+    main()

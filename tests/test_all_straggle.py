@@ -1,0 +1,158 @@
+"""The all-workers-straggle round (q_v = 0 for EVERY v) is the identity.
+
+Algorithm 1 l.12-14: a worker that never reports contributes q_v = 0, and
+Theorem 3's lambda_v = q_v / sum(q) renormalizes over survivors.  When NO
+worker reports, sum(q) = 0 and a naive implementation divides by zero (or
+"safely" divides by 1 and zeroes the parameters).  The contract pinned
+here: every backend — per-round engine, multi-round driver, sweep grid,
+fused-window kernel, and the shard_map combine — degrades to rebroadcast
+of the round-start iterate x0, for both the anytime (Thm-3) and sync
+(uniform) weightings.  The real runtime (core/runtime.py) leans on this:
+a round where every process misses its deadline must be a no-op, not a
+parameter reset.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.combine import anytime_lambdas, combine_mean_axis, uniform_lambdas
+from repro.core.engine import RoundEngine, anytime_policy, sync_policy
+from repro.core.sweep import SweepEngine
+from repro.data.linreg import make_linreg
+from repro.optim import momentum, sgd
+
+W, QMAX, B, D = 4, 3, 4, 8
+
+
+def _loss(params, mb):
+    a, y = mb
+    r = a @ params["x"] - y
+    return jnp.mean(r * r)
+
+
+@pytest.fixture(scope="module")
+def lin():
+    return make_linreg(200, D, seed=11)
+
+
+def _batches(lin, rng, k):
+    idx = rng.integers(0, lin.m, size=(k, W, QMAX, B))
+    return (jnp.asarray(lin.A[idx], jnp.float32),
+            jnp.asarray(lin.y[idx], jnp.float32))
+
+
+def _params(rng):
+    return {"x": jnp.asarray(rng.standard_normal(D), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# weight helpers
+# ---------------------------------------------------------------------------
+def test_anytime_lambdas_all_zero_uniform():
+    lam = np.asarray(anytime_lambdas(jnp.zeros((W,), jnp.int32)))
+    np.testing.assert_allclose(lam, np.full(W, 1.0 / W), rtol=1e-6)
+
+
+def test_uniform_lambdas_all_false_uniform():
+    """All-false mask must NOT return all-zero weights (sum must stay 1)."""
+    lam = np.asarray(uniform_lambdas(jnp.zeros((W,), bool)))
+    np.testing.assert_allclose(lam, np.full(W, 1.0 / W), rtol=1e-6)
+    # and the normal path is untouched
+    lam2 = np.asarray(uniform_lambdas(jnp.asarray([True, False, True, False])))
+    np.testing.assert_allclose(lam2, [0.5, 0.0, 0.5, 0.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", [anytime_policy(), sync_policy()],
+                         ids=["anytime", "sync"])
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum"])
+def test_engine_round_all_zero_is_identity(lin, rng, policy, opt_name):
+    opt = sgd(0.05) if opt_name == "sgd" else momentum(0.05, 0.9)
+    engine = RoundEngine(_loss, opt, W, QMAX, policy)
+    params = _params(rng)
+    state = engine.init_state(params)
+    batch = jax.tree.map(lambda t: t[0], _batches(lin, rng, 1))
+    new_state, metrics = engine.round(state, batch, jnp.zeros((W,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(new_state.arena),
+                               np.asarray(state.arena), atol=1e-7)
+    assert np.all(np.isfinite(np.asarray(new_state.arena)))
+
+
+def test_driver_window_with_zero_round_matches_skip(lin, rng):
+    """K-round window with an all-zero middle round == the same window
+    with that round deleted (the zero round advances nothing but the LR
+    schedule's step counter, which the q = 0 mask never consumes)."""
+    engine = RoundEngine(_loss, sgd(0.05), W, QMAX, anytime_policy())
+    params = _params(rng)
+    a, y = _batches(lin, rng, 3)
+    qs = np.asarray([[2, 1, 3, 2], [0, 0, 0, 0], [1, 2, 2, 3]])
+    st, _ = engine.run(engine.init_state(params), (a, y), qs)
+    # delete round 1 but run round 2 from the SAME rstep offset by feeding
+    # the identical q row — the zero round must not have moved the arena
+    st_skip = engine.init_state(params)
+    st_skip, _ = engine.run(st_skip, (a[:1], y[:1]), qs[:1])
+    mid, _ = engine.round(st_skip, (a[1], y[1]), jnp.zeros((W,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(mid.arena),
+                               np.asarray(st_skip.arena), atol=1e-7)
+
+
+def test_sweep_all_zero_experiment_is_identity(lin, rng):
+    """A whole experiment of all-zero rounds rides the [E] grid unchanged
+    next to a normal experiment (no NaN contamination across lanes)."""
+    E, K = 2, 3
+    engine = RoundEngine(_loss, sgd(0.05), W, QMAX, anytime_policy())
+    sweep = SweepEngine(engine)
+    params = _params(rng)
+    idx = rng.integers(0, lin.m, size=(E, K, W, QMAX, B))
+    batches = (jnp.asarray(lin.A[idx], jnp.float32),
+               jnp.asarray(lin.y[idx], jnp.float32))
+    qs = rng.integers(1, QMAX + 1, size=(E, K, W))
+    qs[1] = 0  # experiment 1 never hears from anyone
+    st, _ = sweep.run(sweep.init_state(params, E), batches, qs)
+    arenas = np.asarray(st.arena)
+    x0 = np.asarray(engine.init_state(params).arena)
+    np.testing.assert_allclose(arenas[1], x0, atol=1e-7)
+    assert np.all(np.isfinite(arenas))
+    # lane 0 actually trained
+    assert float(np.abs(arenas[0] - x0).max()) > 1e-6
+
+
+def test_fused_window_all_zero_is_identity(lin, rng):
+    """The whole-window kernel (interpret-mode reference) rebroadcasts x0
+    through an all-zero round exactly like the scanned driver."""
+    engine = RoundEngine(_loss, sgd(0.05), W, QMAX, anytime_policy(),
+                         fused="window_ref")
+    params = _params(rng)
+    a, y = _batches(lin, rng, 3)
+    qs = np.asarray([[2, 1, 3, 2], [0, 0, 0, 0], [1, 2, 2, 3]])
+    st, _ = engine.run(engine.init_state(params), (a, y), qs)
+    ref = RoundEngine(_loss, sgd(0.05), W, QMAX, anytime_policy())
+    st_ref, _ = ref.run(ref.init_state(params), (a, y), qs)
+    np.testing.assert_allclose(np.asarray(st.arena), np.asarray(st_ref.arena),
+                               atol=1e-5)
+    assert np.all(np.isfinite(np.asarray(st.arena)))
+
+
+# ---------------------------------------------------------------------------
+# shard_map combine
+# ---------------------------------------------------------------------------
+def test_combine_mean_axis_all_zero_rebroadcasts_x0(rng):
+    """psum(q) == 0 must yield pmean(x_v) (= x0 when replicas agree), not
+    the zero vector a guarded 0/1 division produces."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("w",))
+    x0 = jnp.asarray(rng.standard_normal(D), jnp.float32)
+
+    def f(params, q):
+        return combine_mean_axis(params, q, "w")
+
+    out = shard_map(f, mesh=mesh, in_specs=(P("w"), P("w")),
+                    out_specs=P("w"))(
+        {"x": jnp.broadcast_to(x0, (1, D))}, jnp.zeros((1,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(out["x"][0]), np.asarray(x0),
+                               atol=1e-7)

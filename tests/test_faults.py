@@ -1,0 +1,78 @@
+"""FaultSpec schedule language: grammar round-trip, seeded determinism,
+per-worker slicing, and validation (core/faults.py)."""
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultEvent, FaultSpec, matrix_spec
+
+
+def test_parse_roundtrip():
+    text = "kill@3:1,hang@5:0:2.5,slow@2:2:0.04,drop@7:1,delay@9:0:0.8"
+    spec = FaultSpec.parse(text)
+    assert len(spec.events) == 5
+    # events sort by (round, worker, kind); str() round-trips the set
+    assert FaultSpec.parse(str(spec)) == spec
+    kinds = {e.kind for e in spec.events}
+    assert kinds == {"kill", "hang", "slow", "drop", "delay"}
+
+
+def test_parse_empty_and_whitespace():
+    assert not FaultSpec.parse(None)
+    assert not FaultSpec.parse("")
+    assert not FaultSpec.parse("  ,  ")
+
+
+@pytest.mark.parametrize("bad", [
+    "explode@1:0",          # unknown kind
+    "kill@x:0",             # non-int round
+    "kill@1",               # missing worker
+    "hang@1:0",             # hang needs :arg seconds
+    "slow@2:1",             # slow needs :arg seconds
+    "kill@-1:0",            # negative round
+])
+def test_parse_rejects_bad_tokens(bad):
+    with pytest.raises(ValueError):
+        FaultSpec.parse(bad)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(1, 0, "nope")
+    with pytest.raises(ValueError):
+        FaultEvent(1, 0, "hang", -1.0)
+
+
+def test_for_worker_plain_containers():
+    spec = FaultSpec.parse("kill@3:1,hang@3:0:2.0,drop@5:1")
+    w1 = spec.for_worker(1)
+    assert w1 == {3: [("kill", 0.0)], 5: [("drop", 0.0)]}
+    assert spec.for_worker(0) == {3: [("hang", 2.0)]}
+    assert spec.for_worker(9) == {}
+
+
+def test_seeded_is_deterministic_and_kill_terminal():
+    a = FaultSpec.seeded(7, 50, 4, p_kill=0.05, p_hang=0.1, p_drop=0.1)
+    b = FaultSpec.seeded(7, 50, 4, p_kill=0.05, p_hang=0.1, p_drop=0.1)
+    assert a == b and str(a) == str(b)
+    assert a != FaultSpec.seeded(8, 50, 4, p_kill=0.05, p_hang=0.1, p_drop=0.1)
+    # a killed worker draws no further events
+    for w in range(4):
+        evs = sorted(e for e in a.events if e.worker == w)
+        kills = [e for e in evs if e.kind == "kill"]
+        if kills:
+            assert evs[-1] == kills[0], evs
+
+
+def test_seeded_validation():
+    with pytest.raises(ValueError):
+        FaultSpec.seeded(0, 0, 4)
+    with pytest.raises(ValueError):
+        FaultSpec.seeded(0, 10, 4, p_kill=1.5)
+
+
+def test_matrix_spec_and_views():
+    spec = matrix_spec([3, 6, 9], [0, 1, 2], ["kill", "hang", "drop"], hang=2.0)
+    assert spec.rounds_hit() == {"kill": [3], "hang": [6], "drop": [9]}
+    assert spec.for_worker(1) == {6: [("hang", 2.0)]}
+    merged = spec.merged(FaultSpec.parse("slow@1:0:0.1"))
+    assert len(merged.events) == 4 and merged.events[0].kind == "slow"

@@ -1,0 +1,230 @@
+"""Real multi-process anytime runtime (core/runtime.py + launch/worker.py).
+
+These tests spawn REAL worker processes: wall-clock deadlines, observed
+q-vectors, protocol-only fault survival.  The contract under test is
+DESIGN.md §11 — the master never stalls (every wait is bounded by
+`RuntimeConfig.round_wall_bound`), degraded rounds are the x0 identity,
+membership changes re-shard, and the observed window replays through the
+RoundEngine oracle to float tolerance.
+
+Kept deliberately small (linreg, W <= 3, short deadlines): each worker
+process pays a jax import + jit warm-up, so fleets are shared per test,
+not per assertion.
+"""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultSpec
+from repro.core.runtime import (AnytimeRuntime, RuntimeConfig, build_opt,
+                                build_workload, replay_oracle)
+from repro.data.linreg import make_linreg
+
+D = 8
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+@pytest.fixture(scope="module")
+def arrays():
+    data = make_linreg(256, D, noise_std=0.1, seed=0)
+    return {"a": np.asarray(data.A, np.float32),
+            "y": np.asarray(data.y, np.float32)}
+
+
+def _spec(opt="sgd"):
+    kinds = {"sgd": {"kind": "sgd", "lr": 5e-3},
+             "momentum": {"kind": "momentum", "lr": 5e-3, "beta": 0.9}}
+    return {"workload": "linreg", "opt": kinds[opt]}
+
+
+# ---------------------------------------------------------------------------
+# config validation (cheap, no processes)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [
+    {"n_workers": 0}, {"rounds": 0}, {"deadline_s": 0.0},
+    {"deadline_s": -1.0}, {"q_max": 0}, {"evict_after": 0},
+    {"retry_backoff_s": 0.0},
+])
+def test_config_validation(kw):
+    with pytest.raises(ValueError):
+        RuntimeConfig(**kw)
+
+
+def test_round_wall_bound_is_finite_and_ordered():
+    cfg = RuntimeConfig(deadline_s=0.2, report_grace_s=0.1,
+                        report_retries=3, retry_backoff_s=0.05)
+    assert cfg.round_wall_bound() == pytest.approx(0.2 + 0.1 + 0.05 * 7)
+
+
+def test_build_workload_and_opt():
+    arrays = {"a": np.zeros((4, D), np.float32), "y": np.zeros((4,), np.float32)}
+    loss_fn, template = build_workload(_spec(), arrays)
+    assert template["x"].shape == (D,)
+    assert float(loss_fn(template, {k: v for k, v in arrays.items()})) == 0.0
+    assert build_opt({"kind": "momentum", "lr": 0.1, "beta": 0.9}).spec["kind"] == "momentum"
+    with pytest.raises(ValueError):
+        build_opt({"kind": "rmsprop"})
+    with pytest.raises(ValueError):
+        build_workload({"workload": "tabular", "opt": {}}, arrays)
+
+
+# ---------------------------------------------------------------------------
+# the real fleet
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_deadline_rounds_and_oracle_parity(arrays):
+    """Clean 6-round run: observed q > 0, loss trajectory finite, and the
+    engine replay of the OBSERVED (q, index-plan) window reproduces the
+    fleet's iterate to float tolerance."""
+    cfg = RuntimeConfig(n_workers=2, rounds=6, deadline_s=0.25, q_max=6,
+                        local_batch=8, seed=3)
+    res = AnytimeRuntime(_spec("momentum"), arrays, cfg).run()
+    assert len(res.q) == 6
+    assert all(len(q) == 2 for q in res.q)
+    assert np.asarray(res.q).sum() > 0
+    assert np.all(np.isfinite(res.objective))
+    # converging: late objective below the start
+    assert res.objective[-1] < res.objective[0]
+    o_losses, o_x = replay_oracle(_spec("momentum"), arrays, cfg, res)
+    np.testing.assert_allclose(o_x, res.x_final, rtol=1e-4, atol=1e-5)
+    mask = np.isfinite(res.losses)
+    np.testing.assert_allclose(o_losses[mask], res.losses[mask],
+                               rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_fault_matrix_20_rounds_no_stall(arrays):
+    """The acceptance matrix: kill, hang, slowdown, and dropped report at
+    seeded rounds over a 20-round run.  The master must finish every round
+    within its wall bound, survive the dead worker, degrade fault rounds
+    to q_v = 0 for the faulted worker, and keep loss monotone on average."""
+    cfg = RuntimeConfig(n_workers=3, rounds=20, deadline_s=0.12, q_max=4,
+                        local_batch=8, seed=5, report_grace_s=0.2,
+                        report_retries=2, retry_backoff_s=0.08)
+    faults = FaultSpec.parse(
+        "slow@3:1:0.5,drop@6:0,hang@9:1:0.8,kill@12:2,drop@15:0")
+    t0 = time.monotonic()
+    res = AnytimeRuntime(_spec(), arrays, cfg, fault_spec=faults).run()
+    wall = time.monotonic() - t0
+    assert len(res.q) == 20
+    # no master stall: generous 3x bound per round + fleet spawn overhead
+    assert wall < 20 * 3 * cfg.round_wall_bound() + 60, wall
+    # the faulted worker contributed nothing in its fault round
+    def q_of(rnd, wid):
+        return dict(zip(res.members[rnd], res.q[rnd].tolist())).get(wid)
+    assert q_of(3, 1) == 0      # slowdown > deadline
+    assert q_of(6, 0) == 0      # dropped report
+    assert q_of(9, 1) == 0      # hang burns the budget
+    assert q_of(12, 2) == 0     # killed at round start
+    # the kill is detected and the member removed (never blocks later rounds)
+    assert any(e["event"] == "dead" and e["worker"] == 2 for e in res.events)
+    assert all(2 not in m for m in res.members[14:])
+    # survivors keep training: monotone-on-average objective
+    obj = res.objective[np.isfinite(res.objective)]
+    assert np.mean(obj[-5:]) < np.mean(obj[:5])
+    # liveness: every non-fault round heard from every surviving worker
+    q19 = res.q[19]
+    assert len(q19) == 2 and np.all(q19 > 0)
+
+
+@pytest.mark.slow
+def test_all_miss_round_is_identity(arrays):
+    """A round where EVERY worker misses the deadline (slowdown > T for
+    both) must leave the iterate bit-identical — the master's combine is
+    the x0 rebroadcast, not a zeroing division."""
+    cfg = RuntimeConfig(n_workers=2, rounds=4, deadline_s=0.15, q_max=4,
+                        local_batch=8, seed=7)
+    # sleep > deadline forces q = 0, but short enough that the workers wake
+    # inside round 1's retry window and rejoin cleanly for rounds 2-3
+    faults = FaultSpec.parse("slow@1:0:0.4,slow@1:1:0.4")
+    res = AnytimeRuntime(_spec(), arrays, cfg, fault_spec=faults).run()
+    assert np.all(res.q[1] == 0)
+    assert res.objective[1] == res.objective[0]  # identity round
+    assert np.all(np.isfinite(res.objective))
+    assert res.objective[-1] < res.objective[0]  # later rounds still train
+
+
+@pytest.mark.slow
+def test_elastic_leave_reshards_membership(arrays):
+    """Master-scheduled retirement: the fleet shrinks at the round
+    boundary, the survivor keeps training on a NEW membership epoch
+    (re-sharded assignment), and the retired worker's id disappears."""
+    cfg = RuntimeConfig(n_workers=2, rounds=6, deadline_s=0.15, q_max=4,
+                        local_batch=8, seed=9, leave_schedule={3: (0,)})
+    res = AnytimeRuntime(_spec(), arrays, cfg).run()
+    assert res.members[2] == [0, 1]
+    assert all(m == [1] for m in res.members[3:])
+    assert any(e["event"] == "retire" and e["worker"] == 0 for e in res.events)
+    assert res.epochs[3] > res.epochs[2]  # membership change = new epoch
+    assert np.all(np.asarray(res.q[3:]).flatten() >= 0)
+    assert res.objective[-1] < res.objective[0]
+
+
+@pytest.mark.slow
+def test_external_cli_worker_joins(arrays):
+    """Elastic join via the CLI entrypoint: a worker launched with
+    `python -m repro.launch.worker --address ... --authkey ...` is
+    admitted and contributes from its first full round."""
+    cfg = RuntimeConfig(n_workers=1, rounds=4, deadline_s=0.2, q_max=4,
+                        local_batch=8, seed=11)
+    rt = AnytimeRuntime(_spec(), arrays, cfg)
+    rt.start()
+    proc = None
+    try:
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.worker",
+             "--address", str(rt.address), "--authkey", rt.authkey.hex()],
+            env={**os.environ, "PYTHONPATH": _SRC})
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 90:
+            rt._pump_pending()
+            if any(h.ready for h in rt._pending):
+                break
+            time.sleep(0.05)
+        else:
+            pytest.fail("external worker never became ready")
+        res = rt.run()
+    finally:
+        if proc is not None:
+            proc.terminate()
+            proc.wait(timeout=10)
+    assert res.members[0] == [0, 1]
+    assert any(e["event"] == "join" and e["worker"] == 1 for e in res.events)
+    assert np.asarray(res.q).sum() > 0
+
+
+@pytest.mark.slow
+def test_runtime_checkpoint_resume(arrays, tmp_path):
+    """Crash recovery: a run checkpointing every 2 rounds resumes from its
+    newest save into a NEW membership epoch and finishes the budget."""
+    cfg = RuntimeConfig(n_workers=2, rounds=4, deadline_s=0.15, q_max=4,
+                        local_batch=8, seed=13,
+                        ckpt_dir=str(tmp_path / "rt"), ckpt_every=2)
+    first = AnytimeRuntime(_spec(), arrays, cfg).run()
+    assert np.all(np.isfinite(first.objective))
+    cfg2 = RuntimeConfig(n_workers=2, rounds=6, deadline_s=0.15, q_max=4,
+                         local_batch=8, seed=13,
+                         ckpt_dir=str(tmp_path / "rt"), ckpt_every=2)
+    rt2 = AnytimeRuntime(_spec(), arrays, cfg2, resume=True)
+    assert rt2.start_round == 4
+    np.testing.assert_allclose(rt2.x, first.x_final, atol=1e-7)
+    res2 = rt2.run()
+    assert res2.start_round == 4 and len(res2.q) == 2
+    assert res2.epochs[0] > first.epochs[-1]
+    assert res2.objective[-1] <= first.objective[0]
+
+
+def test_q_matrix_rejects_ragged_membership(arrays):
+    from repro.core.runtime import RuntimeResult
+
+    res = RuntimeResult(
+        x0=np.zeros(D), x_final=np.zeros(D), opt_final=np.zeros(0),
+        losses=np.zeros(2), objective=np.zeros(2), round_wall_s=np.zeros(2),
+        wall_clock_s=np.zeros(2), q=[np.zeros(2, np.int64), np.zeros(1, np.int64)],
+        members=[[0, 1], [1]], index_plans=[], epochs=[0, 1], events=[])
+    with pytest.raises(ValueError, match="membership changed"):
+        res.q_matrix()

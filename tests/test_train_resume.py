@@ -45,10 +45,62 @@ def test_killed_run_resumes_bit_identical(tmp_path, optimizer):
         assert part[r] == full[r], (r, part[r], full[r])  # bitwise
 
 
-def test_resume_with_no_checkpoint_starts_fresh(tmp_path):
+_LAYOUTS = {
+    "arena": [],
+    "tree": ["--layout", "tree"],
+}
+
+
+@pytest.mark.parametrize("layout", sorted(_LAYOUTS), ids=sorted(_LAYOUTS))
+def test_resume_with_no_checkpoint_starts_fresh(tmp_path, layout, capsys):
+    """--resume against an EMPTY checkpoint dir starts fresh with a notice
+    (never raises) — in both engine state layouts."""
     d = tmp_path / "empty"
     m = tmp_path / "m.jsonl"
-    main(_BASE + ["--optimizer", "sgd", "--rounds", "2",
-                  "--checkpoint-dir", str(d), "--resume",
-                  "--metrics-file", str(m)])
+    main(_BASE + _LAYOUTS[layout] + ["--optimizer", "sgd", "--rounds", "2",
+                                     "--checkpoint-dir", str(d), "--resume",
+                                     "--metrics-file", str(m)])
     assert sorted(_losses(m)) == [0, 1]
+    assert "starting fresh" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("layout", sorted(_LAYOUTS), ids=sorted(_LAYOUTS))
+def test_resume_with_missing_dir_starts_fresh(tmp_path, layout, capsys):
+    """--resume with a checkpoint dir that does not exist yet (first launch
+    of a crash-looped job) is also a fresh run with a notice."""
+    d = tmp_path / "never" / "created"
+    m = tmp_path / "m.jsonl"
+    main(_BASE + _LAYOUTS[layout] + ["--optimizer", "sgd", "--rounds", "2",
+                                     "--checkpoint-dir", str(d), "--resume",
+                                     "--metrics-file", str(m)])
+    assert sorted(_losses(m)) == [0, 1]
+    assert "starting fresh" in capsys.readouterr().out
+
+
+def test_resume_without_ckpt_dir_notices(capsys):
+    main(_BASE + ["--optimizer", "sgd", "--rounds", "1", "--resume"])
+    assert "starting fresh" in capsys.readouterr().out
+
+
+def test_resume_skips_corrupt_newest_checkpoint(tmp_path):
+    """A checkpoint truncated by a mid-save kill must fall back to the
+    previous complete save with a warning — the trajectory then continues
+    from the older round instead of crashing (ISSUE 7 satellite)."""
+    base = _BASE + ["--optimizer", "sgd"]
+    d = tmp_path / "ckpt"
+    m = tmp_path / "m.jsonl"
+    # two saves: the 4-round run checkpoints at round 4, the resumed
+    # 8-round run adds round 8 — leaving steps {4, 8} on disk
+    main(base + ["--rounds", "4", "--checkpoint-dir", str(d)])
+    main(base + ["--rounds", "8", "--checkpoint-dir", str(d), "--resume"])
+    resume_dir = d / "resume"
+    ckpts = sorted(resume_dir.glob("step_*.ckpt"))
+    assert len(ckpts) >= 2, ckpts
+    # truncate the NEWEST checkpoint: the torn-write state of a dead writer
+    newest = ckpts[-1]
+    newest.write_bytes(newest.read_bytes()[: 100])
+    with pytest.warns(RuntimeWarning, match="skipping unreadable"):
+        main(base + ["--rounds", "8", "--checkpoint-dir", str(d),
+                     "--resume", "--metrics-file", str(m)])
+    rounds = sorted(_losses(m))
+    assert rounds and rounds[0] < 8 and rounds[-1] == 7, rounds
