@@ -16,6 +16,7 @@
   window_opt  autotuned bf16 stateful-optimizer window (BENCH_window_opt.json)
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
   runtime  real multi-process fleet vs simulated oracle (BENCH_runtime.json)
+  serve    paged anytime scheduler vs dense slot path  (BENCH_serve.json)
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
 figure's headline number where a wall-time makes no sense).  With
@@ -63,6 +64,7 @@ def main() -> None:
         lm_ablation,
         roofline_bench,
         runtime_bench,
+        serve_bench,
         sweep_bench,
         tree_bench,
         variance_decay,
@@ -86,6 +88,7 @@ def main() -> None:
         "window_opt": window_opt_bench.run,
         "roofline": roofline_bench.run,
         "runtime": runtime_bench.run,
+        "serve": serve_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,32 @@
+"""Serving bench: paged anytime scheduler vs dense slot scheduler.
+
+Replays the synthetic Poisson trace through `repro.launch.serve --trace`
+at a reduced config and long-context capacity, emitting BENCH_serve.json
+(tok/s, p50/p99 per-token latency, deadline-miss rate, prefix-cache hit
+rate; paged vs dense-reference ablation — DESIGN.md §12).
+"""
+from __future__ import annotations
+
+
+def run(capacity: int = 2048, n_requests: int = 10, gen: int = 6):
+    from repro.launch import serve
+
+    bench = serve.main([
+        "--arch", "qwen2_0_5b", "--reduced", "--trace",
+        "--n-requests", str(n_requests), "--capacity", str(capacity),
+        "--batch", "4", "--gen", str(gen), "--out", "BENCH_serve.json",
+    ])
+    rows = []
+    for name in ("paged", "dense"):
+        r = bench[name]
+        rows.append((
+            f"serve_{name}_tok_s", f"{r['tok_s']:.1f}",
+            f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms "
+            f"miss={r['deadline_miss_rate']:.2f}",
+        ))
+    rows.append((
+        "serve_speedup", f"{bench['speedup']:.2f}",
+        f"paged vs dense tok/s @cap={capacity} "
+        f"prefix_hit={bench['paged'].get('prefix_hit_rate', 0):.2f}",
+    ))
+    return rows

@@ -17,6 +17,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref  # noqa: F401  (oracles re-exported for tests)
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+    paged_decode_ref as _paged_decode_ref,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
 from repro.kernels.moe_gemm import moe_gemm as _moe_gemm_pallas
@@ -106,6 +110,27 @@ def decode_attention(
     interpret: bool = False,
 ) -> jax.Array:
     out = _decode_pallas(q[:, 0], k_cache, v_cache, valid, interpret=interpret)
+    return out[:, None]  # [B, 1, H, Dh]
+
+
+def paged_decode_attention(
+    q: jax.Array,  # [B, 1, H, Dh]  (model layout)
+    k_pool: jax.Array,  # [NB, BS, Hkv, Dh]  shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # [B, NBLK] int32
+    seq_lens: jax.Array,  # [B] int32
+    qmap: jax.Array,  # [H] int32 q->kv head map
+    impl: str = "pallas",
+) -> jax.Array:
+    """Block-table decode attention. impl: 'pallas' | 'pallas_interpret' | 'xla'
+    ('xla' runs the gather-based jnp oracle — the CPU production path)."""
+    if impl.startswith("pallas"):
+        out = _paged_decode_pallas(
+            q[:, 0], k_pool, v_pool, block_tables, seq_lens, qmap,
+            interpret=impl == "pallas_interpret",
+        )
+    else:
+        out = _paged_decode_ref(q[:, 0], k_pool, v_pool, block_tables, seq_lens, qmap)
     return out[:, None]  # [B, 1, H, Dh]
 
 

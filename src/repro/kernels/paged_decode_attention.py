@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: paged single-token decode attention over a block pool.
+
+The block-table-aware variant of `decode_attention`: K/V live in a SHARED
+pool of fixed-size blocks ([NB, BS, Hkv, Dh]) and each sequence names its
+blocks through a per-sequence table ([B, NBLK] int32).  The table, the
+per-sequence fill levels and the GQA q->kv head map ride scalar prefetch,
+so the BlockSpec index maps themselves perform the gather: grid step
+(b, h, j) DMAs physical block `table[b, j]`, head `qmap[h]` — the kernel
+touches exactly the cache bytes the batch actually owns, never the dense
+[B, C] rectangle.  Online softmax is unchanged from the dense kernel;
+scratch (m, l, acc) persists across the minor block dimension.
+
+Masking: key position j*BS + t is valid iff < seq_lens[b].  Logical blocks
+past a sequence's fill level point at physical block 0 — the reserved null
+block no live sequence owns — so out-of-range gathers are safe as well as
+masked.  seq_lens[b] == 0 (an idle batch row) produces a zero output row
+via the l > 0 guard.
+
+`paged_decode_ref` is the pure-jnp oracle (also the CPU production path:
+it gathers only the table's blocks, so its cost scales with the bucketed
+context length, not the pool capacity).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    tbl_ref, len_ref, qmap_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, bs, n_blk,
+):
+    ib = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [1, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [BS, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    ok = pos < len_ref[ib]  # [BS]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)[0] * scale
+    s = jnp.where(ok, s, NEG_INF)  # [BS]
+    m_prev = m_scr[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    # explicit mask (not just the NEG_INF bias): an all-masked block has
+    # m_new == NEG_INF and exp(s - m_new) == 1, which would count dead keys
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_scr[0] * alpha + jnp.sum(p)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p[None, :], v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[0] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _finalize():
+        l = l_scr[0]
+        o_ref[0] = (acc_scr[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jax.Array,  # [B, H, Dh]
+    k_pool: jax.Array,  # [NB, BS, Hkv, Dh]  shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # [B, NBLK] int32 — physical block per logical slot
+    seq_lens: jax.Array,  # [B] int32 — valid positions per sequence
+    qmap: jax.Array,  # [H] int32 — q head -> kv head (GQA grouping)
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token attention through the block table. Returns [B, H, Dh]."""
+    b, h, dh = q.shape
+    _, bs, _, _ = k_pool.shape
+    n_blk = block_tables.shape[1]
+    tbl = block_tables.astype(jnp.int32)
+    lens = seq_lens.astype(jnp.int32)
+    qm = qmap.astype(jnp.int32)
+    kernel = functools.partial(
+        _paged_kernel, scale=1.0 / math.sqrt(dh), bs=bs, n_blk=n_blk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda ib, ih, j, tbl, ln, qm: (ib, ih, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda ib, ih, j, tbl, ln, qm: (tbl[ib, j], 0, qm[ih], 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda ib, ih, j, tbl, ln, qm: (tbl[ib, j], 0, qm[ih], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda ib, ih, j, tbl, ln, qm: (ib, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, qm, q, k_pool, v_pool)
+
+
+def paged_decode_ref(
+    q: jax.Array,  # [B, H, Dh]
+    k_pool: jax.Array,  # [NB, BS, Hkv, Dh]
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # [B, NBLK]
+    seq_lens: jax.Array,  # [B]
+    qmap: jax.Array,  # [H]
+) -> jax.Array:
+    """jnp oracle: gather the table's blocks, mask, softmax. [B, H, Dh]."""
+    b, h, dh = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    n_blk = block_tables.shape[1]
+    c = n_blk * bs
+    k = jnp.take(k_pool, block_tables.reshape(-1), axis=0).reshape(b, c, hkv, dh)
+    v = jnp.take(v_pool, block_tables.reshape(-1), axis=0).reshape(b, c, hkv, dh)
+    k = jnp.take(k, qmap, axis=2)  # [B, C, H, Dh]
+    v = jnp.take(v, qmap, axis=2)
+    valid = jnp.arange(c)[None, :] < seq_lens[:, None]  # [B, C]
+    logits = jnp.einsum(
+        "bhd,bchd->bhc", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(dh)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.where(l > 0, l, 1.0)
+    out = jnp.einsum("bhc,bchd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,19 +1,33 @@
-"""Continuous-batching decode scheduler (static shapes, slot-based).
+"""Continuous-batching decode schedulers (static shapes).
 
-vLLM-lite for the attention-cache families: a fixed pool of `n_slots`
-sequences decodes in lockstep with PER-SLOT positions (decode_step accepts
-int32[B] positions); finished sequences free their slot, waiting requests
-join mid-flight via a single-slot bulk prefill written into the shared
-cache.  All shapes are static, so the jitted decode step never recompiles
-as requests come and go — the property that makes this deployable on TPU.
+Two schedulers share the Request/Finished API:
 
-Recurrent-state families (ssm/hybrid/encdec) need per-slot state swap-in,
-which the same slot mechanism supports via the generic pytree writes; their
-prefill is sequential (see models.prefill).
+`DecodeScheduler` — the slot-based fallback: a fixed pool of `n_slots`
+sequences decodes in lockstep with PER-SLOT positions; finished sequences
+free their slot, waiting requests join mid-flight via a single-slot bulk
+prefill spliced into the shared cache.  Covers every family (including the
+recurrent ssm/hybrid state and encdec cross memory).
+
+`PagedScheduler` — the anytime serving path (DESIGN.md §12) for the
+attention-cache families: K/V live in a shared block pool managed by
+`BlockManager` (prefix sharing, LRU retention); admission prefills write
+DIRECTLY into pool blocks in fixed-size chunks interleaved with decode
+ticks; every tick runs under a wall-clock deadline — decode first (the
+running batch ships a token every tick), then at least one prefill chunk,
+then more chunks only while the deadline allows.  That is the paper's
+fixed-time/observed-q discipline applied to serving: the tick combines
+whatever work completed instead of stalling the batch on its slowest
+admission.
+
+All device shapes are static per (bucket, chunk) pair — block tables are
+bucketed to powers of two — so the jitted steps settle into a handful of
+traces and never recompile as requests come and go.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -22,7 +36,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.models.kvcache import init_cache
+from repro.models.kvcache import BlockManager, SeqBlocks, init_cache, init_paged_pool
 
 PyTree = Any
 
@@ -82,6 +96,11 @@ class DecodeScheduler:
             lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
         self._prefill1 = jax.jit(
             lambda p, tk, c: M.prefill_bulk(p, cfg, tk, c))
+        # ONE B=1 admission cache reused across admissions: prefill_bulk
+        # overwrites positions [0, S) and decode masks everything past the
+        # slot's position, so stale rows from a previous admission are
+        # never read — no per-request init_cache allocation
+        self._admit_cache = init_cache(cfg, 1, max_len)
 
     # ---- client API ----
     def submit(self, req: Request):
@@ -97,10 +116,11 @@ class DecodeScheduler:
                 break
             req = self.queue.pop(0)
             s = len(req.prompt)
-            # single-slot prefill into a fresh B=1 cache, then splice in
-            c1 = init_cache(self.cfg, 1, self.max_len)
-            logits, c1 = self._prefill1(self.params, jnp.asarray(req.prompt[None]), c1)
-            self.cache = _write_slot(self.cache, c1, int(slot))
+            # single-slot prefill into the reusable B=1 cache, then splice in
+            logits, self._admit_cache = self._prefill1(
+                self.params, jnp.asarray(req.prompt[None]), self._admit_cache
+            )
+            self.cache = _write_slot(self.cache, self._admit_cache, int(slot))
             tok = int(jnp.argmax(logits[0, : self.cfg.vocab]))
             self.positions[slot] = s
             self.remaining[slot] = req.max_new
@@ -133,4 +153,194 @@ class DecodeScheduler:
             if self.idle():
                 break
             self.step()
+        return {f.rid: f.tokens for f in self.finished}
+
+
+# ==========================================================================
+# Paged anytime scheduler (DESIGN.md §12)
+# ==========================================================================
+# module-level jits with cfg static: the trace cache is shared across
+# scheduler instances (the serve bench builds several schedulers per run)
+_paged_step_jit = jax.jit(M.paged_step, static_argnums=(1,))
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (min 1): block tables are padded to bucket
+    widths so attention cost follows the ACTUAL context length while the
+    jit trace count stays logarithmic in capacity."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class _Seq:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    sb: SeqBlocks
+    prefilled: int  # prompt tokens whose K/V is pool-resident
+    out: list
+    last_tok: int = 0
+    n_ctx: int = 0  # tokens in context = prompt + generated
+
+    @property
+    def decoding(self) -> bool:
+        return self.prefilled >= len(self.prompt)
+
+
+class PagedScheduler:
+    """Anytime continuous batching over the shared block pool.
+
+    Each `tick()` runs under `deadline_ms` of wall clock:
+
+      1. admit  — host-side only: claim pool blocks (prefix-sharing) for
+                  queued requests while capacity and decode rows allow
+      2. decode — ONE paged step for every decoding sequence; the running
+                  batch ships a token every tick, unconditionally
+      3. prefill — chunks of `chunk_tokens` written straight into pool
+                  blocks; at least one chunk per tick (progress guarantee),
+                  further chunks only while the deadline has room
+
+    A long prompt therefore costs the running batch at most one chunk of
+    latency per tick — it can never stall in-flight decodes, which is the
+    paper's fixed-time discipline: combine what finished, don't wait.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, n_slots: int,
+                 n_blocks: int, block_size: int = 16, chunk_tokens: int = 32,
+                 deadline_ms: float = 50.0):
+        assert M.paged_supported(cfg), f"paged scheduler unsupported for {cfg.name}"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.chunk_tokens = chunk_tokens
+        self.deadline_s = deadline_ms / 1e3
+        self.pool = init_paged_pool(cfg, n_blocks, block_size)
+        self.bm = BlockManager(n_blocks, block_size)
+        self.active: list[_Seq] = []
+        self.queue: list[Request] = []
+        self.finished: list[Finished] = []
+        self.ticks = 0
+        self.deadline_misses = 0
+        self.tokens_out = 0
+
+    # ---- client API ----
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def stats(self) -> dict:
+        s = self.bm.stats()
+        s.update(ticks=self.ticks, deadline_misses=self.deadline_misses,
+                 tokens_out=self.tokens_out)
+        return s
+
+    # ---- internals ----
+    def _admit(self):
+        while self.queue and len(self.active) < self.n_slots:
+            req = self.queue[0]
+            sb = self.bm.admit_prompt([int(t) for t in req.prompt], req.max_new)
+            if sb is None:
+                break  # pool full: keep FIFO order, retry next tick
+            self.queue.pop(0)
+            s = len(req.prompt)
+            # replay at least the last prompt token: its logits seed decode
+            # even when the whole prompt was a prefix-cache hit
+            self.active.append(_Seq(
+                rid=req.rid, prompt=np.asarray(req.prompt, np.int32),
+                max_new=req.max_new, sb=sb,
+                prefilled=min(sb.reused_len, s - 1), out=[], n_ctx=s,
+            ))
+
+    def _tables(self, seqs: list[Optional[_Seq]], n_blk: int) -> jnp.ndarray:
+        t = np.zeros((len(seqs), n_blk), np.int32)  # 0 = null block
+        for i, sq in enumerate(seqs):
+            if sq is not None:
+                blks = sq.sb.blocks[:n_blk]  # early prefill chunks need only
+                t[i, : len(blks)] = blks  # the prefix of the table
+        return jnp.asarray(t)
+
+    def _decode_tick(self):
+        rows: list[Optional[_Seq]] = [None] * self.n_slots
+        for i, sq in enumerate([s for s in self.active if s.decoding][: self.n_slots]):
+            rows[i] = sq
+        if not any(sq is not None for sq in rows):
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.full((self.n_slots, 1), -1, np.int32)
+        for i, sq in enumerate(rows):
+            if sq is None:
+                continue
+            if sq.n_ctx // self.block_size >= len(sq.sb.blocks):
+                self.bm.append_block(sq.sb)  # infallible: reserved at admit
+            toks[i, 0] = sq.last_tok
+            pos[i, 0] = sq.n_ctx  # write slot of the incoming token
+        n_blk = _bucket(max(len(sq.sb.blocks) for sq in rows if sq is not None))
+        logits, self.pool = _paged_step_jit(
+            self.params, self.cfg, self.pool, self._tables(rows, n_blk),
+            jnp.asarray(toks), jnp.asarray(pos),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], -1), np.int32)
+        for i, sq in enumerate(rows):
+            if sq is None:
+                continue
+            sq.out.append(int(sq.last_tok))
+            sq.n_ctx += 1
+            sq.last_tok = int(nxt[i])
+            self.tokens_out += 1
+            if len(sq.out) >= sq.max_new:
+                self.bm.retire(sq.sb)
+                self.active.remove(sq)
+                self.finished.append(Finished(sq.rid, sq.out))
+
+    def _prefill_chunk(self, sq: _Seq):
+        s = len(sq.prompt)
+        c0 = sq.prefilled
+        c1 = min(c0 + self.chunk_tokens, s)
+        t = self.chunk_tokens
+        toks = np.zeros((1, t), np.int32)
+        pos = np.full((1, t), -1, np.int32)
+        wpos = np.full((1, t), -1, np.int32)
+        toks[0, : c1 - c0] = sq.prompt[c0:c1]
+        pos[0, : c1 - c0] = np.arange(c0, c1)
+        # suppress re-writes of prefix-shared (or replayed) positions
+        w = np.arange(c0, c1)
+        wpos[0, : c1 - c0] = np.where(w >= sq.sb.reused_len, w, -1)
+        n_blk = _bucket(self.bm.n_blocks_for(c1))
+        logits, self.pool = _paged_step_jit(
+            self.params, self.cfg, self.pool, self._tables([sq], n_blk),
+            jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(wpos),
+        )
+        sq.prefilled = c1
+        self.bm.mark_written(sq.sb, c1)
+        if c1 == s:  # prompt complete: last position's logits seed decode
+            sq.last_tok = int(jnp.argmax(logits[0, c1 - c0 - 1, : self.cfg.vocab]))
+
+    # ---- the anytime tick ----
+    def tick(self):
+        t0 = time.perf_counter()
+        self._admit()
+        self._decode_tick()
+        first = True
+        while True:
+            pending = [sq for sq in self.active if not sq.decoding]
+            if not pending:
+                break
+            if not first and time.perf_counter() - t0 >= self.deadline_s:
+                break
+            self._prefill_chunk(pending[0])
+            first = False
+        self.ticks += 1
+        if time.perf_counter() - t0 > self.deadline_s:
+            self.deadline_misses += 1
+
+    step = tick  # Request/Finished API parity with DecodeScheduler
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> dict[int, list]:
+        for _ in range(max_ticks):
+            if self.idle():
+                break
+            self.tick()
         return {f.rid: f.tokens for f in self.finished}

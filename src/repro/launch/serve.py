@@ -1,15 +1,27 @@
-"""Batched decode server driver.
+"""Batched decode server driver + anytime trace replay.
 
-Initializes (or restores) a model, prefills a batch of prompts, then
-decodes greedily with the ring/recurrent cache — the serve-side analogue of
-the dry-run's decode lowering, actually executed.
+Two modes:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+  batch (default) — initialize (or restore) a model, prefill a batch of
+  prompts, decode greedily with the ring/recurrent cache.  Token ids stay
+  on device during the timed loop (one host sync at the end) and the decode
+  step is warmed before timing so jit compile never lands in `t_gen`.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+          --reduced --batch 4 --prompt-len 32 --gen 16
+
+  --trace — replay a synthetic many-user Poisson arrival trace through the
+  paged anytime scheduler AND the dense slot scheduler (the ablation), and
+  emit BENCH_serve.json: tok/s, p50/p99 per-token latency, deadline-miss
+  rate and prefix-cache hit rate (DESIGN.md §12).
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+          --reduced --trace --n-requests 12 --capacity 2048
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -20,8 +32,153 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.models import model as M
 from repro.models.kvcache import init_cache
+from repro.launch.scheduler import DecodeScheduler, PagedScheduler, Request
 
 
+# ==========================================================================
+# Trace replay (the serving bench)
+# ==========================================================================
+def gen_trace(rng, n_requests: int, rate: float, vocab: int,
+              prompt_lens=(24, 48, 96), max_new: int = 8,
+              shared_prefix: int = 32, p_shared: float = 0.5):
+    """Synthetic many-user trace: Poisson arrivals, mixed prompt lengths,
+    and a shared system-prompt prefix on ~p_shared of requests (the prefix
+    cache's workload).  Returns [(arrival_s, Request)] sorted by arrival."""
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    prefix = rng.integers(0, vocab, shared_prefix).astype(np.int32)
+    trace = []
+    for i in range(n_requests):
+        s = int(rng.choice(prompt_lens))
+        body = rng.integers(0, vocab, s).astype(np.int32)
+        if rng.random() < p_shared:
+            n = min(shared_prefix, s)
+            body[:n] = prefix[:n]
+        trace.append((float(arrivals[i]), Request(i, body, max_new)))
+    return trace
+
+
+def _token_counts(sch) -> dict:
+    """rid -> tokens emitted so far (works for both scheduler types)."""
+    counts = {}
+    if isinstance(sch, PagedScheduler):
+        for sq in sch.active:
+            counts[sq.rid] = len(sq.out)
+    else:
+        for rid, toks in sch.out.items():
+            counts[rid] = len(toks)
+    for f in sch.finished:
+        counts[f.rid] = len(f.tokens)
+    return counts
+
+
+def replay(sch, trace, deadline_s: float, max_ticks: int = 200_000) -> dict:
+    """Drive one scheduler through the trace with wall-clock submission.
+
+    Per-token latency for token i of a request is the wall time from the
+    previous token (or arrival, for the first) to its emission — every tick
+    that stalls the running batch shows up in the tail.  The dense slot
+    scheduler has no internal deadline; its tick duration is measured
+    against the same budget so the miss rates are comparable.
+    """
+    pending = list(trace)
+    t0 = time.perf_counter()
+    arrival = {}
+    last_emit = {}
+    prev = {}
+    lats = []
+    ticks = 0
+    misses = 0
+    while pending or not sch.idle():
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            _, req = pending.pop(0)
+            arrival[req.rid] = now
+            sch.submit(req)
+        if sch.idle():
+            time.sleep(min(pending[0][0] - now, 1e-3))
+            continue
+        ts = time.perf_counter()
+        sch.step()
+        te = time.perf_counter()
+        ticks += 1
+        if te - ts > deadline_s:
+            misses += 1
+        now = te - t0
+        for rid, n in _token_counts(sch).items():
+            for _ in range(n - prev.get(rid, 0)):
+                lats.append(now - last_emit.get(rid, arrival[rid]))
+                last_emit[rid] = now
+            prev[rid] = n
+        if ticks >= max_ticks:
+            break
+    total = time.perf_counter() - t0
+    n_tok = sum(prev.values())
+    lats_ms = np.asarray(lats) * 1e3
+    out = {
+        "tok_s": n_tok / max(total, 1e-9),
+        "total_s": total,
+        "tokens": n_tok,
+        "p50_ms": float(np.percentile(lats_ms, 50)) if len(lats_ms) else 0.0,
+        "p99_ms": float(np.percentile(lats_ms, 99)) if len(lats_ms) else 0.0,
+        "deadline_miss_rate": misses / max(ticks, 1),
+        "ticks": ticks,
+    }
+    if isinstance(sch, PagedScheduler):
+        st = sch.stats()
+        out["prefix_hit_rate"] = st["hit_rate"]
+        out["evictions"] = st["evictions"]
+    return out
+
+
+def run_trace(cfg, params, args) -> dict:
+    rng = np.random.default_rng(args.seed + 1)
+    max_new = args.gen
+    trace = gen_trace(rng, args.n_requests, args.rate, cfg.vocab,
+                      max_new=max_new)
+    deadline_s = args.deadline_ms / 1e3
+    n_blocks = args.batch * (args.capacity // args.block_size) + 1
+
+    def paged():
+        return PagedScheduler(cfg, params, n_slots=args.batch,
+                              n_blocks=n_blocks, block_size=args.block_size,
+                              chunk_tokens=args.chunk,
+                              deadline_ms=args.deadline_ms)
+
+    def dense():
+        return DecodeScheduler(cfg, params, n_slots=args.batch,
+                               max_len=args.capacity)
+
+    results = {}
+    for name, mk in (("paged", paged), ("dense", dense)):
+        replay(mk(), trace, deadline_s)  # warmup pass: jit compiles land here
+        results[name] = replay(mk(), trace, deadline_s)
+        print(f"[serve:trace] {name:5s} {results[name]['tok_s']:8.1f} tok/s  "
+              f"p50 {results[name]['p50_ms']:7.1f}ms  "
+              f"p99 {results[name]['p99_ms']:7.1f}ms  "
+              f"miss {results[name]['deadline_miss_rate']:.2f}")
+    bench = {
+        "bench": "serve",
+        "config": {
+            "arch": cfg.name, "capacity": args.capacity,
+            "n_requests": args.n_requests, "rate": args.rate,
+            "batch": args.batch, "gen": max_new,
+            "block_size": args.block_size, "chunk": args.chunk,
+            "deadline_ms": args.deadline_ms,
+            "kernel_impl": cfg.kernel_impl,
+        },
+        "paged": results["paged"],
+        "dense": results["dense"],
+        "speedup": results["paged"]["tok_s"] / max(results["dense"]["tok_s"], 1e-9),
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"[serve:trace] paged/dense speedup {bench['speedup']:.2f}x -> {args.out}")
+    return bench
+
+
+# ==========================================================================
+# Batch mode
+# ==========================================================================
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -32,6 +189,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # trace replay mode
+    ap.add_argument("--trace", action="store_true",
+                    help="replay a Poisson arrival trace, emit BENCH_serve.json")
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
+    ap.add_argument("--capacity", type=int, default=2048)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,6 +211,9 @@ def main(argv=None):
         state, step = mgr.restore({"params": params})
         params = state["params"]
         print(f"[serve] restored step {step}")
+
+    if args.trace:
+        return run_trace(cfg, params, args)
 
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
@@ -73,13 +243,17 @@ def main(argv=None):
     jax.block_until_ready(logits)  # async dispatch: wait before timing
     t_prefill = time.time() - t0
 
-    out = []
     logits = logits if logits.ndim == 2 else logits[:, -1]
     tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
     tok = tok[:, None] if tok.ndim == 1 else tok
+    # warm the decode step OUTSIDE the timed region (compile-once), then
+    # keep token ids on device through the loop — one host sync at the end
+    warm_logits, _ = step_fn(params, cache, tok, jnp.int32(args.prompt_len))
+    jax.block_until_ready(warm_logits)
+    out = []
     t0 = time.time()
     for g in range(args.gen):
-        out.append(np.asarray(tok)[:, 0])
+        out.append(tok)
         logits, cache = step_fn(params, cache, tok, jnp.int32(args.prompt_len + g))
         if args.temperature > 0:
             key, sub = jax.random.split(key)
@@ -88,7 +262,7 @@ def main(argv=None):
             tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)[:, None]
     jax.block_until_ready(tok)
     t_gen = time.time() - t0
-    gen = np.stack(out, axis=1)
+    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
     prefill_tps = args.batch * args.prompt_len / max(t_prefill, 1e-9)
     decode_tps = args.batch * args.gen / max(t_gen, 1e-9)
     print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok/seq x{args.batch} "

@@ -211,6 +211,137 @@ def gqa_decode(
 
 
 # --------------------------------------------------------------------------
+# Paged attention (DESIGN.md §12): block-pool K/V, per-sequence tables
+# --------------------------------------------------------------------------
+def paged_write(
+    pool: jax.Array,  # [NB, BS, ...] shared physical blocks
+    new: jax.Array,  # [B, T, ...] per-token values
+    tables: jax.Array,  # [B, NBLK] int32
+    write_positions: jax.Array,  # [B, T] absolute position, -1 = suppress
+) -> jax.Array:
+    """Scatter token rows into their table-mapped pool slots.  Suppressed
+    writes (padding, or prefix tokens whose K/V is already pool-resident
+    via sharing) are routed to physical block 0 — the reserved null block —
+    so the write stays shape-static but touches nothing live."""
+    bs = pool.shape[1]
+    valid = write_positions >= 0
+    pos = jnp.maximum(write_positions, 0)
+    blk = jnp.take_along_axis(tables, pos // bs, axis=1)  # [B, T]
+    blk = jnp.where(valid, blk, 0)
+    off = jnp.where(valid, pos % bs, 0)
+    flat = new.reshape((-1,) + new.shape[2:]).astype(pool.dtype)
+    return pool.at[blk.reshape(-1), off.reshape(-1)].set(flat)
+
+
+def _gather_context(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """[NB, BS, ...] + [B, NBLK] -> [B, NBLK*BS, ...] logical context."""
+    b, n_blk = tables.shape
+    bs = pool.shape[1]
+    out = jnp.take(pool, tables.reshape(-1), axis=0)
+    return out.reshape((b, n_blk * bs) + pool.shape[2:])
+
+
+def gqa_paged(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, T, D]
+    k_pool: jax.Array,  # [NB, BS, Hkvp, Dh]
+    v_pool: jax.Array,
+    tables: jax.Array,  # [B, NBLK]
+    positions: jax.Array,  # [B, T] absolute token positions (-1 = padding)
+    write_positions: jax.Array,  # [B, T] like positions, -1 = suppress write
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Paged GQA step: project + rope, scatter K/V into pool blocks, attend
+    to the table's context.  T == 1 is the decode hot path (paged Pallas
+    kernel); T > 1 is a prefill chunk — each query attends to every pool
+    position <= its own (in-chunk causality included, since the chunk's own
+    K/V is written first).  Returns (out [B, T, D], (k_pool, v_pool))."""
+    b, t, _ = x.shape
+    hd = cfg.head_dim_
+    hp, _, qmap = resolve_heads(cfg)
+    rope_pos = jnp.maximum(positions, 0)
+    q = dense(x, lp["wq"], lp.get("bq")).reshape(b, t, hp, hd)
+    k = dense(x, lp["wk"], lp.get("bk")).reshape(b, t, -1, hd)
+    v = dense(x, lp["wv"], lp.get("bv")).reshape(b, t, -1, hd)
+    q = apply_rope(q, rope_pos, cfg.rope_theta)
+    k = apply_rope(k, rope_pos, cfg.rope_theta)
+    k_pool = paged_write(k_pool, k, tables, write_positions)
+    v_pool = paged_write(v_pool, v, tables, write_positions)
+    qmap_arr = jnp.asarray(qmap, jnp.int32)
+    if t == 1:
+        from repro.kernels import ops as kops
+
+        seq_lens = jnp.maximum(positions[:, 0] + 1, 0)  # -1 (idle row) -> 0
+        out = kops.paged_decode_attention(
+            q, k_pool, v_pool, tables, seq_lens, qmap_arr, impl=cfg.kernel_impl
+        )
+    else:
+        kc = expand_kv(_gather_context(k_pool, tables), qmap)  # [B, C, Hp, Dh]
+        vc = expand_kv(_gather_context(v_pool, tables), qmap)
+        c = kc.shape[1]
+        mask = jnp.arange(c)[None, None, :] <= positions[..., None]  # [B, T, C]
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
+        logits = jnp.where(mask[:, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhqk,bkhd->bqhd", probs.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    return dense(out.reshape(b, t, hp * hd), lp["wo"]), (k_pool, v_pool)
+
+
+def mla_paged(
+    lp: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, T, D]
+    ckv_pool: jax.Array,  # [NB, BS, kvr]
+    kr_pool: jax.Array,  # [NB, BS, dr]
+    tables: jax.Array,
+    positions: jax.Array,
+    write_positions: jax.Array,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Paged MLA step against the compressed latent pool (absorbed form of
+    `mla_decode` generalized to T queries): chunk latents are written into
+    pool blocks first, then every query attends to all latents at positions
+    <= its own — one code path for decode ticks and prefill chunks."""
+    m, hp, dn, dr, dv = _mla_dims(cfg)
+    b, t, _ = x.shape
+    kvr = m.kv_lora_rank
+    rope_pos = jnp.maximum(positions, 0)
+    qin = dense(x, lp["wdq"]) if "wdq" in lp else x
+    q = dense(qin, lp["wuq"]).reshape(b, t, hp, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, rope_pos, cfg.rope_theta)
+    ckv_new = dense(x, lp["wdkv"])  # [B, T, kvr]
+    kr_new = apply_rope(
+        dense(x, lp["wkr"]).reshape(b, t, 1, dr), rope_pos, cfg.rope_theta
+    )[:, :, 0]
+    ckv_pool = paged_write(ckv_pool, ckv_new, tables, write_positions)
+    kr_pool = paged_write(kr_pool, kr_new, tables, write_positions)
+    ckv_c = _gather_context(ckv_pool, tables).astype(jnp.float32)  # [B, C, kvr]
+    kr_c = _gather_context(kr_pool, tables).astype(jnp.float32)
+    c = ckv_c.shape[1]
+    wukv = lp["wukv"].reshape(kvr, hp, dn + dv)
+    wuk, wuv = wukv[..., :dn], wukv[..., dn:]
+    # f32 absorbed math, as in mla_decode
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wuk.astype(jnp.float32))
+    logits = (
+        jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_c)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), kr_c)
+    ) / math.sqrt(dn + dr)
+    mask = jnp.arange(c)[None, None, :] <= positions[..., None]  # [B, T, C]
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, ckv_c)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv.astype(jnp.float32)).astype(x.dtype)
+    out = out * head_mask(hp, cfg.n_heads, out.dtype)
+    return dense(out.reshape(b, t, hp * dv), lp["wo"]), (ckv_pool, kr_pool)
+
+
+# --------------------------------------------------------------------------
 # MLA — Multi-head Latent Attention (DeepSeek-V2, MiniCPM3)
 # --------------------------------------------------------------------------
 def _mla_dims(cfg: ModelConfig):

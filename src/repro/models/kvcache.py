@@ -16,8 +16,10 @@ Families:
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Any
+from collections import OrderedDict
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -151,3 +153,214 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
         name: jax.ShapeDtypeStruct(shape, _state_dtype(cfg, name))
         for name, shape in cache_shapes(cfg, batch, seq_len).items()
     }
+
+
+# ==========================================================================
+# Paged KV cache (DESIGN.md §12): shared block pool + per-sequence tables
+# ==========================================================================
+def paged_supported(cfg: ModelConfig) -> bool:
+    """The paged path covers the pure attention-cache families: per-token
+    state is exactly a KV (or MLA latent) row, so it slots into fixed-size
+    blocks.  Recurrent state (ssm/hybrid), cross-attention memory (encdec),
+    ring semantics (sliding) and the int8 ring stay on the slot path."""
+    return (
+        cfg.family in ("dense", "vlm", "moe")
+        and cfg.attn in ("full", "mla")
+        and not cfg.force_sliding
+        and not cfg.kv_quant
+    )
+
+
+def paged_pool_shapes(cfg: ModelConfig, n_blocks: int, block_size: int) -> dict[str, tuple]:
+    """Pool leaves carry [L, NB, BS, ...]: a leading layer axis for the
+    decode scan, then the shared physical-block axis.  Block 0 is reserved
+    as the null block (padding writes land there; no sequence owns it)."""
+    assert paged_supported(cfg), f"no paged layout for {cfg.name}"
+    l = cfg.n_layers
+    if cfg.attn == "mla":
+        m = cfg.mla
+        return {
+            "ckv": (l, n_blocks, block_size, m.kv_lora_rank),
+            "kr": (l, n_blocks, block_size, m.qk_rope_head_dim),
+        }
+    _, hkvp, _ = resolve_heads(cfg)
+    hd = cfg.head_dim_
+    return {
+        "k": (l, n_blocks, block_size, hkvp, hd),
+        "v": (l, n_blocks, block_size, hkvp, hd),
+    }
+
+
+def init_paged_pool(cfg: ModelConfig, n_blocks: int, block_size: int) -> PyTree:
+    return {
+        name: jnp.zeros(shape, _state_dtype(cfg, name))
+        for name, shape in paged_pool_shapes(cfg, n_blocks, block_size).items()
+    }
+
+
+@dataclasses.dataclass
+class SeqBlocks:
+    """One sequence's view of the pool: its table plus accounting the
+    manager needs to retire it (which blocks carry prefix hashes, how many
+    decode-growth blocks are still reserved, how much prefix was reused)."""
+
+    blocks: list[int]
+    hashed: list[bool]  # parallel to blocks: registered in the prefix map?
+    reserved: int  # decode-growth blocks pre-reserved at admission
+    reused_len: int  # leading tokens whose K/V already sit in the pool
+
+
+class BlockManager:
+    """Host-side allocator for the paged pool (DESIGN.md §12).
+
+    - blocks are refcounted: prefix sharing bumps refs, retire drops them
+    - FULL prompt blocks are content-addressed by a chain hash
+      h_i = hash((h_{i-1}, tokens_i)) so a map hit implies the entire
+      prefix matches — reuse is contiguous-from-the-start by construction
+    - retired hashed blocks with refcount 0 are RETAINED in an LRU (the
+      prefix cache); under pool pressure the oldest is evicted back to the
+      free list
+    - admission reserves the sequence's worst-case decode-growth blocks up
+      front, so `append_block` during decode can never fail mid-flight
+    - a freshly allocated hashed block is `pending` until its K/V is
+      actually written (chunked prefill interleaves with admissions);
+      pending blocks are never reused
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks >= 2, "need at least the null block + one real block"
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(n_blocks - 1, 0, -1))  # pop() -> 1, 2, ...
+        self._ref: dict[int, int] = {}
+        self._hash2blk: dict[int, int] = {}
+        self._blk2hash: dict[int, int] = {}
+        self._lru: OrderedDict[int, None] = OrderedDict()  # ref==0, hashed, evictable
+        self._pending: set[int] = set()
+        self._reserved = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ---- capacity ----
+    def available(self) -> int:
+        """Blocks an admission may claim (free + evictable − reserved)."""
+        return len(self._free) + len(self._lru) - self._reserved
+
+    def n_blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def _take(self) -> int:
+        if self._free:
+            return self._free.pop()
+        blk, _ = self._lru.popitem(last=False)  # oldest cached block
+        h = self._blk2hash.pop(blk)
+        del self._hash2blk[h]
+        self.evictions += 1
+        return blk
+
+    # ---- admission ----
+    def admit_prompt(self, tokens, max_new: int) -> Optional[SeqBlocks]:
+        """Build the block table for a prompt, sharing full prefix blocks.
+
+        Returns None (state unchanged) when the pool cannot cover the
+        request's worst case (prompt + max_new tokens) — the caller keeps
+        the request queued.  `reused_len` tokens at the front already have
+        K/V in the pool and need no prefill compute.
+        """
+        bs = self.block_size
+        n_prompt = len(tokens)
+        total = self.n_blocks_for(n_prompt + max_new)
+        # conservative gate: a fully-missing prompt still has to fit
+        if total > self.available():
+            return None
+        blocks: list[int] = []
+        hashed: list[bool] = []
+        chain = 0
+        reusing = True
+        reused = 0
+        for i in range(n_prompt // bs):  # full blocks only
+            chunk = tuple(int(t) for t in tokens[i * bs : (i + 1) * bs])
+            chain = hash((chain, chunk))
+            blk = self._hash2blk.get(chain)
+            if reusing and blk is not None and blk not in self._pending:
+                if blk in self._lru:
+                    del self._lru[blk]
+                    self._ref[blk] = 1
+                else:
+                    self._ref[blk] += 1
+                blocks.append(blk)
+                hashed.append(True)
+                reused += bs
+                self.hits += 1
+                continue
+            reusing = False
+            self.misses += 1
+            nb = self._take()
+            self._ref[nb] = 1
+            blocks.append(nb)
+            if chain not in self._hash2blk:
+                self._hash2blk[chain] = nb
+                self._blk2hash[nb] = chain
+                self._pending.add(nb)
+                hashed.append(True)
+            else:
+                hashed.append(False)  # another writer owns this chain hash
+        if n_prompt % bs:
+            nb = self._take()  # partial tail block: never shared
+            self._ref[nb] = 1
+            blocks.append(nb)
+            hashed.append(False)
+        growth = total - len(blocks)
+        self._reserved += growth
+        return SeqBlocks(blocks=blocks, hashed=hashed, reserved=growth,
+                         reused_len=reused)
+
+    # ---- lifecycle ----
+    def append_block(self, sb: SeqBlocks) -> int:
+        """Decode-growth allocation — infallible, backed by the reservation."""
+        assert sb.reserved > 0, "sequence outgrew its admission reservation"
+        self._reserved -= 1
+        sb.reserved -= 1
+        blk = self._take()
+        self._ref[blk] = 1
+        sb.blocks.append(blk)
+        sb.hashed.append(False)
+        return blk
+
+    def mark_written(self, sb: SeqBlocks, n_tokens_written: int) -> None:
+        """Clear `pending` on blocks whose K/V is now fully in the pool."""
+        for i in range(n_tokens_written // self.block_size):
+            if i < len(sb.blocks):
+                self._pending.discard(sb.blocks[i])
+
+    def retire(self, sb: SeqBlocks) -> None:
+        """Drop the sequence's refs; hashed blocks park in the prefix LRU."""
+        self._reserved -= sb.reserved
+        sb.reserved = 0
+        for blk, is_hashed in zip(sb.blocks, sb.hashed):
+            self._ref[blk] -= 1
+            if self._ref[blk] > 0:
+                continue
+            del self._ref[blk]
+            if is_hashed and blk in self._blk2hash and blk not in self._pending:
+                self._lru[blk] = None  # retained: future prompts may hit it
+            else:
+                self._pending.discard(blk)
+                if blk in self._blk2hash:
+                    del self._hash2blk[self._blk2hash.pop(blk)]
+                self._free.append(blk)
+        sb.blocks = []
+        sb.hashed = []
+
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "evictions": self.evictions,
+            "free": len(self._free),
+            "cached": len(self._lru),
+            "live": len(self._ref),
+        }

@@ -27,7 +27,12 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.kvcache import init_cache, resolve_heads  # noqa: F401  (re-export)
+from repro.models.kvcache import (  # noqa: F401  (re-export)
+    init_cache,
+    init_paged_pool,
+    paged_supported,
+    resolve_heads,
+)
 from repro.models.layers import (
     dense,
     embed_init,
@@ -555,6 +560,84 @@ def decode_step(
     head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
     logits = dense(x, head)[:, 0]
     return _mask_padded_vocab(logits, cfg), new_cache
+
+
+# ==========================================================================
+# Paged decode / chunked prefill (DESIGN.md §12)
+# ==========================================================================
+def _paged_block(cfg: ModelConfig, is_moe: bool, x, lp, pool_l: dict, tables, positions, write_positions):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.attn == "mla":
+        a, (ckv, kr) = attn_mod.mla_paged(
+            lp["attn"], cfg, h, pool_l["ckv"], pool_l["kr"], tables, positions, write_positions
+        )
+        new = {"ckv": ckv, "kr": kr}
+    else:
+        a, (k, v) = attn_mod.gqa_paged(
+            lp["attn"], cfg, h, pool_l["k"], pool_l["v"], tables, positions, write_positions
+        )
+        new = {"k": k, "v": v}
+    x = x + a
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(lp["ffn"], cfg, h2, is_moe)
+    return x + f, new
+
+
+def paged_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    pool: dict,  # {"k","v"} [L,NB,BS,Hkvp,Dh] or {"ckv","kr"} [L,NB,BS,r]
+    tables: jax.Array,  # [B, NBLK] int32 per-sequence block tables
+    tokens: jax.Array,  # [B, T]
+    positions: jax.Array,  # [B, T] absolute positions, -1 = padding/idle
+    write_positions: Optional[jax.Array] = None,  # -1 suppresses the pool write
+) -> tuple[jax.Array, dict]:
+    """ONE forward of T tokens per sequence against the shared block pool.
+
+    T == 1 is the decode tick (paged Pallas kernel per layer); T > 1 is a
+    prefill CHUNK — its K/V land in pool blocks first, then each query
+    attends to every pool position <= its own, so chunks of one prompt can
+    be interleaved with decode ticks of other sequences at will.
+    `write_positions` defaults to `positions`; pass -1 entries to replay a
+    token (e.g. the last token of a fully prefix-cached prompt, needed for
+    logits) without touching shared blocks.  Returns (logits [B,T,Vp], pool').
+    """
+    assert paged_supported(cfg), f"paged path unsupported for {cfg.name}"
+    if write_positions is None:
+        write_positions = positions
+    x = jnp.take(params["embed"], tokens, axis=0)  # [B,T,D]
+    is_moe = cfg.family == "moe"
+    pool = dict(pool)
+    if "dense0" in params:
+        n_dense = jax.tree.leaves(params["dense0"])[0].shape[0]
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        head_pool = {k2: v[:n_dense] for k2, v in pool.items()}
+        for j in range(n_dense):
+            lp_j = jax.tree.map(lambda a: a[j], params["dense0"])
+            pl_j = {k2: v[j] for k2, v in head_pool.items()}
+            x, pl2 = _paged_block(dense_cfg, False, x, lp_j, pl_j, tables, positions, write_positions)
+            head_pool = {k2: head_pool[k2].at[j].set(pl2[k2]) for k2 in head_pool}
+        main_pool = {k2: v[n_dense:] for k2, v in pool.items()}
+    else:
+        n_dense = 0
+        main_pool = pool
+
+    def body(carry, scan_in):
+        lp, pl_l = scan_in
+        y, pl2 = _paged_block(cfg, is_moe, carry, lp, pl_l, tables, positions, write_positions)
+        return y, pl2
+
+    x, new_main = jax.lax.scan(body, x, (params["blocks"], main_pool))
+    if n_dense:
+        new_pool = {
+            k2: jnp.concatenate([head_pool[k2], new_main[k2]], axis=0) for k2 in new_main
+        }
+    else:
+        new_pool = new_main
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = dense(x, head)  # [B, T, Vp]
+    return _mask_padded_vocab(logits, cfg), new_pool
 
 
 # ==========================================================================

@@ -1,0 +1,89 @@
+"""Dedicated coverage for the dense decode-attention kernel (ISSUE 8):
+GQA head expansion, ring partial fill, C % bk padding, bf16 inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+
+
+def _ref(q, k, v, valid):
+    """jnp oracle: masked softmax over the cache. q [B,H,Dh], k/v [B,C,H,Dh]."""
+    dh = q.shape[-1]
+    logits = jnp.einsum(
+        "bhd,bchd->bhc", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / np.sqrt(dh)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, :], jnp.exp(logits - m), 0.0)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhc,bchd->bhd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _rand(key, b, c, h, dh, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, c, h, dh), dtype)
+    v = jax.random.normal(ks[2], (b, c, h, dh), dtype)
+    return q, k, v
+
+
+def test_gqa_expanded_heads():
+    """Hkv < H: the model expands kv heads by gather before the kernel —
+    parity must hold through that expansion."""
+    b, c, h, hkv, dh = 2, 64, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    k_kv = jax.random.normal(ks[1], (b, c, hkv, dh))
+    v_kv = jax.random.normal(ks[2], (b, c, hkv, dh))
+    qmap = jnp.asarray([i // (h // hkv) for i in range(h)])
+    k = jnp.take(k_kv, qmap, axis=2)
+    v = jnp.take(v_kv, qmap, axis=2)
+    valid = jnp.ones((b, c), bool)
+    out = decode_attention(q, k, v, valid, bk=32, interpret=True)
+    np.testing.assert_allclose(out, _ref(q, k, v, valid), rtol=1e-5, atol=1e-5)
+
+
+def test_ring_partial_fill():
+    """Per-sequence fill levels (continuous batching): only `fill[b]` slots
+    of each ring are live."""
+    b, c, h, dh = 3, 48, 4, 8
+    q, k, v = _rand(jax.random.PRNGKey(1), b, c, h, dh)
+    fill = jnp.asarray([1, 13, 48])
+    valid = jnp.arange(c)[None, :] < fill[:, None]
+    out = decode_attention(q, k, v, valid, bk=16, interpret=True)
+    np.testing.assert_allclose(out, _ref(q, k, v, valid), rtol=1e-5, atol=1e-5)
+
+
+def test_cache_not_multiple_of_bk():
+    """C % bk != 0 exercises the zero-pad tail tile."""
+    b, c, h, dh = 2, 50, 4, 8
+    q, k, v = _rand(jax.random.PRNGKey(2), b, c, h, dh)
+    valid = jnp.arange(c)[None, :] < jnp.asarray([50, 37])[:, None]
+    out = decode_attention(q, k, v, valid, bk=16, interpret=True)
+    np.testing.assert_allclose(out, _ref(q, k, v, valid), rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_inputs():
+    b, c, h, dh = 2, 32, 4, 16
+    q, k, v = _rand(jax.random.PRNGKey(3), b, c, h, dh, jnp.bfloat16)
+    valid = jnp.arange(c)[None, :] < jnp.asarray([32, 20])[:, None]
+    out = decode_attention(q, k, v, valid, bk=16, interpret=True)
+    ref = _ref(q, k, v, valid)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_scalar_valid_broadcasts():
+    """The [C] (shared fill) form must match the broadcast [B, C] form."""
+    b, c, h, dh = 2, 32, 2, 8
+    q, k, v = _rand(jax.random.PRNGKey(4), b, c, h, dh)
+    valid1 = jnp.arange(c) < 21
+    out1 = decode_attention(q, k, v, valid1, bk=16, interpret=True)
+    out2 = decode_attention(
+        q, k, v, jnp.broadcast_to(valid1, (b, c)), bk=16, interpret=True
+    )
+    np.testing.assert_allclose(out1, out2, rtol=0, atol=0)

@@ -1,0 +1,223 @@
+"""Paged KV serving stack (ISSUE 8, DESIGN.md §12): BlockManager accounting,
+paged-kernel parity vs the jnp oracle and the dense kernel, paged model-step
+parity vs the dense decode path, and the anytime scheduler end to end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention,
+    paged_decode_ref,
+)
+from repro.launch.scheduler import PagedScheduler, Request
+from repro.models import model as M
+from repro.models.kvcache import BlockManager
+
+
+# ==========================================================================
+# BlockManager
+# ==========================================================================
+def test_block_manager_prefix_sharing():
+    bm = BlockManager(n_blocks=9, block_size=4)
+    sb1 = bm.admit_prompt(list(range(10)), max_new=2)  # 12 tok -> 3 blocks
+    assert len(sb1.blocks) == 3 and sb1.reserved == 0 and sb1.reused_len == 0
+    bm.mark_written(sb1, 10)
+    # same 8-token (2 full blocks) prefix -> contiguous reuse from the start
+    sb2 = bm.admit_prompt(list(range(8)) + [99], max_new=3)
+    assert sb2.blocks[:2] == sb1.blocks[:2]
+    assert sb2.reused_len == 8 and bm.hits == 2
+    assert sb2.blocks[2] != sb1.blocks[2]  # partial tails are never shared
+
+
+def test_block_manager_reservation_makes_append_infallible():
+    bm = BlockManager(n_blocks=5, block_size=4)
+    sb = bm.admit_prompt(list(range(4)), max_new=6)  # 10 tok -> 1 + 2 reserved
+    assert sb.reserved == 2
+    assert bm.available() == 1  # reservation is excluded from admissions
+    bm.append_block(sb)
+    bm.append_block(sb)
+    assert sb.reserved == 0
+    with pytest.raises(AssertionError):
+        bm.append_block(sb)  # outgrew its admission worst case
+
+
+def test_block_manager_retire_parks_in_lru_and_rehits():
+    bm = BlockManager(n_blocks=9, block_size=4)
+    sb1 = bm.admit_prompt(list(range(8)), max_new=0)
+    bm.mark_written(sb1, 8)
+    shared = list(sb1.blocks)
+    bm.retire(sb1)
+    assert bm.stats()["cached"] == 2  # hashed blocks retained, not freed
+    sb2 = bm.admit_prompt(list(range(8)), max_new=0)
+    assert sb2.reused_len == 8 and sb2.blocks == shared
+
+
+def test_block_manager_eviction_under_pressure():
+    bm = BlockManager(n_blocks=4, block_size=2)
+    for toks in ([1, 2], [3, 4]):
+        sb = bm.admit_prompt(toks, max_new=0)
+        bm.mark_written(sb, 2)
+        bm.retire(sb)
+    assert bm.stats()["cached"] == 2
+    sb = bm.admit_prompt([5, 6, 7, 8, 9, 10], max_new=0)  # needs all 3 blocks
+    assert sb is not None and bm.evictions >= 1
+    bm.retire(sb)
+    assert bm.stats()["free"] + bm.stats()["cached"] == 3  # nothing leaked
+
+
+def test_block_manager_pending_blocks_not_reused():
+    bm = BlockManager(n_blocks=6, block_size=2)
+    bm.admit_prompt([1, 2, 3, 4], max_new=0)  # K/V never written
+    sb2 = bm.admit_prompt([1, 2, 3, 4], max_new=0)
+    assert sb2.reused_len == 0  # a hash hit on unwritten blocks is not a hit
+
+
+def test_block_manager_admission_gate():
+    bm = BlockManager(n_blocks=4, block_size=4)  # 3 usable (block 0 is null)
+    assert bm.admit_prompt(list(range(4)), max_new=8) is not None
+    assert bm.admit_prompt([1], max_new=0) is None  # pool exhausted
+    assert bm.available() == 0
+
+
+# ==========================================================================
+# Paged decode kernel
+# ==========================================================================
+def _paged_case(seed=0, nb=10, bs=8, b=3, h=8, hkv=2, dh=16, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    k_pool = jax.random.normal(ks[1], (nb, bs, hkv, dh), dtype)
+    v_pool = jax.random.normal(ks[2], (nb, bs, hkv, dh), dtype)
+    # permuted physical blocks; logical order only exists in the table
+    tables = jnp.asarray([[3, 7, 1], [5, 2, 8], [9, 4, 6]], jnp.int32)
+    seq_lens = jnp.asarray([24, 13, 0], jnp.int32)  # full / ragged / idle
+    qmap = jnp.asarray([i // (h // hkv) for i in range(h)], jnp.int32)
+    return q, k_pool, v_pool, tables, seq_lens, qmap
+
+
+def test_paged_kernel_matches_oracle():
+    q, kp, vp, tbl, lens, qmap = _paged_case()
+    out = paged_decode_attention(q, kp, vp, tbl, lens, qmap, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, tbl, lens, qmap)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    # idle row (seq_len 0) is exactly zero, not mean(v)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)
+
+
+def test_paged_kernel_matches_dense_kernel():
+    """Same attention, two layouts: gather the pool through the table into
+    the dense [B, C] rectangle and the dense kernel must agree (rows with
+    live context; the dense kernel leaves empty rows unspecified)."""
+    q, kp, vp, tbl, lens, qmap = _paged_case()
+    b, h, dh = q.shape
+    bs = kp.shape[1]
+    c = tbl.shape[1] * bs
+    k = jnp.take(kp, tbl.reshape(-1), axis=0).reshape(b, c, -1, dh)
+    v = jnp.take(vp, tbl.reshape(-1), axis=0).reshape(b, c, -1, dh)
+    k = jnp.take(k, qmap, axis=2)
+    v = jnp.take(v, qmap, axis=2)
+    valid = jnp.arange(c)[None, :] < lens[:, None]
+    dense = decode_attention(q, k, v, valid, bk=8, interpret=True)
+    paged = paged_decode_attention(q, kp, vp, tbl, lens, qmap, interpret=True)
+    live = np.asarray(lens) > 0
+    np.testing.assert_allclose(paged[live], dense[live], rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kernel_bf16():
+    q, kp, vp, tbl, lens, qmap = _paged_case(dtype=jnp.bfloat16)
+    out = paged_decode_attention(q, kp, vp, tbl, lens, qmap, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, tbl, lens, qmap)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+# ==========================================================================
+# Paged model step vs the dense decode path
+# ==========================================================================
+def _greedy_dense(cfg, params, toks, new):
+    b, s = toks.shape
+    cache = M.init_cache(cfg, b, s + new)
+    logits, cache = M.prefill_bulk(params, cfg, toks, cache)
+    out = [jnp.argmax(logits[:, : cfg.vocab], -1)]
+    for i in range(new - 1):
+        logits, cache = M.decode_step(params, cfg, cache, out[-1][:, None], s + i)
+        out.append(jnp.argmax(logits[:, : cfg.vocab], -1))
+    return np.stack([np.asarray(o) for o in out], 1)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "minicpm3_4b"])
+def test_paged_step_matches_dense_decode(arch):
+    """Chunked paged prefill + paged decode == prefill_bulk + decode_step,
+    for GQA (qwen2) and MLA latents (minicpm3)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    b, s, new, bs, chunk = 2, 7, 3, 4, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    want = _greedy_dense(cfg, params, toks, new)
+
+    bm = BlockManager(n_blocks=32, block_size=bs)
+    pool = M.init_paged_pool(cfg, 32, bs)
+    sbs = [bm.admit_prompt([int(t) for t in np.asarray(toks[i])], new) for i in range(b)]
+    nblk = max(len(sb.blocks) + sb.reserved for sb in sbs)
+
+    def tables():
+        t = np.zeros((b, nblk), np.int32)
+        for i, sb in enumerate(sbs):
+            t[i, : len(sb.blocks)] = sb.blocks
+        return jnp.asarray(t)
+
+    last = None
+    for c0 in range(0, s, chunk):  # prefill in fixed-width chunks
+        c1 = min(c0 + chunk, s)
+        tk = jnp.pad(toks[:, c0:c1], ((0, 0), (0, chunk - (c1 - c0))))
+        pos = np.full((b, chunk), -1, np.int32)
+        pos[:, : c1 - c0] = np.arange(c0, c1)
+        lg, pool = M.paged_step(params, cfg, pool, tables(), tk, jnp.asarray(pos))
+        last = lg[:, (c1 - c0) - 1]
+    out = [jnp.argmax(last[:, : cfg.vocab], -1)]
+    for i in range(new - 1):
+        pos = s + i
+        for sb in sbs:
+            if pos // bs >= len(sb.blocks):
+                bm.append_block(sb)
+        lg, pool = M.paged_step(
+            params, cfg, pool, tables(), out[-1][:, None],
+            jnp.full((b, 1), pos, jnp.int32),
+        )
+        out.append(jnp.argmax(lg[:, 0, : cfg.vocab], -1))
+    got = np.stack([np.asarray(o) for o in out], 1)
+    np.testing.assert_array_equal(got, want)
+
+
+# ==========================================================================
+# Anytime scheduler end to end
+# ==========================================================================
+def test_paged_scheduler_matches_isolated():
+    cfg = dataclasses.replace(get_config("qwen2_0_5b").reduced(), dtype="float32")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rngs = np.random.RandomState(7)
+    shared = rngs.randint(0, cfg.vocab, 9).astype(np.int32)
+    prompts = [
+        np.concatenate([shared, rngs.randint(0, cfg.vocab, 4).astype(np.int32)]),
+        np.concatenate([shared, rngs.randint(0, cfg.vocab, 2).astype(np.int32)]),
+        rngs.randint(0, cfg.vocab, 23).astype(np.int32),  # chunked long prompt
+    ]
+    sch = PagedScheduler(cfg, params, n_slots=2, n_blocks=64, block_size=4,
+                         chunk_tokens=8, deadline_ms=1e9)
+    sch.submit(Request(0, prompts[0], 4))
+    got = sch.run_to_completion()
+    for i in (1, 2):
+        sch.submit(Request(i, prompts[i], 4))
+    got.update(sch.run_to_completion())
+    for i, p in enumerate(prompts):
+        want = _greedy_dense(cfg, params, jnp.asarray(p[None]), 4)[0].tolist()
+        assert got[i] == want, (i, got[i], want)
+    st = sch.stats()
+    assert st["hits"] > 0  # requests 0/1 share two full prompt blocks
+    assert st["live"] == 0 and st["free"] + st["cached"] == 63  # all reclaimed
