@@ -167,6 +167,51 @@ def run():
     rows.append(("kernel_decode_attention_cpu_oracle", f"{us:.0f}",
                  f"tpu_roofline_us={bytes_moved/HBM_BW*1e6:.0f}"))
 
+    # moe grouped gemm: ragged-skip + SwiGLU-fusion ablation at a small
+    # expert shape (tiny interpret runs pin parity; the bytes column is the
+    # HBM traffic the fusion deletes — x is streamed ONCE for both weight
+    # matmuls and the h1/h3 intermediates never round-trip through HBM).
+    # BENCH_zoo.json carries the full 4-variant ablation at the shrunk
+    # deepseek shape; these rows are the per-kernel accounting.
+    from repro.kernels import ops as kops
+
+    me, mc, md, mf = 4, 256, 128, 128
+    mtiles = (64, 128, 128)
+    mcounts = jnp.asarray([256, 16, 16, 16], jnp.int32)
+    mx = jnp.asarray(rng.standard_normal((me, mc, md)), jnp.float32)
+    mx = mx * ref._live_mask(mc, mcounts).astype(mx.dtype)[..., None]
+    mw1 = jnp.asarray(rng.standard_normal((me, md, mf)), jnp.float32)
+    mw3 = jnp.asarray(rng.standard_normal((me, md, mf)), jnp.float32)
+    sw_oracle = ref.moe_swiglu_ref(mx, mw1, mw3, counts=mcounts)
+
+    def _moe3(x, w1, w3, counts):
+        h1 = kops.moe_gemm(x, w1, counts=counts, tiles=mtiles, interpret=True)
+        h3 = kops.moe_gemm(x, w3, counts=counts, tiles=mtiles, interpret=True)
+        return (jax.nn.silu(h1) * h3).astype(x.dtype)
+
+    f3 = jax.jit(_moe3)
+    ff = jax.jit(lambda x, w1, w3, counts: kops.moe_swiglu(
+        x, w1, w3, counts=counts, tiles=mtiles, interpret=True))
+    np.testing.assert_allclose(np.asarray(f3(mx, mw1, mw3, mcounts)),
+                               np.asarray(sw_oracle), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(ff(mx, mw1, mw3, mcounts)),
+                               np.asarray(sw_oracle), rtol=2e-3, atol=2e-3)
+    us3 = _time(f3, mx, mw1, mw3, mcounts, iters=3)
+    usf = _time(ff, mx, mw1, mw3, mcounts, iters=3)
+    x_bytes = me * mc * md * 4
+    h_bytes = me * mc * mf * 4
+    fusion_saved = x_bytes + 4 * h_bytes  # 2nd x stream + h1/h3 write+read
+    rows.append(("kernel_moe_swiglu_fused_vs_3call", f"{usf:.0f}",
+                 f"3call_us={us3:.0f},hbm_bytes_saved={fusion_saved}"
+                 f" (interpret_parity_ok)"))
+    dense_ctiles = me * (mc // mtiles[0])
+    live_ctiles = int(sum(-(-min(int(n), mc) // mtiles[0]) for n in mcounts))
+    usd = _time(ff, mx, mw1, mw3,
+                jnp.full((me,), mc, jnp.int32), iters=3)
+    rows.append(("kernel_moe_ragged_skip", f"{usf:.0f}",
+                 f"dense_us={usd:.0f},live_c_tiles={live_ctiles}/{dense_ctiles}"
+                 f",mxu_tiles_skipped={1-live_ctiles/dense_ctiles:.0%}"))
+
     # ssm scan: 4 x 2048 x Di 512, N 16
     b, s, di, n = 4, 2048, 512, 16
     xx = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)

@@ -17,6 +17,7 @@
   roofline aggregate of the multi-pod dry-run sweep    [EXPERIMENTS §Roofline]
   runtime  real multi-process fleet vs simulated oracle (BENCH_runtime.json)
   serve    paged anytime scheduler vs dense slot path  (BENCH_serve.json)
+  zoo      ragged fused MoE ablation + zoo anytime matrix (BENCH_zoo.json)
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
 figure's headline number where a wall-time makes no sense).  With
@@ -69,6 +70,7 @@ def main() -> None:
         tree_bench,
         variance_decay,
         window_opt_bench,
+        zoo_bench,
     )
 
     suites = {
@@ -89,6 +91,7 @@ def main() -> None:
         "roofline": roofline_bench.run,
         "runtime": runtime_bench.run,
         "serve": serve_bench.run,
+        "zoo": zoo_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,200 @@
+"""Model-zoo benchmark: ragged fused MoE kernel ablation + anytime rounds
+over the real architectures (DESIGN.md §13).  Writes BENCH_zoo.json.
+
+Part 1 — kernel ablation at the shrunk DeepSeek-V2-lite expert shape
+(E=4, D=256, Fe=256 — the `reduced()` dims) under skewed routing:
+
+  dense3        3 dispatches, full capacity (the pre-ragged path:
+                w1 GEMM + w3 GEMM + XLA silu*mul epilogue)
+  dense_fused   fusion only (ONE SwiGLU kernel, every tile computed)
+  ragged3       ragged skip only (3 dispatches, dead tiles skipped)
+  ragged_fused  both — the production kernel (headline `speedup`)
+
+All four variants are parity-checked against the masked-einsum oracle
+before timing, and the headline must clear the 1.5x acceptance bar.
+Interpret-mode wall-clock UNDERSTATES the TPU win: the interpreter still
+fetches every input block for skipped grid steps, so only the compute is
+skipped here, while on hardware the MXU issue slots are what dominate.
+
+Part 2 — anytime rounds over the zoo: arch (MoE + SSM) x policy
+(anytime / uniform) x straggler regime (shifted_exp / pareto), each run
+as ONE RoundEngine jit dispatch on the index data plane, reporting
+rounds/s.  The MoE arch additionally pins per-round loss parity of the
+ragged fused Pallas path against the einsum reference path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ablation shape: reduced deepseek dims, capacity 1024, hot-expert skew
+ABL = dict(e=4, c=1024, d=256, f=256)
+ABL_COUNTS = (1024, 32, 32, 32)
+ABL_TILES = (128, 256, 256)
+
+ZOO = {
+    "deepseek-v2-lite-16b": "moe",
+    "xlstm-350m": "ssm",
+}
+POLICIES = ("anytime", "uniform")
+REGIMES = ("shifted_exp", "pareto")
+
+
+def _timed(fn, *args, iters=3):
+    out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def _kernel_ablation(rows, result):
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    e, c, d, f = ABL["e"], ABL["c"], ABL["d"], ABL["f"]
+    counts = jnp.asarray(ABL_COUNTS, jnp.int32)
+    x = jnp.asarray(rng.standard_normal((e, c, d)), jnp.float32)
+    x = x * ref._live_mask(c, counts).astype(x.dtype)[..., None]
+    w1 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    w3 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+
+    def dense3(x, w1, w3):  # the pre-ragged production path
+        h1 = ops.moe_gemm(x, w1, tiles=ABL_TILES, interpret=True)
+        h3 = ops.moe_gemm(x, w3, tiles=ABL_TILES, interpret=True)
+        return (jax.nn.silu(h1) * h3).astype(x.dtype)
+
+    def dense_fused(x, w1, w3):
+        return ops.moe_swiglu(x, w1, w3, tiles=ABL_TILES, interpret=True)
+
+    def ragged3(x, w1, w3):
+        h1 = ops.moe_gemm(x, w1, counts=counts, tiles=ABL_TILES, interpret=True)
+        h3 = ops.moe_gemm(x, w3, counts=counts, tiles=ABL_TILES, interpret=True)
+        return (jax.nn.silu(h1) * h3).astype(x.dtype)
+
+    def ragged_fused(x, w1, w3):  # the production kernel
+        return ops.moe_swiglu(x, w1, w3, counts=counts, tiles=ABL_TILES,
+                              interpret=True)
+
+    oracle = np.asarray(ref.moe_swiglu_ref(x, w1, w3, counts=counts))
+    timings = {}
+    for name, fn in (("dense3", dense3), ("dense_fused", dense_fused),
+                     ("ragged3", ragged3), ("ragged_fused", ragged_fused)):
+        jf = jax.jit(fn)
+        out = jf(x, w1, w3)
+        np.testing.assert_allclose(np.asarray(out), oracle, rtol=2e-3,
+                                   atol=2e-3, err_msg=name)
+        timings[name] = _timed(jf, x, w1, w3)
+        rows.append((f"zoo_kernel_{name}", f"{timings[name]*1e6:.0f}",
+                     "parity_ok"))
+
+    live = sum(-(-min(n, c) // ABL_TILES[0]) for n in ABL_COUNTS)
+    total = e * (-(-c // ABL_TILES[0]))
+    speedup = timings["dense3"] / timings["ragged_fused"]
+    result["kernel_ablation"] = {
+        "shape": ABL, "counts": list(ABL_COUNTS), "tiles": list(ABL_TILES),
+        "live_c_tiles": f"{live}/{total}",
+        "us": {k: v * 1e6 for k, v in timings.items()},
+        "ragged_skip_speedup": timings["dense3"] / timings["ragged3"],
+        "fusion_speedup": timings["dense3"] / timings["dense_fused"],
+        "parity": "asserted vs masked-einsum oracle (rtol 2e-3)",
+    }
+    result["speedup"] = speedup
+    rows.append(("zoo_kernel_ragged_fused_speedup", f"{speedup:.2f}",
+                 f"vs_3call_dense_capacity (acceptance >=1.5x)"))
+    assert speedup >= 1.5, f"ragged fused speedup {speedup:.2f}x < 1.5x"
+
+
+def _make_run(arch, policy, regime, rounds, kernel_impl="config"):
+    """One zoo scenario: (timed_window_fn, per-round losses [K])."""
+    from repro.configs import get_config
+    from repro.core.straggler import StragglerModel
+    from repro.data.pipeline import TokenBatcher
+    from repro.data.synthetic import synthetic_tokens
+    from repro.launch.steps import TrainPlan, make_train_engine
+    from repro.models import model as M
+    from repro.optim import sgd
+
+    W, QMAX, B, SEQ = 2, 2, 2, 32
+    cfg = get_config(arch).reduced()
+    if kernel_impl != "config":
+        cfg = dataclasses.replace(cfg, kernel_impl=kernel_impl)
+    rng = np.random.default_rng(0)
+    toks = synthetic_tokens(rng, 64, SEQ, cfg.vocab)
+    bt = TokenBatcher(toks, W, 1, QMAX, B, seed=0)
+    src = bt.device_corpus().source(bt.rounds_indices(rounds))
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    eng = make_train_engine(cfg, TrainPlan(W, QMAX, B), opt=sgd(1e-3),
+                            weighting=policy)
+    qs = StragglerModel(kind=regime).realize_steps_matrix(
+        np.random.default_rng(1), rounds, W, 3.0, QMAX)
+    state0 = eng.init_state(params, ())
+
+    def window():
+        st, outs = eng.run(state0, src, qs, keep_history=True)
+        return outs["loss"]
+
+    return window, np.asarray(window())
+
+
+def _zoo_matrix(rows, result, rounds):
+    scen = {}
+    for arch, family in ZOO.items():
+        for policy in POLICIES:
+            for regime in REGIMES:
+                window, losses = _make_run(arch, policy, regime, rounds)
+                secs = _timed(lambda: window())
+                key = f"{arch}/{policy}/{regime}"
+                scen[key] = {
+                    "family": family,
+                    "rounds_per_s": rounds / secs,
+                    "loss_first": float(losses[0]),
+                    "loss_last": float(losses[-1]),
+                }
+                assert np.all(np.isfinite(losses)), key
+                rows.append((f"zoo_{family}_{policy}_{regime}",
+                             f"{secs/rounds*1e6:.0f}",
+                             f"rounds_per_s={rounds/secs:.2f},"
+                             f"loss={losses[0]:.3f}->{losses[-1]:.3f}"))
+    result["scenarios"] = scen
+
+    # loss-parity pin: ragged fused Pallas path vs einsum reference path,
+    # one scenario per family (the custom_vjp backward IS the reference
+    # vjp, so any drift is bounded by forward kernel numerics)
+    parity = {}
+    for arch, family in ZOO.items():
+        _, l_ref = _make_run(arch, "anytime", "shifted_exp", rounds)
+        _, l_ker = _make_run(arch, "anytime", "shifted_exp", rounds,
+                             kernel_impl="pallas_interpret")
+        drift = float(np.max(np.abs(l_ker - l_ref) / np.abs(l_ref)))
+        parity[arch] = {"max_rel_loss_drift": drift,
+                        "loss_ref": l_ref.tolist(), "loss_kernel": l_ker.tolist()}
+        assert drift < 2e-3, (arch, drift)
+        rows.append((f"zoo_{family}_kernel_loss_parity", "0",
+                     f"max_rel_drift={drift:.1e} (asserted <2e-3)"))
+    result["loss_parity"] = parity
+
+
+def run(rounds: int = 4, out_path: str = "BENCH_zoo.json"):
+    rows: list = []
+    result: dict = {"config": {"rounds": rounds, "workers": 2, "q_max": 2,
+                               "seq_len": 32, "archs": list(ZOO)}}
+    _kernel_ablation(rows, result)
+    _zoo_matrix(rows, result, rounds)
+    pathlib.Path(out_path).write_text(json.dumps(result, indent=2))
+    rows.append(("zoo_bench_artifact", "0", f"written={out_path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+
+    emit_csv(run())

@@ -1,4 +1,4 @@
-"""Roofline-guided autotuner for the fused window kernel.
+"""Roofline-guided autotuner for the fused window and MoE GEMM kernels.
 
 `fused_window` has two launch-shape knobs the hard-coded defaults leave on
 the table: the D-tile width `d_block` (PR 5 fixed 128..512 via
@@ -17,10 +17,19 @@ dispatch (it runs at trace time inside the engine's jit).  Selection is
 deterministic: feasible candidates sorted by (modeled time, wider block,
 fewer sweeps).
 
+The same machinery tunes the ragged grouped-GEMM tiles: `autotune_moe_gemm`
+scores (bc, bf, bd) candidates for a `moe_gemm`/`moe_swiglu` launch shape
+{E, C, D, F, dtype} — MXU flops vs the x/w tile re-fetch traffic (x tiles
+re-read once per F block, w tiles once per C block) vs per-grid-step
+sequencing overhead, under the VMEM accumulator+stream budget.  Ragged
+live counts deliberately do NOT key the cache: counts change every batch,
+tiles must not (a retrace per routing pattern would defeat the jit).
+
 Results persist in a JSON cache keyed by CACHE_VERSION + backend + shape
-+ dtype + optimizer (the full key spec is DESIGN.md §10), so repeated
-sweeps and CI runs skip the search.  Cache path resolution order:
-explicit `cache_path` arg > $REPRO_AUTOTUNE_CACHE > $XDG_CACHE_HOME/
++ dtype + optimizer (the full key spec is DESIGN.md §10; moe keys are
+`v{V}/{backend}/moe.E{e}.C{c}.D{d}.F{f}/{dtype}`), so repeated sweeps and
+CI runs skip the search.  Cache path resolution order: explicit
+`cache_path` arg > $REPRO_AUTOTUNE_CACHE > $XDG_CACHE_HOME/
 repro/window_autotune.json > ~/.cache/repro/window_autotune.json.  CI
 jobs point REPRO_AUTOTUNE_CACHE at a tmpdir; every cache I/O failure
 degrades to an in-memory search, never an error.
@@ -37,7 +46,9 @@ from repro.launch.roofline import (PEAK_FLOPS, VMEM_BYTES, Roofline,
                                    kernel_time)
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-CACHE_VERSION = 1
+# v2: moe_gemm shape family added — the version bump orphans (never
+# misreads) every v1 entry, which simply re-searches once
+CACHE_VERSION = 2
 
 # f32 [W, D] moment tensors resident in VMEM per optimizer kind
 N_STATE = {"sgd": 0, "momentum": 1, "nesterov": 1, "adam": 2}
@@ -207,6 +218,127 @@ def autotune_window(n_exp: int, n_rounds: int, n_workers: int, q_max: int,
         except (KeyError, TypeError, ValueError):
             pass  # stale/corrupt entry: fall through to re-search
     cfg = search(n_exp, n_rounds, n_workers, q_max, local_batch, d, dtype, opt)
+    cache[key] = cfg.as_dict()
+    _save_cache(p, cache)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# moe_gemm / moe_swiglu tile search ({E,C,D,F,dtype} -> {bc,bf,bd})
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEGemmConfig:
+    """One grouped-GEMM tiling (+ its modeled dense runtime)."""
+
+    bc: int
+    bf: int
+    bd: int
+    model_s: float  # modeled dense-kernel wall-clock (diagnostic, not a key)
+
+    def as_dict(self) -> dict:
+        return {"bc": self.bc, "bf": self.bf, "bd": self.bd,
+                "model_s": self.model_s}
+
+
+def moe_gemm_cost(e: int, c: int, d: int, f: int, dtype: str,
+                  bc: int, bf: int, bd: int,
+                  n_mm: int = 1) -> tuple[float, int, bool]:
+    """(modeled seconds, VMEM bytes, feasible) for one tiling candidate.
+
+    Mirrors the kernel's clip+pad exactly.  n_mm=2 models `moe_swiglu`
+    (two weight streams + two accumulators per grid visit).  HBM traffic:
+    the x tile is re-fetched once per F block, each w tile once per C
+    block, the output written once; VMEM counts double-buffered x/w/out
+    stream tiles plus the resident f32 accumulator(s).
+    """
+    bytes_x = _DTYPE_BYTES[dtype]
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    cp, fp, dp = _round_up(c, bc), _round_up(f, bf), _round_up(d, bd)
+    n_c, n_f, n_d = cp // bc, fp // bf, dp // bd
+
+    vmem = (
+        2 * bc * bd * bytes_x            # x tile, double-buffered
+        + 2 * n_mm * bd * bf * bytes_x   # w tile(s), double-buffered
+        + n_mm * bc * bf * 4             # f32 accumulator(s), resident
+        + 2 * bc * bf * bytes_x          # out tile, double-buffered
+    )
+    feasible = vmem <= VMEM_BYTES
+
+    hbm = (
+        e * n_f * cp * dp * bytes_x          # x stream (re-read per F block)
+        + e * n_mm * n_c * dp * fp * bytes_x  # w stream(s) (re-read per C block)
+        + e * cp * fp * bytes_x              # output
+    )
+    flops = 2.0 * e * cp * dp * fp * n_mm
+    grid_steps = e * n_c * n_f * n_d
+    peak = PEAK_FLOPS if bytes_x == 2 else PEAK_FLOPS / 2
+    rf = Roofline(flops=float(flops), hbm_bytes=float(hbm), coll_bytes=0.0,
+                  coll_by_kind={}, peak_flops=peak)
+    return kernel_time(rf, grid_steps), vmem, feasible
+
+
+def moe_candidate_configs(c: int, d: int, f: int):
+    """All (bc, bf, bd) tilings worth scoring for a [C, D] x [D, F] tile."""
+    bcs = [b for b in (64, 128, 256, 512) if b <= _round_up(c, 8)] or [8]
+    bfs = [b for b in (128, 256, 512) if b <= _round_up(f, 128)] or [128]
+    bds = [b for b in (128, 256, 512, 1024) if b <= _round_up(d, 128)] or [128]
+    for bc in bcs:
+        for bf in bfs:
+            for bd in bds:
+                yield bc, bf, bd
+
+
+def moe_search(e: int, c: int, d: int, f: int, dtype: str,
+               n_mm: int = 1) -> MoEGemmConfig:
+    """Deterministic roofline search over the tiling grid."""
+    scored = []
+    for bc, bf, bd in moe_candidate_configs(c, d, f):
+        t, vmem, ok = moe_gemm_cost(e, c, d, f, dtype, bc, bf, bd, n_mm=n_mm)
+        # feasible first, then modeled time, then bigger tiles (fewer steps)
+        scored.append((not ok, t, -bc, -bf, -bd, (bc, bf, bd)))
+    scored.sort()
+    _, t, _, _, _, (bc, bf, bd) = scored[0]
+    return MoEGemmConfig(bc=bc, bf=bf, bd=bd, model_s=t)
+
+
+def moe_gemm_key(e: int, c: int, d: int, f: int, dtype: str,
+                 backend: str) -> str:
+    """DESIGN.md §10/§13: version / backend / moe shape / dtype."""
+    return f"v{CACHE_VERSION}/{backend}/moe.E{e}.C{c}.D{d}.F{f}/{dtype}"
+
+
+def autotune_moe_gemm(e: int, c: int, d: int, f: int,
+                      dtype: str = "float32", n_mm: int = 1,
+                      backend: Optional[str] = None,
+                      path: Optional[str] = None,
+                      refresh: bool = False) -> MoEGemmConfig:
+    """(bc, bf, bd) for a grouped-GEMM shape, via cache then search.
+
+    Shares the window tuner's cache file and all of its degradation
+    semantics: corrupt entry -> re-search, corrupt file -> in-memory,
+    save failure -> silent.  `n_mm` does not key the cache — the swiglu
+    and plain launches at one shape share a tiling by design (the two
+    calls in moe_ffn must agree on BC so live-count masks line up).
+    """
+    if dtype not in _DTYPE_BYTES:
+        raise ValueError(f"bad dtype {dtype!r}")
+    if min(e, c, d, f) < 1:
+        raise ValueError(f"bad moe_gemm shape E{e}.C{c}.D{d}.F{f}")
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    key = moe_gemm_key(e, c, d, f, dtype, backend)
+    p = cache_path(path)
+    cache = _load_cache(p)
+    if not refresh and key in cache:
+        hit = cache[key]
+        try:
+            return MoEGemmConfig(bc=int(hit["bc"]), bf=int(hit["bf"]),
+                                 bd=int(hit["bd"]),
+                                 model_s=float(hit.get("model_s", 0.0)))
+        except (KeyError, TypeError, ValueError):
+            pass  # stale/corrupt entry: fall through to re-search
+    cfg = moe_search(e, c, d, f, dtype, n_mm=n_mm)
     cache[key] = cfg.as_dict()
     _save_cache(p, cache)
     return cfg

@@ -1,19 +1,40 @@
-"""Pallas TPU kernel: grouped expert GEMM (the MoE hot-spot).
+"""Pallas TPU kernels: ragged fused grouped expert GEMM (the MoE hot-spot).
 
-    out[e, c, f] = buf[e, c, d] @ w[e, d, f]
+    moe_gemm:    out[e, c, f] = buf[e, c, d] @ w[e, d, f]
+    moe_swiglu:  out[e, c, f] = silu(buf @ w1) * (buf @ w3)   (ONE kernel)
 
 After capacity dispatch, every expert's [cap, D] token buffer multiplies
 its own [D, F] weight — a batched GEMM whose batch axis is the (model-axis
 sharded) expert dimension.  Tiling: one expert per major grid step; [BC,BD]
-x [BD,BF] MXU tiles with an f32 accumulator carried across the BD (minor)
-grid dimension.  VMEM per step: BC*BD + BD*BF + BC*BF f32 tiles
-(128*512*3*4B ~ 768 KiB) — double-bufferable.
+x [BD,BF] MXU tiles with f32 accumulators carried across the BD (minor)
+grid dimension.
 
-Used by models.moe.moe_ffn when cfg.kernel_impl selects pallas.
+Two upgrades over the dense three-call path:
+
+**Ragged skip.**  Routing is data-dependent, so most capacity slots are
+empty most of the time (the dispatch buffer zero-fills them).  The int32
+per-expert live count vector rides scalar prefetch (SMEM); every grid
+step checks `ic * BC < counts[e]` under `pl.when` and a tile fully above
+its expert's fill level issues NO MXU work — it only writes its zero
+output block.  Dead slots produced exactly zeros on the dense path too
+(zero rows in, zeros out), so raggedness changes no result bit.
+
+**SwiGLU fusion.**  The up-projection pair (w1, w3) and the silu*mul
+epilogue run in ONE kernel with TWO VMEM accumulators: each grid visit
+feeds the same x tile to both weight tiles, and the activation applies at
+the last BD step — the f32 [E, C, F] h1/h3 intermediates never round-trip
+through HBM and two of the three kernel launches disappear (3 dispatches
+-> moe_swiglu + moe_gemm).
+
+Tile sizes (bc, bf, bd) come from `kernels/autotune.py::autotune_moe_gemm`
+(roofline-scored, persistently cached) via the `kernels/ops.py` wrappers;
+the raw entry points below take explicit tiles.  Used by
+models.moe.moe_ffn when cfg.kernel_impl selects pallas.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,54 +42,128 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gemm_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
-    idx = pl.program_id(3)
+def _pad_operands(x, w_list, bc, bf, bd):
+    """Clip tiles to dims, pad [E,C,D] x and every [E,D,F] w to multiples."""
+    e, c, d = x.shape
+    f = w_list[0].shape[2]
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    pc, pf, pd = (-c) % bc, (-f) % bf, (-d) % bd
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w_list = [jnp.pad(w, ((0, 0), (0, pd), (0, pf))) for w in w_list]
+    dims = (e, c, d, f, pc, pf, pd, bc, bf, bd)
+    return x, w_list, dims
 
-    @pl.when(idx == 0)
+
+def _gemm_kernel(counts_ref, x_ref, w_ref, o_ref, acc_scr, *, n_d: int, bc: int):
+    ie, ic, idx = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+    live = ic * bc < counts_ref[ie]
+
+    @pl.when(jnp.logical_and(live, idx == 0))
     def _init():
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    x = x_ref[0].astype(jnp.float32)  # [BC, BD]
-    w = w_ref[0].astype(jnp.float32)  # [BD, BF]
-    acc_scr[...] += jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    @pl.when(live)
+    def _acc():
+        x = x_ref[0].astype(jnp.float32)  # [BC, BD]
+        w = w_ref[0].astype(jnp.float32)  # [BD, BF]
+        acc_scr[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
 
     @pl.when(idx == n_d - 1)
     def _emit():
-        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+        o_ref[0] = jnp.where(live, acc_scr[...], 0.0).astype(o_ref.dtype)
+
+
+def _swiglu_kernel(counts_ref, x_ref, w1_ref, w3_ref, o_ref, acc1_scr, acc3_scr,
+                   *, n_d: int, bc: int):
+    ie, ic, idx = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+    live = ic * bc < counts_ref[ie]
+
+    @pl.when(jnp.logical_and(live, idx == 0))
+    def _init():
+        acc1_scr[...] = jnp.zeros_like(acc1_scr)
+        acc3_scr[...] = jnp.zeros_like(acc3_scr)
+
+    @pl.when(live)
+    def _acc():
+        x = x_ref[0].astype(jnp.float32)  # [BC, BD] — fetched ONCE for both
+        dims = (((1,), (0,)), ((), ()))
+        acc1_scr[...] += jax.lax.dot_general(
+            x, w1_ref[0].astype(jnp.float32), dims, preferred_element_type=jnp.float32
+        )
+        acc3_scr[...] += jax.lax.dot_general(
+            x, w3_ref[0].astype(jnp.float32), dims, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(idx == n_d - 1)
+    def _emit():
+        h = jax.nn.silu(acc1_scr[...]) * acc3_scr[...]
+        o_ref[0] = jnp.where(live, h, 0.0).astype(o_ref.dtype)
+
+
+def _dispatch(kernel, counts, tensors, dims, n_acc, interpret):
+    """Shared pallas_call plumbing: counts ride scalar prefetch (SMEM on the
+    compiled path; interpret mode executes the same grid spec)."""
+    e, c, d, f, pc, pf, pd, bc, bf, bd = dims
+    n_c, n_f, n_d = (c + pc) // bc, (f + pf) // bf, (d + pd) // bd
+    x_spec = pl.BlockSpec((1, bc, bd), lambda ie, ic, if_, id_, *_: (ie, ic, id_))
+    w_spec = pl.BlockSpec((1, bd, bf), lambda ie, ic, if_, id_, *_: (ie, id_, if_))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, n_c, n_f, n_d),
+        in_specs=[x_spec] + [w_spec] * (len(tensors) - 1),
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ie, ic, if_, id_, *_: (ie, ic, if_)),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)] * n_acc,
+    )
+    out = pl.pallas_call(
+        functools.partial(kernel, n_d=n_d, bc=bc),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c + pc, f + pf), tensors[0].dtype),
+        interpret=interpret,
+    )(counts.astype(jnp.int32), *tensors)
+    return out[:, :c, :f]
 
 
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
 def moe_gemm(
     x: jax.Array,  # [E, C, D] dispatched token buffers
     w: jax.Array,  # [E, D, F] expert weights
+    counts: Optional[jax.Array] = None,  # [E] int32 live rows (None = dense)
     bc: int = 128,
     bf: int = 256,
     bd: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Grouped GEMM over the expert axis. Returns [E, C, F] (x.dtype)."""
-    e, c, d = x.shape
-    f = w.shape[2]
-    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
-    pc, pf, pd = (-c) % bc, (-f) % bf, (-d) % bd
-    if pc or pd:
-        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
-    if pd or pf:
-        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
-    n_c, n_f, n_d = (c + pc) // bc, (f + pf) // bf, (d + pd) // bd
-    kernel = functools.partial(_gemm_kernel, n_d=n_d)
-    out = pl.pallas_call(
-        kernel,
-        grid=(e, n_c, n_f, n_d),
-        in_specs=[
-            pl.BlockSpec((1, bc, bd), lambda ie, ic, if_, id_: (ie, ic, id_)),
-            pl.BlockSpec((1, bd, bf), lambda ie, ic, if_, id_: (ie, id_, if_)),
-        ],
-        out_specs=pl.BlockSpec((1, bc, bf), lambda ie, ic, if_, id_: (ie, ic, if_)),
-        out_shape=jax.ShapeDtypeStruct((e, c + pc, f + pf), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
-        interpret=interpret,
-    )(x, w)
-    return out[:, :c, :f]
+    """Ragged grouped GEMM over the expert axis. Returns [E, C, F] (x.dtype).
+
+    Rows at or above counts[e] are assumed zero in x (the capacity-dispatch
+    contract) and their output tiles are emitted as zeros without touching
+    the MXU; `counts=None` runs every tile (the dense baseline).
+    """
+    e, c, _ = x.shape
+    if counts is None:
+        counts = jnp.full((e,), c, jnp.int32)
+    x, (w,), dims = _pad_operands(x, [w], bc, bf, bd)
+    return _dispatch(_gemm_kernel, counts, (x, w), dims, 1, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def moe_swiglu(
+    x: jax.Array,   # [E, C, D] dispatched token buffers
+    w1: jax.Array,  # [E, D, F] gate projection
+    w3: jax.Array,  # [E, D, F] up projection
+    counts: Optional[jax.Array] = None,
+    bc: int = 128,
+    bf: int = 256,
+    bd: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused ragged silu(x@w1) * (x@w3). Returns [E, C, F] (x.dtype)."""
+    e, c, _ = x.shape
+    if counts is None:
+        counts = jnp.full((e,), c, jnp.int32)
+    x, (w1, w3), dims = _pad_operands(x, [w1, w3], bc, bf, bd)
+    return _dispatch(_swiglu_kernel, counts, (x, w1, w3), dims, 2, interpret)

@@ -8,14 +8,17 @@ weighted_combine kernel one flattened chunk at a time.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref  # noqa: F401  (oracles re-exported for tests)
+from repro.kernels.autotune import autotune_moe_gemm
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.paged_decode_attention import (
     paged_decode_attention as _paged_decode_pallas,
@@ -23,7 +26,10 @@ from repro.kernels.paged_decode_attention import (
 )
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
-from repro.kernels.moe_gemm import moe_gemm as _moe_gemm_pallas
+from repro.kernels.moe_gemm import (
+    moe_gemm as _moe_gemm_pallas,
+    moe_swiglu as _moe_swiglu_pallas,
+)
 from repro.kernels.weighted_combine import weighted_combine as _combine_pallas
 
 PyTree = Any
@@ -89,6 +95,28 @@ def scalar_grid_call(
     return call(*scalar_args, *tensor_args)
 
 
+@functools.lru_cache(maxsize=None)
+def _flash_vjp(causal: bool, window: Optional[int], interpret: bool):
+    # pallas forward, jnp-oracle backward (same contract as _moe_vjp below):
+    # keeps grad() working through attention on the kernel path
+    @jax.custom_vjp
+    def fn(qt, kt, vt):
+        return _flash_pallas(qt, kt, vt, causal=causal, window=window,
+                             interpret=interpret)
+
+    def fwd(qt, kt, vt):
+        return fn(qt, kt, vt), (qt, kt, vt)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=causal,
+                                                    window=window), *res)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
 def flash_attention(
     q: jax.Array,  # [B, S, H, Dh]  (model layout)
     k: jax.Array,
@@ -98,7 +126,7 @@ def flash_attention(
     interpret: bool = False,
 ) -> jax.Array:
     qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
-    out = _flash_pallas(qt, kt, vt, causal=causal, window=window, interpret=interpret)
+    out = _flash_vjp(causal, window, interpret)(qt, kt, vt)
     return jnp.swapaxes(out, 1, 2)
 
 
@@ -134,13 +162,91 @@ def paged_decode_attention(
     return out[:, None]  # [B, 1, H, Dh]
 
 
-def ssm_scan(x, dt, a, b, c, d, interpret: bool = False):
-    return _ssm_pallas(x, dt, a, b, c, d, interpret=interpret)
+# --------------------------------------------------------------------------
+# Differentiable kernel wrappers (pallas forward, jnp-oracle backward)
+# --------------------------------------------------------------------------
+# pallas_call has no autodiff rule, so each training-path kernel gets a
+# custom_vjp whose backward runs jax.vjp over the SAME pure-jnp oracle the
+# parity tests pin the kernel against: gradients on the kernel path are
+# exactly the reference path's (up to forward numerics), and the engine can
+# drive grad() through moe/ssm models with cfg.kernel_impl='pallas*'.
+@functools.lru_cache(maxsize=None)
+def _moe_vjp(kind: str, bc: int, bf: int, bd: int, interpret: bool):
+    if kind == "gemm":
+        raw, ref_fn = _moe_gemm_pallas, ref.moe_gemm_ref
+    else:
+        raw, ref_fn = _moe_swiglu_pallas, ref.moe_swiglu_ref
+
+    @jax.custom_vjp
+    def fn(counts, *operands):
+        return raw(*operands, counts=counts, bc=bc, bf=bf, bd=bd,
+                   interpret=interpret)
+
+    def fwd(counts, *operands):
+        return fn(counts, *operands), (counts, operands)
+
+    def bwd(res, g):
+        counts, operands = res
+        _, vjp = jax.vjp(lambda *ops: ref_fn(*ops, counts=counts), *operands)
+        # int32 counts take a symbolic-zero (float0) cotangent
+        return (np.zeros(counts.shape, jax.dtypes.float0), *vjp(g))
+
+    fn.defvjp(fwd, bwd)
+    return fn
 
 
-def moe_gemm(x, w, interpret: bool = False):
-    """Grouped expert GEMM [E,C,D]x[E,D,F] -> [E,C,F]."""
-    return _moe_gemm_pallas(x, w, interpret=interpret)
+@functools.lru_cache(maxsize=None)
+def _ssm_vjp(lc: int, db: int, interpret: bool):
+    @jax.custom_vjp
+    def fn(x, dt, a, b, c, d):
+        return _ssm_pallas(x, dt, a, b, c, d, lc=lc, db=db, interpret=interpret)
+
+    def fwd(*operands):
+        return fn(*operands), operands
+
+    def bwd(operands, g):  # g = (y cotangent, h_final cotangent)
+        _, vjp = jax.vjp(ref.ssm_scan_ref, *operands)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def ssm_scan(x, dt, a, b, c, d, lc: int = 64, db: int = 256,
+             interpret: bool = False):
+    return _ssm_vjp(lc, db, interpret)(x, dt, a, b, c, d)
+
+
+def _moe_tiles(x, f: int, tiles) -> tuple[int, int, int]:
+    """Explicit tiles, else the autotuner's pick for this launch shape."""
+    if tiles is not None:
+        return tiles
+    e, c, d = x.shape
+    t = autotune_moe_gemm(e, c, d, f, dtype=str(x.dtype))
+    return t.bc, t.bf, t.bd
+
+
+def moe_gemm(x, w, counts=None, interpret: bool = False, tiles=None):
+    """Ragged grouped expert GEMM [E,C,D]x[E,D,F] -> [E,C,F].
+
+    `counts` [E] int32 live rows per expert: tiles beyond the fill level
+    skip the MXU and emit zeros (None = dense, every tile runs).  Tiling
+    comes from kernels/autotune.py unless `tiles=(bc, bf, bd)` overrides.
+    """
+    bc, bf, bd = _moe_tiles(x, w.shape[2], tiles)
+    if counts is None:
+        counts = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    return _moe_vjp("gemm", bc, bf, bd, interpret)(
+        counts.astype(jnp.int32), x, w)
+
+
+def moe_swiglu(x, w1, w3, counts=None, interpret: bool = False, tiles=None):
+    """Fused ragged silu(x@w1)*(x@w3) [E,C,D] -> [E,C,F] in ONE kernel."""
+    bc, bf, bd = _moe_tiles(x, w1.shape[2], tiles)
+    if counts is None:
+        counts = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    return _moe_vjp("swiglu", bc, bf, bd, interpret)(
+        counts.astype(jnp.int32), x, w1, w3)
 
 
 def weighted_combine(stacked: jax.Array, lam: jax.Array, interpret: bool = False) -> jax.Array:

@@ -79,6 +79,29 @@ def ssm_scan_ref(
     return ys.swapaxes(0, 1), hf
 
 
-def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """[E,C,D] x [E,D,F] -> [E,C,F] grouped expert GEMM (f32 accumulate)."""
+def moe_gemm_ref(x: jax.Array, w: jax.Array, counts: Optional[jax.Array] = None) -> jax.Array:
+    """[E,C,D] x [E,D,F] -> [E,C,F] grouped expert GEMM (f32 accumulate).
+
+    With `counts` [E] int32, rows at or above an expert's live count are
+    masked to zero first — the ragged-kernel contract (dispatch buffers
+    zero-fill dead capacity slots, so the mask is normally a no-op on the
+    inputs but pins the OUTPUT zeros the ragged kernel emits).
+    """
+    if counts is not None:
+        x = x * _live_mask(x.shape[1], counts).astype(x.dtype)[..., None]
     return jnp.einsum("ecd,edf->ecf", x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                   counts: Optional[jax.Array] = None) -> jax.Array:
+    """silu(x@w1) * (x@w3) per expert — the fused-kernel oracle."""
+    if counts is not None:
+        x = x * _live_mask(x.shape[1], counts).astype(x.dtype)[..., None]
+    h1 = jnp.einsum("ecd,edf->ecf", x, w1, preferred_element_type=jnp.float32)
+    h3 = jnp.einsum("ecd,edf->ecf", x, w3, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(h1) * h3).astype(x.dtype)
+
+
+def _live_mask(c: int, counts: jax.Array) -> jax.Array:
+    """[E, C] bool: capacity slot j of expert e holds a routed token."""
+    return jnp.arange(c)[None, :] < counts[:, None]

@@ -35,8 +35,17 @@ restores the newest checkpoint and fast-forwards the batcher/straggler rng
 streams, so a run killed between driver windows continues with a
 bit-identical loss trajectory (window-partition invariance, DESIGN.md §7).
 
+Model zoo (DESIGN.md §13): ``--arch`` accepts any assigned config id —
+with ``--reduced`` the shrunk MoE (deepseek-v2-lite-16b, phi3.5-moe) and
+SSM (xlstm-350m, hymba-1.5b) presets run the SAME anytime rounds on CPU;
+``--kernel-impl pallas_interpret`` trains through the ragged fused MoE
+kernels / chunked ssm_scan (reference-oracle backward), ``xla`` (the
+default config value) stays on the einsum reference path.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --rounds 40 --workers 8 --s 1 --persistent-frac 0.125
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-v2-lite-16b \
+      --reduced --rounds 8 --workers 4 --q-max 2 --local-batch 2
 """
 from __future__ import annotations
 
@@ -68,8 +77,17 @@ from repro.sharding.specs import corpus_shardings, named, param_pspecs
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--arch", default="qwen2-0.5b",
+                    help="any repro.configs id/alias — incl. the model-zoo "
+                         "MoE (deepseek-v2-lite-16b, phi3.5-moe-42b-a6.6b) "
+                         "and SSM (xlstm-350m, hymba-1.5b) presets")
     ap.add_argument("--reduced", action="store_true", help="CPU-scale variant")
+    ap.add_argument("--kernel-impl",
+                    choices=["config", "xla", "pallas", "pallas_interpret"],
+                    default="config",
+                    help="compute-path override: pallas* trains through the "
+                         "ragged fused MoE / ssm_scan kernels, xla the "
+                         "einsum reference; 'config' keeps the arch default")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--data-plane", choices=["index", "materialized"], default="index",
                     help="index: corpus uploaded once, batches as int32 sample "
@@ -122,11 +140,13 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.kernel_impl != "config":
+        cfg = dataclasses.replace(cfg, kernel_impl=args.kernel_impl)
     if args.model_parallel > 1:
         cfg = dataclasses.replace(cfg, model_parallel=args.model_parallel)
     layout = resolve_layout(cfg, args.layout)
     print(f"[train] {cfg.name} family={cfg.family} params~{M.param_count(cfg):,} "
-          f"layout={layout}")
+          f"layout={layout} kernel={cfg.kernel_impl}")
 
     rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)

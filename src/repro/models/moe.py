@@ -4,9 +4,13 @@ Capacity-based scatter dispatch (dropless up to capacity_factor):
   1. router logits -> top-k experts + weights per token
   2. tokens sorted by expert id; position-within-expert via stable rank
   3. scatter into [E, capacity, D] buffers (overflow dropped, counted)
-  4. grouped expert SwiGLU: einsum over the expert axis (expert-parallel:
-     E is sharded over the `model` mesh axis -> the scatter/gather lower
-     to all-to-all, the MoE-characteristic collective)
+  4. grouped expert SwiGLU over the expert axis (expert-parallel: E is
+     sharded over the `model` mesh axis -> the scatter/gather lower to
+     all-to-all, the MoE-characteristic collective).  kernel_impl pallas*
+     runs the ragged fused kernels — per-expert live counts skip dead
+     capacity tiles, w1/w3+silu*mul fuse into one dispatch (DESIGN.md
+     §13); xla runs the dense einsum reference (the CPU production path
+     and the parity oracle)
   5. gather back, combine with router weights
 Shared experts (DeepSeek) run densely on every token.
 
@@ -63,6 +67,19 @@ def moe_dispatch_indices(ids: jax.Array, n_experts: int, capacity: int):
     return dest
 
 
+def moe_live_counts(dest: jax.Array, n_experts: int, capacity: int) -> jax.Array:
+    """[E] int32 live rows per expert buffer: min(#routed to e, capacity).
+
+    The ragged-kernel control vector (DESIGN.md §13): capacity slot j of
+    expert e holds a token iff j < counts[e] — dispatch fills slots 0..
+    rank-1 contiguously, so the live region is always a prefix and a
+    single per-expert fill level describes it exactly.
+    """
+    kept = dest < n_experts * capacity
+    owner = jnp.where(kept, dest // capacity, n_experts)
+    return jnp.zeros((n_experts + 1,), jnp.int32).at[owner].add(1)[:n_experts]
+
+
 def moe_ffn(
     lp: dict,
     cfg: ModelConfig,
@@ -88,15 +105,17 @@ def moe_ffn(
     # scatter tokens -> expert buffers (extra row catches drops)
     buf = jnp.zeros((e * cap + 1, d), x.dtype).at[jnp.minimum(dest, e * cap)].set(xf[token_src])
     buf = buf[: e * cap].reshape(e, cap, d)
-    # grouped expert SwiGLU (Pallas moe_gemm kernel on the TPU path)
+    # grouped expert SwiGLU (ragged fused Pallas kernels on the TPU path:
+    # per-expert live counts skip dead capacity tiles, w1/w3 + silu*mul run
+    # as ONE kernel, and the down-projection reuses the same counts)
     if cfg.kernel_impl.startswith("pallas"):
         from repro.kernels import ops as kops
 
         interp = cfg.kernel_impl == "pallas_interpret"
-        h1 = kops.moe_gemm(buf, lp["w1"], interpret=interp).astype(jnp.float32)
-        h3 = kops.moe_gemm(buf, lp["w3"], interpret=interp).astype(jnp.float32)
-        h = (jax.nn.silu(h1) * h3).astype(x.dtype)
-        eo = kops.moe_gemm(h, lp["w2"], interpret=interp)
+        counts = moe_live_counts(dest, e, cap)
+        h = kops.moe_swiglu(buf, lp["w1"], lp["w3"], counts=counts,
+                            interpret=interp)
+        eo = kops.moe_gemm(h, lp["w2"], counts=counts, interpret=interp)
     else:
         h1 = jnp.einsum("ecd,edf->ecf", buf, lp["w1"], preferred_element_type=jnp.float32)
         h3 = jnp.einsum("ecd,edf->ecf", buf, lp["w3"], preferred_element_type=jnp.float32)

@@ -7,11 +7,16 @@ import pytest
 
 from repro.kernels.autotune import (
     CACHE_ENV,
+    MoEGemmConfig,
     WindowConfig,
+    autotune_moe_gemm,
     autotune_window,
     cache_key,
     cache_path,
     candidate_configs,
+    moe_gemm_cost,
+    moe_gemm_key,
+    moe_search,
     search,
     window_cost,
 )
@@ -77,8 +82,10 @@ def test_search_is_deterministic():
 # persistent cache
 # ---------------------------------------------------------------------------
 def test_cache_key_spec():
+    # v2: the moe family landed in the same file; v1 entries are orphaned
+    # (never read, never deleted) and every shape re-searches exactly once
     k = cache_key(2, 4, 8, 4, 8, 3000, "bfloat16", "adam", "tpu")
-    assert k == "v1/tpu/E2.K4.W8.Q4.B8.D3000/bfloat16/adam"
+    assert k == "v2/tpu/E2.K4.W8.Q4.B8.D3000/bfloat16/adam"
 
 
 def test_cache_path_resolution(tmp_path, monkeypatch):
@@ -144,3 +151,78 @@ def test_bad_args_raise():
         autotune_window(**_SHAPE, d=512, dtype="float16", backend="cpu")
     with pytest.raises(ValueError):
         autotune_window(**_SHAPE, d=512, opt="adamw", backend="cpu")
+
+
+# ---------------------------------------------------------------------------
+# moe_gemm tile family (same cache file, same degradation semantics)
+# ---------------------------------------------------------------------------
+_MOE = dict(e=4, c=512, d=256, f=256)
+
+
+def test_moe_key_spec():
+    k = moe_gemm_key(8, 1024, 2048, 1408, "bfloat16", "tpu")
+    assert k == "v2/tpu/moe.E8.C1024.D2048.F1408/bfloat16"
+
+
+def test_moe_search_deterministic_and_feasible():
+    a = moe_search(**_MOE, dtype="bfloat16")
+    b = moe_search(**_MOE, dtype="bfloat16")
+    assert a == b
+    _, vmem, ok = moe_gemm_cost(**_MOE, dtype="bfloat16",
+                                bc=a.bc, bf=a.bf, bd=a.bd)
+    assert ok, f"selected tiling infeasible ({vmem} bytes)"
+
+
+def test_moe_swiglu_two_streams_cost_more_vmem():
+    """n_mm=2 (fused SwiGLU: two weight streams + two accumulators) counts
+    against feasibility; the modeled time also covers 2x the flops."""
+    kw = dict(**_MOE, dtype="float32", bc=128, bf=256, bd=256)
+    t1, v1, _ = moe_gemm_cost(**kw, n_mm=1)
+    t2, v2, _ = moe_gemm_cost(**kw, n_mm=2)
+    assert v2 > v1 and t2 > t1
+
+
+def test_moe_cache_roundtrip(tmp_path, monkeypatch):
+    """First call persists under the moe key; second is a pure hit; the
+    window family coexists in the same file without key collisions."""
+    monkeypatch.setenv(CACHE_ENV, str(tmp_path / "tune.json"))
+    cfg = autotune_moe_gemm(**_MOE, dtype="float32", backend="cpu")
+    data = json.loads((tmp_path / "tune.json").read_text())
+    [key] = data.keys()
+    assert key.startswith("v2/cpu/moe.") and data[key]["bc"] == cfg.bc
+    assert autotune_moe_gemm(**_MOE, dtype="float32", backend="cpu") == cfg
+    autotune_window(**_SHAPE, d=512, dtype="float32", opt="sgd", backend="cpu")
+    assert len(json.loads((tmp_path / "tune.json").read_text())) == 2
+
+
+def test_moe_cache_corrupt_entry_research(tmp_path, monkeypatch):
+    p = tmp_path / "tune.json"
+    monkeypatch.setenv(CACHE_ENV, str(p))
+    key = moe_gemm_key(**_MOE, dtype="float32", backend="cpu")
+    p.write_text(json.dumps({key: {"bc": "nonsense"}}))
+    cfg = autotune_moe_gemm(**_MOE, dtype="float32", backend="cpu")
+    assert isinstance(cfg, MoEGemmConfig) and cfg.bc >= 8
+    # the re-search repaired the persisted entry
+    assert json.loads(p.read_text())[key]["bc"] == cfg.bc
+
+
+def test_moe_v1_entries_are_orphaned(tmp_path, monkeypatch):
+    """A v1-era entry at the same shape never satisfies a v2 lookup — the
+    version bump forces one re-search instead of trusting stale tilings."""
+    p = tmp_path / "tune.json"
+    monkeypatch.setenv(CACHE_ENV, str(p))
+    stale_key = moe_gemm_key(**_MOE, dtype="float32",
+                             backend="cpu").replace("v2/", "v1/")
+    p.write_text(json.dumps({stale_key: {"bc": 8, "bf": 128, "bd": 128}}))
+    cfg = autotune_moe_gemm(**_MOE, dtype="float32", backend="cpu")
+    data = json.loads(p.read_text())
+    assert stale_key in data  # orphan left in place ...
+    assert moe_gemm_key(**_MOE, dtype="float32", backend="cpu") in data
+    assert (cfg.bc, cfg.bf, cfg.bd) != (8, 128, 128)  # ... and not trusted
+
+
+def test_moe_bad_args_raise():
+    with pytest.raises(ValueError):
+        autotune_moe_gemm(**_MOE, dtype="float16", backend="cpu")
+    with pytest.raises(ValueError):
+        autotune_moe_gemm(e=0, c=512, d=256, f=256, backend="cpu")

@@ -132,6 +132,56 @@ def test_ssm_scan_state_continuity():
     np.testing.assert_allclose(np.asarray(y64), np.asarray(ye), rtol=1e-4, atol=1e-4)
 
 
+@hypothesis.given(
+    s=st.sampled_from([1, 37, 100, 129]),    # never a multiple of lc=64
+    di=st.sampled_from([8, 72, 96]),         # never a multiple of db=64
+)
+@hypothesis.settings(**SETTINGS)
+def test_ssm_scan_chunk_boundary_parity(s, di):
+    """S % lc != 0 AND Di % db != 0 simultaneously: the padded tail chunk
+    and padded channel block must not leak into y or the carried state."""
+    rng = np.random.default_rng(21)
+    b, n, lc, db = 2, 8, 64, 64
+    x = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, di)) * 0.2 + 1e-3, jnp.float32)
+    a = -jnp.asarray(rng.random((di, n)) * 4 + 0.2, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal(di), jnp.float32)
+    y, hf = ops.ssm_scan(x, dt, a, bb, cc, d, lc=lc, db=db, interpret=True)
+    ye, hfe = ref.ssm_scan_ref(x, dt, a, bb, cc, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfe), rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_chunk_boundary_grads():
+    """custom_vjp backward at a double-ragged shape == lax.scan oracle grads."""
+    import jax as _jax
+
+    rng = np.random.default_rng(25)
+    b, s, di, n, lc, db = 1, 100, 96, 8, 64, 64
+    x = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, di)) * 0.1 + 1e-3, jnp.float32)
+    a = -jnp.asarray(rng.random((di, n)) + 0.2, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal(di), jnp.float32)
+
+    def f_k(x, dt):
+        y, hf = ops.ssm_scan(x, dt, a, bb, cc, d, lc=lc, db=db, interpret=True)
+        return jnp.sum(y ** 2) + jnp.sum(hf ** 2)
+
+    def f_r(x, dt):
+        y, hf = ref.ssm_scan_ref(x, dt, a, bb, cc, d)
+        return jnp.sum(y ** 2) + jnp.sum(hf ** 2)
+
+    gk = _jax.grad(f_k, argnums=(0, 1))(x, dt)
+    gr = _jax.grad(f_r, argnums=(0, 1))(x, dt)
+    for ak, ar in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(ak), np.asarray(ar),
+                                   rtol=1e-4, atol=1e-4)
+
+
 # ------------------------------- moe grouped gemm -------------------------
 @hypothesis.given(
     e=st.integers(1, 6),

@@ -1,0 +1,264 @@
+"""MoE capacity dispatch + ragged fused kernel contracts (DESIGN.md §13):
+overflow-drop accounting, expert-permutation invariance, live-count
+histogram semantics, and ragged/empty-expert kernel parity vs the einsum
+oracle (forward AND the custom_vjp backward)."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.moe import (
+    moe_dispatch_indices,
+    moe_ffn,
+    moe_live_counts,
+    router_topk,
+)
+
+SETTINGS = dict(max_examples=8, deadline=None, derandomize=True)
+
+
+def _np_histogram(ids: np.ndarray, e: int) -> np.ndarray:
+    return np.bincount(ids.reshape(-1), minlength=e)[:e]
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+@hypothesis.given(
+    t=st.integers(1, 64),
+    e=st.integers(1, 8),
+    k=st.integers(1, 3),
+    cap=st.integers(1, 16),
+)
+@hypothesis.settings(**SETTINGS)
+def test_overflow_drop_counts(t, e, k, cap):
+    """#dropped slot-assignments == sum_e max(0, routed_e - capacity)."""
+    k = min(k, e)
+    rng = np.random.default_rng(17)
+    ids = jnp.asarray(
+        np.stack([rng.choice(e, size=k, replace=False) for _ in range(t)]),
+        jnp.int32)
+    dest = moe_dispatch_indices(ids, e, cap)
+    routed = _np_histogram(np.asarray(ids), e)
+    expect_drop = np.maximum(routed - cap, 0).sum()
+    assert int(np.sum(np.asarray(dest) >= e * cap)) == expect_drop
+    # every kept destination slot is unique (one token per capacity slot)
+    kept = np.asarray(dest)[np.asarray(dest) < e * cap]
+    assert len(np.unique(kept)) == len(kept)
+
+
+@hypothesis.given(
+    t=st.integers(1, 64),
+    e=st.integers(1, 8),
+    k=st.integers(1, 3),
+    cap=st.integers(1, 16),
+)
+@hypothesis.settings(**SETTINGS)
+def test_live_counts_are_clipped_histogram(t, e, k, cap):
+    """counts[e] == min(#tokens routed to e, capacity) — the ragged-kernel
+    control vector is exactly the clipped routing histogram."""
+    k = min(k, e)
+    rng = np.random.default_rng(23)
+    ids = jnp.asarray(
+        np.stack([rng.choice(e, size=k, replace=False) for _ in range(t)]),
+        jnp.int32)
+    dest = moe_dispatch_indices(ids, e, cap)
+    counts = np.asarray(moe_live_counts(dest, e, cap))
+    expect = np.minimum(_np_histogram(np.asarray(ids), e), cap)
+    np.testing.assert_array_equal(counts, expect)
+
+
+def test_live_region_is_prefix():
+    """Dispatch fills each expert buffer 0..count-1 contiguously: every
+    kept dest's within-expert slot is < that expert's live count."""
+    rng = np.random.default_rng(3)
+    e, cap = 4, 8
+    ids = jnp.asarray(rng.integers(0, e, (40, 2)), jnp.int32)
+    dest = np.asarray(moe_dispatch_indices(ids, e, cap))
+    counts = np.asarray(moe_live_counts(jnp.asarray(dest), e, cap))
+    kept = dest[dest < e * cap]
+    assert np.all(kept % cap < counts[kept // cap])
+
+
+# ---------------------------------------------------------------------------
+# expert-permutation invariance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kernel_impl", ["xla", "pallas_interpret"])
+def test_expert_permutation_invariance(kernel_impl):
+    """Relabeling experts (router columns + weight stacks permuted by the
+    same sigma) must not change the layer output or the dropped fraction."""
+    from repro.configs import get_config
+
+    cfg = dataclasses.replace(get_config("phi3_5_moe_42b").reduced(),
+                              dtype="float32", kernel_impl=kernel_impl)
+    mc = cfg.moe
+    rng = np.random.default_rng(7)
+    d, e = cfg.d_model, mc.n_experts
+    fe = mc.d_ff_expert or cfg.d_ff
+    lp = {
+        "router": jnp.asarray(rng.standard_normal((d, e)) * 0.1, jnp.float32),
+        "w1": jnp.asarray(rng.standard_normal((e, d, fe)) * 0.05, jnp.float32),
+        "w3": jnp.asarray(rng.standard_normal((e, d, fe)) * 0.05, jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((e, fe, d)) * 0.05, jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((2, 16, d)), jnp.float32)
+    out, aux = moe_ffn(lp, cfg, x)
+    sigma = np.random.default_rng(11).permutation(e)
+    lp_p = dict(lp, router=lp["router"][:, sigma], w1=lp["w1"][sigma],
+                w3=lp["w3"][sigma], w2=lp["w2"][sigma])
+    out_p, aux_p = moe_ffn(lp_p, cfg, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux["moe_dropped"]),
+                               float(aux_p["moe_dropped"]), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# ragged / fused kernel parity vs the einsum oracle
+# ---------------------------------------------------------------------------
+@hypothesis.given(
+    e=st.integers(1, 5),
+    c=st.integers(1, 130),
+    d=st.sampled_from([16, 96, 300]),
+    f=st.sampled_from([32, 160]),
+    fill=st.sampled_from(["empty", "skew", "full", "random"]),
+)
+@hypothesis.settings(**SETTINGS)
+def test_ragged_kernel_parity_sweep(e, c, d, f, fill):
+    rng = np.random.default_rng(29)
+    if fill == "empty":
+        counts = np.zeros(e, np.int64)
+    elif fill == "full":
+        counts = np.full(e, c)
+    elif fill == "skew":
+        counts = np.zeros(e, np.int64)
+        counts[0] = c
+    else:
+        counts = rng.integers(0, c + 1, e)
+    counts = jnp.asarray(counts, jnp.int32)
+    x = jnp.asarray(rng.standard_normal((e, c, d)), jnp.float32)
+    x = x * ref._live_mask(c, counts).astype(x.dtype)[..., None]
+    w1 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    w3 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    out = ops.moe_gemm(x, w1, counts=counts, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.moe_gemm_ref(x, w1, counts=counts)),
+        rtol=2e-3, atol=2e-3)
+    sw = ops.moe_swiglu(x, w1, w3, counts=counts, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(sw), np.asarray(ref.moe_swiglu_ref(x, w1, w3, counts=counts)),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("counts_spec", [
+    [0, 0, 0],       # all experts empty
+    [100, 0, 0],     # full skew, empty experts
+    [33, 100, 7],    # partial tiles on every expert
+])
+def test_ragged_kernel_parity_fixed(counts_spec):
+    """Non-hypothesis parity pin: ragged + fused kernels vs einsum oracle
+    at a shape with partial tiles (c=100 does not divide the 32-row tile)."""
+    rng = np.random.default_rng(47)
+    e, c, d, f = 3, 100, 48, 80
+    counts = jnp.asarray(counts_spec, jnp.int32)
+    x = jnp.asarray(rng.standard_normal((e, c, d)), jnp.float32)
+    x = x * ref._live_mask(c, counts).astype(x.dtype)[..., None]
+    w1 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    w3 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    tiles = (32, 64, 32)  # force partial edge tiles in every dimension
+    np.testing.assert_allclose(
+        np.asarray(ops.moe_gemm(x, w1, counts=counts, tiles=tiles, interpret=True)),
+        np.asarray(ref.moe_gemm_ref(x, w1, counts=counts)),
+        rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(ops.moe_swiglu(x, w1, w3, counts=counts, tiles=tiles, interpret=True)),
+        np.asarray(ref.moe_swiglu_ref(x, w1, w3, counts=counts)),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_ragged_dead_tiles_emit_zeros_even_for_garbage_rows():
+    """The ragged kernel's output above the fill level is EXACTLY zero even
+    when the input rows there are garbage — the kernel guarantees the
+    zeros, not the caller's buffer hygiene."""
+    rng = np.random.default_rng(31)
+    e, c, d, f = 3, 96, 64, 64
+    counts = jnp.asarray([10, 0, 96], jnp.int32)
+    x = jnp.asarray(rng.standard_normal((e, c, d)), jnp.float32)  # no masking
+    w = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    out = np.asarray(ops.moe_gemm(x, w, counts=counts, tiles=(32, 64, 64),
+                                  interpret=True))
+    # tiles fully above the fill level are zero; the partially-live tile
+    # (rows 10..31 of expert 0) computes garbage rows — that is the
+    # documented contract: callers must zero-fill dead slots for bit-exact
+    # parity, the kernel only guarantees zeros at TILE granularity
+    assert np.all(out[0, 32:] == 0.0)
+    assert np.all(out[1] == 0.0)
+    assert np.any(out[2] != 0.0)
+
+
+def test_ragged_kernel_grads_match_reference():
+    """custom_vjp backward == grads of the masked-einsum oracle."""
+    rng = np.random.default_rng(37)
+    e, c, d, f = 3, 40, 32, 48
+    counts = jnp.asarray([40, 0, 17], jnp.int32)
+    x = jnp.asarray(rng.standard_normal((e, c, d)), jnp.float32)
+    x = x * ref._live_mask(c, counts).astype(x.dtype)[..., None]
+    w1 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    w3 = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((e, f, d)), jnp.float32)
+
+    def net_kernel(x, w1, w3, w2):
+        h = ops.moe_swiglu(x, w1, w3, counts=counts, interpret=True)
+        return jnp.sum(ops.moe_gemm(h, w2, counts=counts, interpret=True) ** 2)
+
+    def net_ref(x, w1, w3, w2):
+        h = ref.moe_swiglu_ref(x, w1, w3, counts=counts)
+        return jnp.sum(ref.moe_gemm_ref(h, w2, counts=counts) ** 2)
+
+    gk = jax.grad(net_kernel, argnums=(0, 1, 2, 3))(x, w1, w3, w2)
+    gr = jax.grad(net_ref, argnums=(0, 1, 2, 3))(x, w1, w3, w2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_moe_ffn_ragged_pallas_matches_einsum_path():
+    """Full layer: the ragged fused pallas path == the dense einsum path
+    (same dispatch, same drops), value AND gradient."""
+    from repro.configs import get_config
+
+    cfg = dataclasses.replace(get_config("deepseek_v2_lite_16b").reduced(),
+                              dtype="float32")
+    cfg_p = dataclasses.replace(cfg, kernel_impl="pallas_interpret")
+    mc = cfg.moe
+    rng = np.random.default_rng(41)
+    d, e = cfg.d_model, mc.n_experts
+    fe = mc.d_ff_expert or cfg.d_ff
+    lp = {
+        "router": jnp.asarray(rng.standard_normal((d, e)) * 0.1, jnp.float32),
+        "w1": jnp.asarray(rng.standard_normal((e, d, fe)) * 0.05, jnp.float32),
+        "w3": jnp.asarray(rng.standard_normal((e, d, fe)) * 0.05, jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((e, fe, d)) * 0.05, jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((2, 24, d)), jnp.float32)
+    out_x, _ = moe_ffn(lp, cfg, x)
+    out_p, _ = moe_ffn(lp, cfg_p, x)
+    np.testing.assert_allclose(np.asarray(out_x), np.asarray(out_p),
+                               rtol=1e-4, atol=1e-4)
+    g_x = jax.grad(lambda w: jnp.sum(moe_ffn(dict(lp, w1=w), cfg, x)[0] ** 2))(lp["w1"])
+    g_p = jax.grad(lambda w: jnp.sum(moe_ffn(dict(lp, w1=w), cfg_p, x)[0] ** 2))(lp["w1"])
+    np.testing.assert_allclose(np.asarray(g_x), np.asarray(g_p),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_router_topk_weights_normalized():
+    rng = np.random.default_rng(43)
+    logits = jnp.asarray(rng.standard_normal((12, 6)), jnp.float32)
+    w, ids = router_topk(logits, 2)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-6)
+    assert int(jnp.max(ids)) < 6
