@@ -18,6 +18,7 @@
   runtime  real multi-process fleet vs simulated oracle (BENCH_runtime.json)
   serve    paged anytime scheduler vs dense slot path  (BENCH_serve.json)
   zoo      ragged fused MoE ablation + zoo anytime matrix (BENCH_zoo.json)
+  spec     deadline-adaptive speculative decoding regimes (BENCH_spec.json)
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call column carries the
 figure's headline number where a wall-time makes no sense).  With
@@ -66,6 +67,7 @@ def main() -> None:
         roofline_bench,
         runtime_bench,
         serve_bench,
+        spec_bench,
         sweep_bench,
         tree_bench,
         variance_decay,
@@ -92,6 +94,7 @@ def main() -> None:
         "runtime": runtime_bench.run,
         "serve": serve_bench.run,
         "zoo": zoo_bench.run,
+        "spec": spec_bench.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,51 @@
+"""Speculative-decoding bench: deadline-adaptive speculation on the paged
+serving stack (DESIGN.md §14).
+
+Replays Poisson traces through `repro.launch.serve --spec` across three
+acceptance regimes — high (repetitive/code-like prompts, greedy), medium
+(mixed random prompts, greedy), low (adversarial: random prompts under hot
+sampling) — each with speculation on vs off, emitting BENCH_spec.json.
+The headline is the high-regime tok/s speedup; the low regime is the
+graceful-degradation floor (the acceptance EMA drives k_v to zero, so a
+hostile workload must never fall below ~0.9x of the plain scheduler).
+"""
+from __future__ import annotations
+
+HEADLINE_FLOOR = 1.5  # high-acceptance regime must beat the plain scheduler
+ADVERSARIAL_FLOOR = 0.9  # low-acceptance regime must degrade gracefully
+
+
+def run(capacity: int = 2048, n_requests: int = 10, gen: int = 48):
+    from repro.launch import serve
+
+    # deadline 100ms: enough headroom over the reduced-config step cost
+    # that the anytime budget can actually buy verify windows — at ~50ms
+    # the k_v rule itself (correctly) pins speculation near zero
+    bench = serve.main([
+        "--arch", "qwen2_0_5b", "--reduced", "--spec",
+        "--n-requests", str(n_requests), "--capacity", str(capacity),
+        "--batch", "4", "--gen", str(gen), "--deadline-ms", "100",
+        "--out", "BENCH_spec.json",
+    ])
+    rows = []
+    for name, row in bench["regimes"].items():
+        rows.append((
+            f"spec_{name}_speedup", f"{row['speedup']:.2f}",
+            f"spec={row['spec']['tok_s']:.1f} base={row['base']['tok_s']:.1f} tok/s "
+            f"accept={row['accept_rate']:.2f} "
+            f"miss={row['spec']['deadline_miss_rate']:.2f}",
+        ))
+    high = bench["regimes"]["high"]
+    low = bench["regimes"]["low"]
+    assert bench["speedup"] >= HEADLINE_FLOOR, (
+        f"high-acceptance speculation {bench['speedup']:.2f}x < {HEADLINE_FLOOR}x")
+    assert low["speedup"] >= ADVERSARIAL_FLOOR, (
+        f"adversarial regime {low['speedup']:.2f}x < {ADVERSARIAL_FLOOR}x floor")
+    assert high["spec"]["deadline_miss_rate"] <= high["base"]["deadline_miss_rate"] + 0.05, (
+        "speculation may not worsen the deadline-miss rate")
+    rows.append((
+        "spec_headline", f"{bench['speedup']:.2f}",
+        f"high-acceptance spec vs plain paged @cap={capacity} "
+        f"accept={high['accept_rate']:.2f}",
+    ))
+    return rows

@@ -23,6 +23,8 @@ from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.paged_decode_attention import (
     paged_decode_attention as _paged_decode_pallas,
     paged_decode_ref as _paged_decode_ref,
+    paged_verify_attention as _paged_verify_pallas,
+    paged_verify_ref as _paged_verify_ref,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
@@ -160,6 +162,28 @@ def paged_decode_attention(
     else:
         out = _paged_decode_ref(q[:, 0], k_pool, v_pool, block_tables, seq_lens, qmap)
     return out[:, None]  # [B, 1, H, Dh]
+
+
+def paged_verify_attention(
+    q: jax.Array,  # [B, T, H, Dh]  (model layout; T = 1 + draft window)
+    k_pool: jax.Array,  # [NB, BS, Hkv, Dh]  shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # [B, NBLK] int32
+    base_pos: jax.Array,  # [B] int32 — absolute position of query 0 (-1 idle)
+    n_q: jax.Array,  # [B] int32 — live contiguous queries per row
+    qmap: jax.Array,  # [H] int32 q->kv head map
+    impl: str = "pallas",
+) -> jax.Array:
+    """Multi-query block-table attention for speculative verification and
+    chunked prefill (queries contiguous from base_pos per row).  impl:
+    'pallas' | 'pallas_interpret' | 'xla' ('xla' runs the gather-based jnp
+    oracle — the CPU production path)."""
+    if impl.startswith("pallas"):
+        return _paged_verify_pallas(
+            q, k_pool, v_pool, block_tables, base_pos, n_q, qmap,
+            interpret=impl == "pallas_interpret",
+        )
+    return _paged_verify_ref(q, k_pool, v_pool, block_tables, base_pos, n_q, qmap)
 
 
 # --------------------------------------------------------------------------

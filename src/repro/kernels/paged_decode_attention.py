@@ -19,6 +19,17 @@ via the l > 0 guard.
 `paged_decode_ref` is the pure-jnp oracle (also the CPU production path:
 it gathers only the table's blocks, so its cost scales with the bucketed
 context length, not the pool capacity).
+
+`paged_verify_attention` is the multi-query generalization for speculative
+verification (DESIGN.md §14): T query positions per sequence — the last
+accepted token plus the draft window — attend the same block-table-gathered
+context under a causal intra-draft mask.  Queries are CONTIGUOUS by
+contract: row b's query i sits at absolute position base_pos[b] + i and is
+live iff i < n_q[b], so the whole mask lowers to two scalars per row
+(kpos <= base + i, i < n_q) instead of a [B, T] position tensor.  A row
+with n_q == 0 (idle) returns exactly zero, and dead query rows i >= n_q
+are zero too — the same l > 0 guard as the decode kernel, per query.
+`paged_verify_ref` is its jnp oracle / CPU production path.
 """
 from __future__ import annotations
 
@@ -112,6 +123,136 @@ def paged_decode_attention(
         out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
         interpret=interpret,
     )(tbl, lens, qm, q, k_pool, v_pool)
+
+
+def _verify_kernel(
+    tbl_ref, base_ref, nq_ref, qmap_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr, *, scale, bs, n_blk, t,
+):
+    ib = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)  # [T, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [BS, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    base = base_ref[ib]
+    n_q = nq_ref[ib]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (t, bs), 0)  # query index
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (t, bs), 1)
+    # query i (absolute position base + i) sees keys at positions <= its
+    # own; dead query rows (i >= n_q, incl. idle rows with n_q == 0) see
+    # nothing and finalize to zero through the l > 0 guard
+    ok = (kpos <= base + iq) & (iq < n_q)  # [T, BS]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [T, BS]
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_scr[...]  # [T]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)  # [T, BS]
+    alpha = jnp.exp(m_prev - m_new)  # [T]
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, :, 0] = (
+            acc_scr[...] / jnp.where(l > 0, l, 1.0)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(
+    q: jax.Array,  # [B, T, H, Dh] — contiguous query window per sequence
+    k_pool: jax.Array,  # [NB, BS, Hkv, Dh]  shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # [B, NBLK] int32
+    base_pos: jax.Array,  # [B] int32 — absolute position of query 0 (-1 idle)
+    n_q: jax.Array,  # [B] int32 — live queries per row (0 = idle row)
+    qmap: jax.Array,  # [H] int32 — q head -> kv head (GQA grouping)
+    interpret: bool = False,
+) -> jax.Array:
+    """T-query verification attention through the block table: query i of
+    row b sits at position base_pos[b] + i and attends every pool position
+    <= its own (draft K/V must already be table-resident — the caller
+    writes the window before verifying).  Returns [B, T, H, Dh]."""
+    b, t, h, dh = q.shape
+    _, bs, _, _ = k_pool.shape
+    n_blk = block_tables.shape[1]
+    tbl = block_tables.astype(jnp.int32)
+    base = base_pos.astype(jnp.int32)
+    nq = n_q.astype(jnp.int32)
+    qm = qmap.astype(jnp.int32)
+    kernel = functools.partial(
+        _verify_kernel, scale=1.0 / math.sqrt(dh), bs=bs, n_blk=n_blk, t=t
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, h, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, t, 1, dh), lambda ib, ih, j, tbl, bp, nq, qm: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda ib, ih, j, tbl, bp, nq, qm: (tbl[ib, j], 0, qm[ih], 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda ib, ih, j, tbl, bp, nq, qm: (tbl[ib, j], 0, qm[ih], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, 1, dh), lambda ib, ih, j, tbl, bp, nq, qm: (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t,), jnp.float32),
+            pltpu.VMEM((t,), jnp.float32),
+            pltpu.VMEM((t, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, dh), q.dtype),
+        interpret=interpret,
+    )(tbl, base, nq, qm, q, k_pool, v_pool)
+
+
+def paged_verify_ref(
+    q: jax.Array,  # [B, T, H, Dh]
+    k_pool: jax.Array,  # [NB, BS, Hkv, Dh]
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # [B, NBLK]
+    base_pos: jax.Array,  # [B]
+    n_q: jax.Array,  # [B]
+    qmap: jax.Array,  # [H]
+) -> jax.Array:
+    """jnp oracle for the multi-query verification kernel (also the CPU
+    production path).  Dead query rows and idle sequences return zeros."""
+    b, t, h, dh = q.shape
+    _, bs, hkv, _ = k_pool.shape
+    n_blk = block_tables.shape[1]
+    c = n_blk * bs
+    k = jnp.take(k_pool, block_tables.reshape(-1), axis=0).reshape(b, c, hkv, dh)
+    v = jnp.take(v_pool, block_tables.reshape(-1), axis=0).reshape(b, c, hkv, dh)
+    k = jnp.take(k, qmap, axis=2)  # [B, C, H, Dh]
+    v = jnp.take(v, qmap, axis=2)
+    iq = jnp.arange(t)[None, :]  # [1, T]
+    qpos = base_pos[:, None] + iq  # [B, T]
+    live = iq < n_q[:, None]  # [B, T]
+    valid = (jnp.arange(c)[None, None, :] <= qpos[..., None]) & live[..., None]  # [B, T, C]
+    logits = jnp.einsum(
+        "bthd,bchd->bhtc", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(dh)
+    logits = jnp.where(valid[:, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(valid[:, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.where(l > 0, l, 1.0)
+    out = jnp.einsum("bhtc,bchd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
 
 
 def paged_decode_ref(

@@ -1,0 +1,92 @@
+"""Token sampling and speculative acceptance (DESIGN.md §14).
+
+Sampling runs HOST-SIDE on numpy: the schedulers pull logits off the
+device once per step anyway, vocabularies here are small, and host
+sampling keeps the jitted model steps sampling-agnostic (one trace per
+shape bucket regardless of temperature/top-k/top-p).
+
+Determinism: every sequence draws from its own `np.random.Generator`
+seeded by SeedSequence([seed, rid]), so outputs are reproducible per
+request and independent of scheduling order / batch composition.
+
+Speculative acceptance follows Leviathan-style rejection sampling
+specialized to a DETERMINISTIC drafter (draft distribution q = δ_d):
+accept d with probability p(d); on rejection resample from
+norm(p with d zeroed).  The emitted token is then distributed exactly
+as p:  P(t) = p(d)·[t=d] + (1−p(d))·p(t)·[t≠d]/(1−p(d)) = p(t).
+Greedy mode degenerates to argmax equality, which makes speculative
+greedy decoding token-for-token identical to the non-speculative path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature<=0 means greedy; top_k=0 and top_p=1.0 disable filters."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def seq_rng(seed: int, rid: int) -> np.random.Generator:
+    """Per-sequence generator: reproducible regardless of batch order."""
+    return np.random.default_rng(np.random.SeedSequence([int(seed), int(rid)]))
+
+
+def probs(logits, sp: SamplingParams) -> np.ndarray:
+    """Filtered next-token distribution: temperature, then top-k, then
+    nucleus (top-p) on the renormalized survivors.  float64 throughout so
+    the rejection-sampling identity holds to tight tolerance."""
+    x = np.asarray(logits, np.float64) / max(sp.temperature, 1e-6)
+    x = x - x.max()
+    p = np.exp(x)
+    p /= p.sum()
+    if sp.top_k and sp.top_k < p.size:
+        kth = np.partition(p, -sp.top_k)[-sp.top_k]
+        p = np.where(p >= kth, p, 0.0)
+        p /= p.sum()
+    if sp.top_p < 1.0:
+        order = np.argsort(-p, kind="stable")
+        csum = np.cumsum(p[order])
+        keep = int(np.searchsorted(csum, sp.top_p)) + 1  # smallest covering set
+        mask = np.zeros(p.size, bool)
+        mask[order[:keep]] = True
+        p = np.where(mask, p, 0.0)
+        p /= p.sum()
+    return p
+
+
+def sample(logits, sp: SamplingParams, rng) -> int:
+    if sp.greedy:
+        return int(np.argmax(logits))
+    p = probs(logits, sp)
+    return int(rng.choice(p.size, p=p))
+
+
+def spec_accept(draft: int, logits, sp: SamplingParams, rng) -> tuple[bool, int]:
+    """One draft position: returns (accepted, token).  `token` equals
+    `draft` when accepted, else the resampled correction.  The emitted
+    token is distributed exactly as the target distribution (greedy:
+    exactly argmax) — see module docstring."""
+    if sp.greedy:
+        t = int(np.argmax(logits))
+        return t == int(draft), t
+    p = probs(logits, sp)
+    d = int(draft)
+    if rng.random() < p[d]:
+        return True, d
+    q = p.copy()
+    q[d] = 0.0
+    s = q.sum()
+    if s <= 0.0:  # p was a point mass on d; the reject branch has measure 0
+        return True, d
+    return False, int(rng.choice(q.size, p=q / s))

@@ -19,9 +19,18 @@ fixed-time/observed-q discipline applied to serving: the tick combines
 whatever work completed instead of stalling the batch on its slowest
 admission.
 
-All device shapes are static per (bucket, chunk) pair — block tables are
-bucketed to powers of two — so the jitted steps settle into a handful of
-traces and never recompile as requests come and go.
+`PagedScheduler` additionally runs deadline-adaptive SPECULATIVE decoding
+(DESIGN.md §14): a model-free n-gram drafter proposes per-sequence draft
+windows, one multi-query `verify_step` scores every window in a single
+forward, and rejected draft K/V is truncated host-side by
+`BlockManager.rewind`.  The draft length k_v is the anytime knob — chosen
+each tick from the leftover deadline budget (after reserving the
+guaranteed prefill chunk) and each sequence's acceptance-rate EMA,
+exactly how the paper adapts q_v to observed worker arrivals.
+
+All device shapes are static per (bucket, chunk) pair — block tables and
+verify windows are bucketed to powers of two — so the jitted steps settle
+into a handful of traces and never recompile as requests come and go.
 """
 from __future__ import annotations
 
@@ -35,10 +44,62 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.launch import sampling as S
 from repro.models import model as M
 from repro.models.kvcache import BlockManager, SeqBlocks, init_cache, init_paged_pool
 
 PyTree = Any
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafter (DESIGN.md §14).
+
+    Proposes the continuation of the most recent earlier occurrence of the
+    sequence's trailing n-gram (n from `max_n` down to `min_n`).  Pure
+    host-side numpy over the tokens already emitted — zero model cost, so a
+    miss (empty draft) only wastes microseconds.  `min_n` defaults to 2:
+    unigram backoff fires on almost any history (any repeated token), which
+    on adversarial random text burns a verify window per tick for ~zero
+    acceptance; a bigram repeat is real evidence of local structure.
+    Drafted tokens are appended to the lookup history and the match is
+    re-run (self-extension): on text with local period p < k the most
+    recent match sits only p tokens back and its raw continuation runs
+    off the end of history after p tokens — re-matching against the
+    extended history unrolls the cycle out to the full k.
+    Interface: `draft(history, k)` returns 0..k proposed next tokens for a
+    sequence whose accepted context is exactly `history`.
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 2):
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def _next(self, h: np.ndarray) -> list[int]:
+        """All tokens the most recent n-gram match can vouch for (>=1), or []."""
+        n_h = h.size
+        for n in range(min(self.max_n, n_h - 1), self.min_n - 1, -1):
+            pat = h[n_h - n :]
+            win = np.lib.stride_tricks.sliding_window_view(h, n)
+            hits = np.flatnonzero((win[:-1] == pat).all(axis=1))
+            if hits.size:
+                i = int(hits[-1])  # most recent earlier occurrence
+                cont = h[i + n :]
+                if cont.size:
+                    return [int(t) for t in cont]
+        return []
+
+    def draft(self, history: np.ndarray, k: int) -> list[int]:
+        h = np.asarray(history, np.int32)
+        if k <= 0 or h.size < 2:
+            return []
+        d: list[int] = []
+        while len(d) < k:
+            cont = self._next(h)[: k - len(d)]
+            if not cont:
+                break
+            d.extend(cont)
+            h = np.concatenate([h, np.asarray(cont, np.int32)])
+        return d
 
 
 @dataclasses.dataclass
@@ -79,11 +140,14 @@ class DecodeScheduler:
     """Slot-based continuous batching around jitted prefill/decode steps."""
 
     def __init__(self, cfg: ModelConfig, params: PyTree, n_slots: int, max_len: int,
-                 greedy: bool = True):
+                 sampling: S.SamplingParams = S.SamplingParams(), seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.sampling = sampling
+        self.seed = seed
+        self._rngs: dict[int, np.random.Generator] = {}
         self.cache = init_cache(cfg, n_slots, max_len)
         self.positions = np.zeros(n_slots, np.int32)
         self.remaining = np.zeros(n_slots, np.int32)  # 0 = free slot
@@ -121,7 +185,8 @@ class DecodeScheduler:
                 self.params, jnp.asarray(req.prompt[None]), self._admit_cache
             )
             self.cache = _write_slot(self.cache, self._admit_cache, int(slot))
-            tok = int(jnp.argmax(logits[0, : self.cfg.vocab]))
+            rng = self._rngs.setdefault(req.rid, S.seq_rng(self.seed, req.rid))
+            tok = S.sample(np.asarray(logits[0, : self.cfg.vocab]), self.sampling, rng)
             self.positions[slot] = s
             self.remaining[slot] = req.max_new
             self.rid[slot] = req.rid
@@ -138,14 +203,16 @@ class DecodeScheduler:
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.positions)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], axis=-1), np.int32)
+        lg = np.asarray(logits[:, : self.cfg.vocab])
         for slot in np.flatnonzero(active):
-            self.out[int(self.rid[slot])].append(int(self.last_tok[slot]))
+            rid = int(self.rid[slot])
+            self.out[rid].append(int(self.last_tok[slot]))
             self.positions[slot] += 1
             self.remaining[slot] -= 1
-            self.last_tok[slot] = nxt[slot]
+            self.last_tok[slot] = S.sample(lg[slot], self.sampling, self._rngs[rid])
             if self.remaining[slot] == 0:
-                self.finished.append(Finished(int(self.rid[slot]), self.out.pop(int(self.rid[slot]))))
+                self.finished.append(Finished(rid, self.out.pop(rid)))
+                self._rngs.pop(rid, None)
                 self.rid[slot] = -1
 
     def run_to_completion(self, max_ticks: int = 10_000) -> dict[int, list]:
@@ -162,6 +229,7 @@ class DecodeScheduler:
 # module-level jits with cfg static: the trace cache is shared across
 # scheduler instances (the serve bench builds several schedulers per run)
 _paged_step_jit = jax.jit(M.paged_step, static_argnums=(1,))
+_verify_jit = jax.jit(M.verify_step, static_argnums=(1,))
 
 
 def _bucket(n: int) -> int:
@@ -181,6 +249,8 @@ class _Seq:
     out: list
     last_tok: int = 0
     n_ctx: int = 0  # tokens in context = prompt + generated
+    accept_ema: float = 1.0  # optimistic init: first ticks draft at full k
+    since_spec: int = 0  # plain ticks since the last drafted window (probe clock)
 
     @property
     def decoding(self) -> bool:
@@ -207,7 +277,9 @@ class PagedScheduler:
 
     def __init__(self, cfg: ModelConfig, params: PyTree, n_slots: int,
                  n_blocks: int, block_size: int = 16, chunk_tokens: int = 32,
-                 deadline_ms: float = 50.0):
+                 deadline_ms: float = 50.0,
+                 sampling: S.SamplingParams = S.SamplingParams(), seed: int = 0,
+                 spec: bool = False, spec_max_k: int = 7):
         assert M.paged_supported(cfg), f"paged scheduler unsupported for {cfg.name}"
         self.cfg = cfg
         self.params = params
@@ -215,14 +287,30 @@ class PagedScheduler:
         self.block_size = block_size
         self.chunk_tokens = chunk_tokens
         self.deadline_s = deadline_ms / 1e3
+        self.sampling = sampling
+        self.seed = seed
+        self.spec = spec
+        self.spec_max_k = spec_max_k  # 7 -> verify windows bucket to T=8
+        self.drafter = NGramDrafter()
         self.pool = init_paged_pool(cfg, n_blocks, block_size)
         self.bm = BlockManager(n_blocks, block_size)
         self.active: list[_Seq] = []
         self.queue: list[Request] = []
         self.finished: list[Finished] = []
+        self._rngs: dict[int, np.random.Generator] = {}
+        # learned cost model for the anytime k_v choice: EMAs of the T=1
+        # step, the marginal cost per extra verify token, and the prefill
+        # chunk.  First observation of each jit trace key is discarded so
+        # compile time never poisons the estimates.
+        self._t_base: Optional[float] = None
+        self._t_tok: Optional[float] = None
+        self._t_prefill: Optional[float] = None
+        self._seen_traces: set = set()
         self.ticks = 0
         self.deadline_misses = 0
         self.tokens_out = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
     # ---- client API ----
     def submit(self, req: Request):
@@ -234,7 +322,10 @@ class PagedScheduler:
     def stats(self) -> dict:
         s = self.bm.stats()
         s.update(ticks=self.ticks, deadline_misses=self.deadline_misses,
-                 tokens_out=self.tokens_out)
+                 tokens_out=self.tokens_out, spec_drafted=self.spec_drafted,
+                 spec_accepted=self.spec_accepted,
+                 accept_rate=self.spec_accepted / self.spec_drafted
+                 if self.spec_drafted else 0.0)
         return s
 
     # ---- internals ----
@@ -246,6 +337,7 @@ class PagedScheduler:
                 break  # pool full: keep FIFO order, retry next tick
             self.queue.pop(0)
             s = len(req.prompt)
+            self._rngs.setdefault(req.rid, S.seq_rng(self.seed, req.rid))
             # replay at least the last prompt token: its logits seed decode
             # even when the whole prompt was a prefix-cache hit
             self.active.append(_Seq(
@@ -262,37 +354,128 @@ class PagedScheduler:
                 t[i, : len(blks)] = blks  # the prefix of the table
         return jnp.asarray(t)
 
-    def _decode_tick(self):
-        rows: list[Optional[_Seq]] = [None] * self.n_slots
-        for i, sq in enumerate([s for s in self.active if s.decoding][: self.n_slots]):
-            rows[i] = sq
-        if not any(sq is not None for sq in rows):
+    # ---- speculative budget / cost model (DESIGN.md §14) ----
+    def _k_budget(self, budget_s: float) -> int:
+        """0, 1 (probe) or spec_max_k.  The verify window is a FIXED
+        T = spec_max_k+1 bucket whenever any row drafts: small-T steps are
+        weight-bound so padded slots are nearly free, and two shapes
+        (T=1, T=window) keep the jit trace count — and therefore compile
+        pauses under the deadline — bounded.  The window has one fixed
+        marginal cost, so the budget decision is all-or-nothing.  Cold
+        start is conservative: no base estimate -> no speculation; a base
+        but no marginal estimate -> probe once to learn the window cost."""
+        if not self.spec or self._t_base is None:
+            return 0
+        spare = budget_s - self._t_base
+        if spare <= 0:
+            return 0
+        if self._t_tok is None:
+            return 1  # probe: learn the window's marginal cost
+        if 0.9 * spare >= self._t_tok * self.spec_max_k:
+            return self.spec_max_k
+        return 0
+
+    def _observe_step(self, t: int, n_blk: int, dt: float):
+        key = ("d", t, n_blk)
+        if key not in self._seen_traces:
+            self._seen_traces.add(key)  # first hit includes compile: discard
             return
-        toks = np.zeros((self.n_slots, 1), np.int32)
-        pos = np.full((self.n_slots, 1), -1, np.int32)
+        if t == 1:
+            self._t_base = dt if self._t_base is None else 0.7 * self._t_base + 0.3 * dt
+        elif self._t_base is not None:
+            marg = max(dt - self._t_base, 1e-9) / (t - 1)
+            self._t_tok = marg if self._t_tok is None else 0.7 * self._t_tok + 0.3 * marg
+
+    def _draft_for(self, sq: _Seq, k_cap: int) -> list[int]:
+        """Per-sequence draft: k_v adapts to the acceptance EMA the way the
+        paper adapts q_v to observed arrivals, capped by the tick budget
+        and by the admission reservation (never draft past max_new - 1 so
+        every written position stays inside the reserved blocks)."""
+        k_lim = min(k_cap, self.spec_max_k, sq.max_new - len(sq.out) - 1)
+        if k_lim <= 0:
+            return []
+        k_v = int(round(sq.accept_ema * k_lim))
+        if k_v == 0 and sq.since_spec >= 32:
+            k_v = 1  # periodic probe: an EMA at zero must be able to recover
+        if k_v == 0:
+            return []
+        hist = np.concatenate(
+            [sq.prompt, np.asarray(sq.out + [sq.last_tok], np.int32)])
+        return self.drafter.draft(hist, k_v)
+
+    def _decode_tick(self, budget_s: float = float("inf")):
+        """One combined decode+verify step for every decoding row.  Row i
+        carries [last_tok, d_1..d_k] at positions [n_ctx..n_ctx+k]; logits
+        row j is the model's distribution for position n_ctx+j+1.  k=0
+        degenerates to the PR 8 plain decode tick, so decode ships a token
+        every tick no matter what the budget says."""
+        rows_l = [s for s in self.active if s.decoding][: self.n_slots]
+        rows: list[Optional[_Seq]] = [None] * self.n_slots
+        for i, sq in enumerate(rows_l):
+            rows[i] = sq
+        if not rows_l:
+            return
+        k_cap = self._k_budget(budget_s)
+        drafts = [self._draft_for(sq, k_cap) if sq is not None else []
+                  for sq in rows]
+        k_max = max(len(d) for d in drafts)
+        # exactly two step shapes ever exist: plain T=1 and the full verify
+        # window (see _k_budget) — shorter drafts ride in the window with
+        # -1 position padding
+        t = 1 if k_max == 0 else _bucket(1 + self.spec_max_k)
+        toks = np.zeros((self.n_slots, t), np.int32)
+        pos = np.full((self.n_slots, t), -1, np.int32)
         for i, sq in enumerate(rows):
             if sq is None:
                 continue
-            if sq.n_ctx // self.block_size >= len(sq.sb.blocks):
+            d = drafts[i]
+            while (sq.n_ctx + len(d)) // self.block_size >= len(sq.sb.blocks):
                 self.bm.append_block(sq.sb)  # infallible: reserved at admit
-            toks[i, 0] = sq.last_tok
-            pos[i, 0] = sq.n_ctx  # write slot of the incoming token
-        n_blk = _bucket(max(len(sq.sb.blocks) for sq in rows if sq is not None))
-        logits, self.pool = _paged_step_jit(
+            toks[i, : 1 + len(d)] = [sq.last_tok] + d
+            pos[i, : 1 + len(d)] = np.arange(sq.n_ctx, sq.n_ctx + 1 + len(d))
+        n_blk = _bucket(max(len(sq.sb.blocks) for sq in rows_l))
+        t0 = time.perf_counter()
+        logits, self.pool = _verify_jit(
             self.params, self.cfg, self.pool, self._tables(rows, n_blk),
             jnp.asarray(toks), jnp.asarray(pos),
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], -1), np.int32)
+        lg = np.asarray(logits[:, :, : self.cfg.vocab])  # sync point
+        self._observe_step(t, n_blk, time.perf_counter() - t0)
         for i, sq in enumerate(rows):
             if sq is None:
                 continue
-            sq.out.append(int(sq.last_tok))
-            sq.n_ctx += 1
-            sq.last_tok = int(nxt[i])
-            self.tokens_out += 1
+            d = drafts[i]
+            rng = self._rngs[sq.rid]
+            emitted = [int(sq.last_tok)]
+            a = 0
+            nxt: Optional[int] = None
+            for dj in d:
+                ok, tok = S.spec_accept(dj, lg[i, a], self.sampling, rng)
+                if not ok:
+                    nxt = tok  # the distribution-exact correction
+                    break
+                a += 1
+                emitted.append(int(dj))
+            if nxt is None:  # all accepted (or no draft): bonus position
+                nxt = S.sample(lg[i, a], self.sampling, rng)
+            if d:
+                beta = 0.3
+                sq.accept_ema = (1 - beta) * sq.accept_ema + beta * (a / len(d))
+                sq.since_spec = 0
+                self.spec_drafted += len(d)
+                self.spec_accepted += a
+            else:
+                sq.since_spec += 1
+            sq.out.extend(emitted)
+            sq.n_ctx += len(emitted)
+            sq.last_tok = int(nxt)
+            self.tokens_out += len(emitted)
+            if len(d) > a:  # rejected tail: drop its K/V blocks, O(1) host work
+                self.bm.rewind(sq.sb, sq.n_ctx)
             if len(sq.out) >= sq.max_new:
                 self.bm.retire(sq.sb)
                 self.active.remove(sq)
+                self._rngs.pop(sq.rid, None)
                 self.finished.append(Finished(sq.rid, sq.out))
 
     def _prefill_chunk(self, sq: _Seq):
@@ -309,6 +492,7 @@ class PagedScheduler:
         w = np.arange(c0, c1)
         wpos[0, : c1 - c0] = np.where(w >= sq.sb.reused_len, w, -1)
         n_blk = _bucket(self.bm.n_blocks_for(c1))
+        t0 = time.perf_counter()
         logits, self.pool = _paged_step_jit(
             self.params, self.cfg, self.pool, self._tables([sq], n_blk),
             jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(wpos),
@@ -316,13 +500,28 @@ class PagedScheduler:
         sq.prefilled = c1
         self.bm.mark_written(sq.sb, c1)
         if c1 == s:  # prompt complete: last position's logits seed decode
-            sq.last_tok = int(jnp.argmax(logits[0, c1 - c0 - 1, : self.cfg.vocab]))
+            lg = np.asarray(logits[0, c1 - c0 - 1, : self.cfg.vocab])
+            sq.last_tok = S.sample(lg, self.sampling, self._rngs[sq.rid])
+        else:
+            jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        key = ("p", n_blk)
+        if key in self._seen_traces:  # discard the compile-laden first hit
+            self._t_prefill = (dt if self._t_prefill is None
+                               else 0.7 * self._t_prefill + 0.3 * dt)
+        else:
+            self._seen_traces.add(key)
 
     # ---- the anytime tick ----
     def tick(self):
         t0 = time.perf_counter()
         self._admit()
-        self._decode_tick()
+        # leftover budget for speculation = deadline − elapsed − the cost of
+        # the guaranteed prefill chunk (reserved BEFORE drafting, so
+        # speculation can only spend what prefill provably leaves over)
+        reserve = (self._t_prefill or 0.0) if any(
+            not sq.decoding for sq in self.active) else 0.0
+        self._decode_tick(self.deadline_s - (time.perf_counter() - t0) - reserve)
         first = True
         while True:
             pending = [sq for sq in self.active if not sq.decoding]

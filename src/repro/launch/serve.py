@@ -3,7 +3,9 @@
 Two modes:
 
   batch (default) — initialize (or restore) a model, prefill a batch of
-  prompts, decode greedily with the ring/recurrent cache.  Token ids stay
+  prompts, decode with the ring/recurrent cache (greedy by default;
+  --sampling topk|topp or --temperature switches to on-device stochastic
+  sampling).  Token ids stay
   on device during the timed loop (one host sync at the end) and the decode
   step is warmed before timing so jit compile never lands in `t_gen`.
 
@@ -17,6 +19,12 @@ Two modes:
 
       PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
           --reduced --trace --n-requests 12 --capacity 2048
+
+  --spec — the speculative-decoding bench (DESIGN.md §14): replay paged
+  traces with speculation on vs off across acceptance regimes (high =
+  repetitive/code-like prompts under greedy decoding, medium = mixed
+  random prompts, low = adversarial high-temperature sampling) and emit
+  BENCH_spec.json with the high-regime speedup as the headline.
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.models import model as M
 from repro.models.kvcache import init_cache
+from repro.launch.sampling import SamplingParams
 from repro.launch.scheduler import DecodeScheduler, PagedScheduler, Request
 
 
@@ -40,19 +49,27 @@ from repro.launch.scheduler import DecodeScheduler, PagedScheduler, Request
 # ==========================================================================
 def gen_trace(rng, n_requests: int, rate: float, vocab: int,
               prompt_lens=(24, 48, 96), max_new: int = 8,
-              shared_prefix: int = 32, p_shared: float = 0.5):
+              shared_prefix: int = 32, p_shared: float = 0.5,
+              repetitive: bool = False, motif_len: int = 8):
     """Synthetic many-user trace: Poisson arrivals, mixed prompt lengths,
     and a shared system-prompt prefix on ~p_shared of requests (the prefix
-    cache's workload).  Returns [(arrival_s, Request)] sorted by arrival."""
+    cache's workload).  `repetitive` tiles each prompt from a short
+    per-request motif — the code-like high-acceptance regime where the
+    n-gram drafter has real material.  Returns [(arrival_s, Request)]
+    sorted by arrival."""
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
     prefix = rng.integers(0, vocab, shared_prefix).astype(np.int32)
     trace = []
     for i in range(n_requests):
         s = int(rng.choice(prompt_lens))
-        body = rng.integers(0, vocab, s).astype(np.int32)
-        if rng.random() < p_shared:
-            n = min(shared_prefix, s)
-            body[:n] = prefix[:n]
+        if repetitive:
+            motif = rng.integers(0, vocab, motif_len).astype(np.int32)
+            body = np.tile(motif, -(-s // motif_len))[:s]
+        else:
+            body = rng.integers(0, vocab, s).astype(np.int32)
+            if rng.random() < p_shared:
+                n = min(shared_prefix, s)
+                body[:n] = prefix[:n]
         trace.append((float(arrivals[i]), Request(i, body, max_new)))
     return trace
 
@@ -127,12 +144,51 @@ def replay(sch, trace, deadline_s: float, max_ticks: int = 200_000) -> dict:
         st = sch.stats()
         out["prefix_hit_rate"] = st["hit_rate"]
         out["evictions"] = st["evictions"]
+        out["accept_rate"] = st["accept_rate"]
+        out["spec_drafted"] = st["spec_drafted"]
+        out["spec_accepted"] = st["spec_accepted"]
     return out
 
 
+def sampling_from_args(args) -> SamplingParams:
+    """--sampling greedy|topk|topp -> SamplingParams.  The non-greedy modes
+    default to temperature 1.0 when --temperature is left at 0; --sampling
+    greedy with --temperature > 0 is plain temperature sampling (the batch
+    driver's historical contract)."""
+    temp = args.temperature if args.temperature > 0 else 1.0
+    if args.sampling == "topk":
+        return SamplingParams(temperature=temp, top_k=args.top_k)
+    if args.sampling == "topp":
+        return SamplingParams(temperature=temp, top_p=args.top_p)
+    return SamplingParams(temperature=args.temperature)
+
+
+def _device_sample(key, logits, sp: SamplingParams):
+    """Device-side analogue of sampling.sample for the batch loop, where
+    token ids stay on device through the timed region: same temperature/
+    top-k/top-p filter semantics in jnp (float32 instead of float64)."""
+    lg = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k:
+        kth = jax.lax.top_k(lg, sp.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    if sp.top_p < 1.0:
+        srt = jnp.sort(lg, axis=-1)[..., ::-1]
+        p = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(p, axis=-1)
+        # keep the smallest prefix whose cumulative prob reaches top_p:
+        # token j survives iff the mass BEFORE it is still under top_p
+        keep = (cum - p) < sp.top_p
+        thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        lg = jnp.where(lg < thr, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1)
+
+
 def run_trace(cfg, params, args) -> dict:
-    rng = np.random.default_rng(args.seed + 1)
+    # the arrival stream is a function of --seed ALONE (recorded in the
+    # artifact): reruns with the same seed replay the identical trace
+    rng = np.random.default_rng(args.seed)
     max_new = args.gen
+    sp = sampling_from_args(args)
     trace = gen_trace(rng, args.n_requests, args.rate, cfg.vocab,
                       max_new=max_new)
     deadline_s = args.deadline_ms / 1e3
@@ -142,11 +198,15 @@ def run_trace(cfg, params, args) -> dict:
         return PagedScheduler(cfg, params, n_slots=args.batch,
                               n_blocks=n_blocks, block_size=args.block_size,
                               chunk_tokens=args.chunk,
-                              deadline_ms=args.deadline_ms)
+                              deadline_ms=args.deadline_ms,
+                              sampling=sp, seed=args.seed)
 
     def dense():
+        # the slot-scheduler fallback takes the SAME sampling params, so
+        # non-greedy serving isn't paged-only (ssm/hybrid/encdec families)
         return DecodeScheduler(cfg, params, n_slots=args.batch,
-                               max_len=args.capacity)
+                               max_len=args.capacity,
+                               sampling=sp, seed=args.seed)
 
     results = {}
     for name, mk in (("paged", paged), ("dense", dense)):
@@ -165,6 +225,7 @@ def run_trace(cfg, params, args) -> dict:
             "block_size": args.block_size, "chunk": args.chunk,
             "deadline_ms": args.deadline_ms,
             "kernel_impl": cfg.kernel_impl,
+            "seed": args.seed, "sampling": args.sampling,
         },
         "paged": results["paged"],
         "dense": results["dense"],
@@ -173,6 +234,103 @@ def run_trace(cfg, params, args) -> dict:
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=2)
     print(f"[serve:trace] paged/dense speedup {bench['speedup']:.2f}x -> {args.out}")
+    return bench
+
+
+# ==========================================================================
+# Speculative-decoding bench (DESIGN.md §14)
+# ==========================================================================
+REGIMES = {
+    # name -> (repetitive prompts?, sampling) — high feeds the n-gram
+    # drafter code-like repetition under greedy decoding; low is the
+    # adversarial floor: random prompts + hot sampling, acceptance ~ 1/V
+    "high": (True, SamplingParams()),
+    "medium": (False, SamplingParams()),
+    "low": (False, SamplingParams(temperature=2.0)),
+}
+
+
+def _prewarm_spec(cfg, params, args, n_blocks, trace):
+    """Compile every step shape the replay can reach BEFORE timing: the
+    scheduler only ever emits two decode shapes (T=1 and the fixed verify
+    window) times a handful of pow2 table buckets, so compiles — seconds
+    each, fatal to p99 under a 50ms deadline — all land here.  The jits are
+    module-level, so one warm covers every regime and both spec/base."""
+    from repro.launch.scheduler import _bucket, _paged_step_jit, _verify_jit
+    from repro.models.kvcache import init_paged_pool
+    pool = init_paged_pool(cfg, n_blocks, args.block_size)
+    bs = args.block_size
+    max_tok = max(len(r.prompt) for _, r in trace) + args.gen
+    top = _bucket(-(-max_tok // bs))
+    window = _bucket(1 + 7)  # PagedScheduler.spec_max_k default
+    nblk = 1
+    while nblk <= top:
+        tbl = jnp.zeros((args.batch, nblk), jnp.int32)
+        for t in (1, window):
+            toks = jnp.zeros((args.batch, t), jnp.int32)
+            pos = jnp.full((args.batch, t), -1, jnp.int32)
+            lg, _ = _verify_jit(params, cfg, pool, tbl, toks, pos)
+            jax.block_until_ready(lg)
+        ptoks = jnp.zeros((1, args.chunk), jnp.int32)
+        ppos = jnp.full((1, args.chunk), -1, jnp.int32)
+        lg, _ = _paged_step_jit(params, cfg, pool, tbl[:1], ptoks, ppos, ppos)
+        jax.block_until_ready(lg)
+        nblk *= 2
+
+
+def run_spec(cfg, params, args) -> dict:
+    deadline_s = args.deadline_ms / 1e3
+    n_blocks = args.batch * (args.capacity // args.block_size) + 1
+
+    def mk(sp, spec):
+        return PagedScheduler(cfg, params, n_slots=args.batch,
+                              n_blocks=n_blocks, block_size=args.block_size,
+                              chunk_tokens=args.chunk,
+                              deadline_ms=args.deadline_ms,
+                              sampling=sp, seed=args.seed, spec=spec)
+
+    regimes = {}
+    warmed = False
+    for name, (repetitive, sp) in REGIMES.items():
+        rng = np.random.default_rng(args.seed)  # identical arrivals per regime
+        # decode-heavy mix: speculation accelerates decode, so the spec
+        # bench keeps prompts short relative to --gen (the serve bench
+        # already covers the prefill-heavy side)
+        trace = gen_trace(rng, args.n_requests, args.rate, cfg.vocab,
+                          prompt_lens=(16, 32, 64),
+                          max_new=args.gen, repetitive=repetitive)
+        if not warmed:
+            _prewarm_spec(cfg, params, args, n_blocks, trace)
+            warmed = True
+        row = {}
+        for mode, spec in (("spec", True), ("base", False)):
+            replay(mk(sp, spec), trace, deadline_s)  # warmup: compiles land here
+            row[mode] = replay(mk(sp, spec), trace, deadline_s)
+        row["speedup"] = row["spec"]["tok_s"] / max(row["base"]["tok_s"], 1e-9)
+        row["accept_rate"] = row["spec"]["accept_rate"]
+        regimes[name] = row
+        print(f"[serve:spec] {name:6s} spec {row['spec']['tok_s']:8.1f} tok/s  "
+              f"base {row['base']['tok_s']:8.1f} tok/s  "
+              f"{row['speedup']:.2f}x  accept {row['accept_rate']:.2f}  "
+              f"miss {row['spec']['deadline_miss_rate']:.2f}")
+    bench = {
+        "bench": "spec",
+        "config": {
+            "arch": cfg.name, "capacity": args.capacity,
+            "n_requests": args.n_requests, "rate": args.rate,
+            "batch": args.batch, "gen": args.gen,
+            "block_size": args.block_size, "chunk": args.chunk,
+            "deadline_ms": args.deadline_ms,
+            "kernel_impl": cfg.kernel_impl, "seed": args.seed,
+            "accept_rate": regimes["high"]["accept_rate"],
+        },
+        "regimes": regimes,
+        "speedup": regimes["high"]["speedup"],  # headline: high-acceptance
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"[serve:spec] headline spec/base speedup {bench['speedup']:.2f}x "
+          f"-> {args.out}")
     return bench
 
 
@@ -189,17 +347,25 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sampling", choices=("greedy", "topk", "topp"),
+                    default="greedy")
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--top-p", type=float, default=0.9)
     # trace replay mode
     ap.add_argument("--trace", action="store_true",
                     help="replay a Poisson arrival trace, emit BENCH_serve.json")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding regimes bench, emit BENCH_spec.json")
     ap.add_argument("--n-requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
     ap.add_argument("--capacity", type=int, default=2048)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--deadline-ms", type=float, default=50.0)
-    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = "BENCH_spec.json" if args.spec else "BENCH_serve.json"
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -212,9 +378,12 @@ def main(argv=None):
         params = state["params"]
         print(f"[serve] restored step {step}")
 
+    if args.spec:
+        return run_spec(cfg, params, args)
     if args.trace:
         return run_trace(cfg, params, args)
 
+    sp = sampling_from_args(args)
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
     cap = args.prompt_len + args.gen
@@ -244,7 +413,11 @@ def main(argv=None):
     t_prefill = time.time() - t0
 
     logits = logits if logits.ndim == 2 else logits[:, -1]
-    tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+    if not sp.greedy:
+        key, sub = jax.random.split(key)
+        tok = _device_sample(sub, logits[..., : cfg.vocab], sp).astype(jnp.int32)
+    else:
+        tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
     tok = tok[:, None] if tok.ndim == 1 else tok
     # warm the decode step OUTSIDE the timed region (compile-once), then
     # keep token ids on device through the loop — one host sync at the end
@@ -255,9 +428,9 @@ def main(argv=None):
     for g in range(args.gen):
         out.append(tok)
         logits, cache = step_fn(params, cache, tok, jnp.int32(args.prompt_len + g))
-        if args.temperature > 0:
+        if not sp.greedy:
             key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[..., : cfg.vocab] / args.temperature, axis=-1)[:, None].astype(jnp.int32)
+            tok = _device_sample(sub, logits[..., : cfg.vocab], sp)[:, None].astype(jnp.int32)
         else:
             tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)[:, None]
     jax.block_until_ready(tok)

@@ -253,9 +253,15 @@ def gqa_paged(
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Paged GQA step: project + rope, scatter K/V into pool blocks, attend
     to the table's context.  T == 1 is the decode hot path (paged Pallas
-    kernel); T > 1 is a prefill chunk — each query attends to every pool
-    position <= its own (in-chunk causality included, since the chunk's own
-    K/V is written first).  Returns (out [B, T, D], (k_pool, v_pool))."""
+    kernel); T > 1 is a CONTIGUOUS query window — a prefill chunk or a
+    speculative verification window (DESIGN.md §14) — each query attends to
+    every pool position <= its own (in-chunk causality included, since the
+    window's own K/V is written first), on the multi-query paged kernel.
+
+    T > 1 contract: row b's valid positions are positions[b, 0] + i for
+    i < n_q (contiguous), with -1 tail padding; padded/idle query rows
+    return zeros.  Every caller (chunked prefill, verify_step) satisfies
+    this by construction.  Returns (out [B, T, D], (k_pool, v_pool))."""
     b, t, _ = x.shape
     hd = cfg.head_dim_
     hp, _, qmap = resolve_heads(cfg)
@@ -268,27 +274,20 @@ def gqa_paged(
     k_pool = paged_write(k_pool, k, tables, write_positions)
     v_pool = paged_write(v_pool, v, tables, write_positions)
     qmap_arr = jnp.asarray(qmap, jnp.int32)
-    if t == 1:
-        from repro.kernels import ops as kops
+    from repro.kernels import ops as kops
 
+    if t == 1:
         seq_lens = jnp.maximum(positions[:, 0] + 1, 0)  # -1 (idle row) -> 0
         out = kops.paged_decode_attention(
             q, k_pool, v_pool, tables, seq_lens, qmap_arr, impl=cfg.kernel_impl
         )
     else:
-        kc = expand_kv(_gather_context(k_pool, tables), qmap)  # [B, C, Hp, Dh]
-        vc = expand_kv(_gather_context(v_pool, tables), qmap)
-        c = kc.shape[1]
-        mask = jnp.arange(c)[None, None, :] <= positions[..., None]  # [B, T, C]
-        logits = jnp.einsum(
-            "bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32
-        ) / math.sqrt(hd)
-        logits = jnp.where(mask[:, None], logits, NEG_INF)
-        probs = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum(
-            "bhqk,bkhd->bqhd", probs.astype(vc.dtype), vc,
-            preferred_element_type=jnp.float32,
-        ).astype(x.dtype)
+        base_pos = positions[:, 0]  # -1 for idle rows
+        n_q = jnp.sum((positions >= 0).astype(jnp.int32), axis=1)
+        out = kops.paged_verify_attention(
+            q, k_pool, v_pool, tables, base_pos, n_q, qmap_arr,
+            impl=cfg.kernel_impl,
+        )
     out = out * head_mask(hp, cfg.n_heads, out.dtype)
     return dense(out.reshape(b, t, hp * hd), lp["wo"]), (k_pool, v_pool)
 

@@ -328,6 +328,40 @@ class BlockManager:
         sb.hashed.append(False)
         return blk
 
+    def rewind(self, sb: SeqBlocks, n_tokens: int) -> int:
+        """Shrink the sequence's table to cover exactly `n_tokens` positions,
+        returning surplus TAIL blocks to the reservation they were drawn
+        from (DESIGN.md §14).  This is the mis-speculation path: draft K/V
+        written past the accepted length sits in blocks the sequence owns
+        uniquely, so rewind is O(released) host bookkeeping — no pool
+        traffic, no re-prefill.
+
+        Invariants preserved: only unhashed, refcount-1 tail blocks are
+        released (prefix-shared full blocks are hashed and always precede
+        the tail, so they can never be reached — asserted); released blocks
+        go back to the free list and both the sequence's and the manager's
+        reservation counters grow by the same amount, so a later
+        `append_block` for the same worst case stays infallible.  Returns
+        the number of blocks released.
+        """
+        keep = max(self.n_blocks_for(n_tokens), 1) if n_tokens > 0 else 0
+        released = 0
+        while len(sb.blocks) > keep:
+            blk = sb.blocks[-1]
+            assert not sb.hashed[-1] and blk not in self._blk2hash, (
+                "rewind reached a hashed (shareable) block"
+            )
+            assert self._ref[blk] == 1, "rewind reached a shared block"
+            sb.blocks.pop()
+            sb.hashed.pop()
+            del self._ref[blk]
+            self._pending.discard(blk)
+            self._free.append(blk)
+            sb.reserved += 1
+            self._reserved += 1
+            released += 1
+        return released
+
     def mark_written(self, sb: SeqBlocks, n_tokens_written: int) -> None:
         """Clear `pending` on blocks whose K/V is now fully in the pool."""
         for i in range(n_tokens_written // self.block_size):

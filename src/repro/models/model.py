@@ -640,6 +640,35 @@ def paged_step(
     return _mask_padded_vocab(logits, cfg), new_pool
 
 
+def verify_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    pool: dict,
+    tables: jax.Array,  # [B, NBLK] int32
+    tokens: jax.Array,  # [B, T]  T = 1 + K: last accepted token + K drafts
+    positions: jax.Array,  # [B, T] contiguous from positions[:, 0]; -1 = pad
+) -> tuple[jax.Array, dict]:
+    """Score a draft window in ONE forward (DESIGN.md §14).
+
+    Row b carries its last accepted token at positions[b, 0] followed by
+    K drafted tokens; -1 tail entries pad shorter per-sequence windows
+    (their K/V writes are suppressed and their logits are dead).  logits
+    [B, T, Vp]: index j is the model's distribution for position
+    positions[b, j] + 1, i.e. the verdict on draft j (and index n_accepted
+    seeds the bonus token).  This IS the paged_step T > 1 path — a
+    verification window is a prefill chunk whose tokens happen to be
+    drafts — kept as its own entry point so the scheduler's verification
+    trace is distinct in profiles and shared across instances.
+
+    Draft K/V lands in the sequence's OWN tail blocks (never shared ones:
+    sharing covers full prompt blocks only, and drafts write at positions
+    >= the prompt length), so a rejected draft costs nothing to undo —
+    rows past the accepted length are masked by every later step and the
+    block accounting is rewound host-side (`BlockManager.rewind`).
+    """
+    return paged_step(params, cfg, pool, tables, tokens, positions)
+
+
 # ==========================================================================
 # Bulk prefill: one flash-path forward fills the whole cache
 # ==========================================================================

@@ -84,6 +84,69 @@ def test_block_manager_admission_gate():
     assert bm.available() == 0
 
 
+def test_block_manager_rewind_across_block_boundary():
+    """Speculative writes that crossed into freshly appended tail blocks are
+    truncated in O(released) bookkeeping: blocks return to the free list and
+    the reservation is restored, so append_block stays infallible."""
+    bm = BlockManager(n_blocks=8, block_size=4)
+    sb = bm.admit_prompt(list(range(6)), max_new=10)  # 2 blocks + 2 reserved
+    bm.mark_written(sb, 6)
+    assert sb.reserved == 2
+    bm.append_block(sb)
+    bm.append_block(sb)  # draft window spilled across two block boundaries
+    assert sb.reserved == 0 and len(sb.blocks) == 4
+    freed = bm.rewind(sb, 7)  # accepted only 1 of the drafted tokens
+    assert freed == 2 and len(sb.blocks) == 2
+    assert sb.reserved == 2  # reservation restored...
+    bm.append_block(sb)  # ...so regrowth cannot fail
+    assert bm.rewind(sb, 7) == 1
+    # rewind inside the kept tail block is pure bookkeeping: nothing freed
+    assert bm.rewind(sb, 5) == 0 and len(sb.blocks) == 2
+
+
+def test_block_manager_rewind_never_touches_cached_prefix():
+    """A replayed fully-cached prompt shares its full blocks through the
+    LRU; rewind after a rejected draft must release only the sequence's own
+    tail and leave the shared hashed blocks (and their hashes) intact."""
+    bm = BlockManager(n_blocks=10, block_size=4)
+    sb1 = bm.admit_prompt(list(range(8)), max_new=0)
+    bm.mark_written(sb1, 8)
+    shared = list(sb1.blocks)
+    bm.retire(sb1)  # both hashed blocks park in the prefix LRU
+    sb2 = bm.admit_prompt(list(range(8)), max_new=6)  # full-prompt cache hit
+    assert sb2.reused_len == 8 and sb2.blocks == shared
+    bm.append_block(sb2)
+    bm.append_block(sb2)  # speculate 6 tokens past the prompt
+    assert bm.rewind(sb2, 9) == 1  # keep 1 accepted token past the prompt
+    assert sb2.blocks[:2] == shared  # shared prefix untouched
+    with pytest.raises(AssertionError):
+        bm.rewind(sb2, 4)  # reaching INTO the hashed prefix is a bug
+    assert sb2.blocks == shared  # it stopped at the hashed boundary
+    bm.retire(sb2)
+    sb3 = bm.admit_prompt(list(range(8)), max_new=0)
+    assert sb3.reused_len == 8  # prefix cache still intact after the rewind
+
+
+def test_block_manager_rewind_then_reclaim_pool_empty():
+    """rewind + retire leaks nothing: every non-null block ends free or
+    parked in the LRU, the reservation counter returns to zero, and no
+    released block is left pending."""
+    bm = BlockManager(n_blocks=12, block_size=4)
+    sbs = []
+    for i in range(3):
+        sb = bm.admit_prompt(list(range(i, i + 5)), max_new=6)
+        bm.mark_written(sb, 5)
+        bm.append_block(sb)
+        assert bm.rewind(sb, 6) == 1
+        sbs.append(sb)
+    for sb in sbs:
+        bm.retire(sb)
+    st = bm.stats()
+    assert st["live"] == 0 and bm._reserved == 0
+    assert st["free"] + st["cached"] == 11
+    assert not bm._pending
+
+
 # ==========================================================================
 # Paged decode kernel
 # ==========================================================================

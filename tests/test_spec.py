@@ -1,0 +1,285 @@
+"""Deadline-adaptive speculative decoding (ISSUE 10, DESIGN.md §14):
+multi-query verification kernel parity, rejection-sampling exactness, the
+n-gram drafter, paged-KV rewind under speculation, and the greedy pin —
+speculative output must be token-for-token identical to the plain paged
+scheduler."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.paged_decode_attention import (
+    paged_verify_attention,
+    paged_verify_ref,
+)
+from repro.launch import sampling as S
+from repro.launch.scheduler import NGramDrafter, PagedScheduler, Request, _Seq
+from repro.models import model as M
+
+
+# ==========================================================================
+# Multi-query verification kernel
+# ==========================================================================
+def _verify_case(seed=0, nb=10, bs=8, b=3, t=4, h=8, hkv=2, dh=16,
+                 dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, t, h, dh), dtype)
+    k_pool = jax.random.normal(ks[1], (nb, bs, hkv, dh), dtype)
+    v_pool = jax.random.normal(ks[2], (nb, bs, hkv, dh), dtype)
+    # permuted physical blocks; logical order only exists in the table
+    tables = jnp.asarray([[3, 7, 1], [5, 2, 8], [9, 4, 6]], jnp.int32)
+    # row 0: full window at a deep base; row 1: ragged (2 of 4 queries
+    # live); row 2: idle (n_q = 0, base -1 like a padded scheduler row)
+    base = jnp.asarray([20, 10, -1], jnp.int32)
+    n_q = jnp.asarray([4, 2, 0], jnp.int32)
+    qmap = jnp.asarray([i // (h // hkv) for i in range(h)], jnp.int32)
+    return q, k_pool, v_pool, tables, base, n_q, qmap
+
+
+def test_verify_kernel_matches_oracle():
+    q, kp, vp, tbl, base, n_q, qmap = _verify_case()
+    out = paged_verify_attention(q, kp, vp, tbl, base, n_q, qmap, interpret=True)
+    ref = paged_verify_ref(q, kp, vp, tbl, base, n_q, qmap)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    # dead query rows and the idle sequence are exactly zero
+    np.testing.assert_array_equal(np.asarray(out[1, 2:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)
+
+
+def test_verify_kernel_matches_dense_kernel():
+    """Each query position j attends over [0, base+j] — gather the pool
+    through the (permuted) table into the dense rectangle and the dense
+    decode kernel must agree position by position."""
+    q, kp, vp, tbl, base, n_q, qmap = _verify_case()
+    b, t, h, dh = q.shape
+    bs = kp.shape[1]
+    c = tbl.shape[1] * bs
+    k = jnp.take(kp, tbl.reshape(-1), axis=0).reshape(b, c, -1, dh)
+    v = jnp.take(vp, tbl.reshape(-1), axis=0).reshape(b, c, -1, dh)
+    k = jnp.take(k, qmap, axis=2)
+    v = jnp.take(v, qmap, axis=2)
+    out = paged_verify_attention(q, kp, vp, tbl, base, n_q, qmap, interpret=True)
+    for j in range(t):
+        valid = jnp.arange(c)[None, :] <= (base + j)[:, None]
+        dense = decode_attention(q[:, j], k, v, valid, bk=8, interpret=True)
+        live = np.asarray(n_q) > j
+        np.testing.assert_allclose(
+            np.asarray(out[:, j])[live], np.asarray(dense)[live],
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_verify_kernel_t1_matches_decode_semantics():
+    """A T=1 verify window is exactly a decode step with seq_len base+1."""
+    from repro.kernels.paged_decode_attention import paged_decode_attention
+    q, kp, vp, tbl, base, n_q, qmap = _verify_case(t=1)
+    n_q = jnp.minimum(n_q, 1)
+    out = paged_verify_attention(q, kp, vp, tbl, base, n_q, qmap, interpret=True)
+    lens = jnp.where(n_q > 0, base + 1, 0)
+    dec = paged_decode_attention(q[:, 0], kp, vp, tbl, lens, qmap, interpret=True)
+    live = np.asarray(n_q) > 0
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0])[live], np.asarray(dec)[live], rtol=1e-5, atol=1e-5)
+
+
+# ==========================================================================
+# Sampling + speculative rejection sampling
+# ==========================================================================
+def test_probs_filters():
+    logits = np.array([3.0, 2.0, 1.0, 0.0])
+    p = S.probs(logits, S.SamplingParams(temperature=1.0))
+    np.testing.assert_allclose(p.sum(), 1.0)
+    assert np.all(np.diff(p) < 0)  # monotone in logits
+    pk = S.probs(logits, S.SamplingParams(temperature=1.0, top_k=2))
+    assert pk[2] == 0.0 and pk[3] == 0.0 and pk[0] > 0 and pk[1] > 0
+    pp = S.probs(logits, S.SamplingParams(temperature=1.0, top_p=0.6))
+    assert pp[0] > 0 and pp[3] == 0.0  # nucleus keeps the smallest cover
+
+
+def test_spec_accept_greedy_is_argmax_equality():
+    logits = np.array([0.0, 5.0, 1.0])
+    sp = S.SamplingParams()  # greedy
+    rng = np.random.default_rng(0)
+    ok, tok = S.spec_accept(1, logits, sp, rng)
+    assert ok and tok == 1
+    ok, tok = S.spec_accept(0, logits, sp, rng)
+    assert not ok and tok == 1  # correction is the argmax
+
+
+def test_spec_accept_distribution_exact():
+    """With a deterministic drafter, accept-or-resample must emit tokens
+    distributed EXACTLY as the target distribution, for every draft
+    choice — the Leviathan identity specialized to q = delta_d."""
+    rng0 = np.random.default_rng(0)
+    logits = rng0.standard_normal(8) * 2.0
+    sp = S.SamplingParams(temperature=0.7, top_k=6)
+    p = S.probs(logits, sp)
+    n = 20_000
+    for draft in (int(np.argmax(p)), int(np.argmin(p)), 3):
+        rng = np.random.default_rng(draft + 1)
+        counts = np.zeros(8)
+        for _ in range(n):
+            _, tok = S.spec_accept(draft, logits, sp, rng)
+            counts[tok] += 1
+        np.testing.assert_allclose(counts / n, p, atol=4.5 * np.sqrt(0.25 / n))
+
+
+def test_seq_rng_reproducible_and_independent():
+    a = S.seq_rng(1, 2).random(4)
+    b = S.seq_rng(1, 2).random(4)
+    c = S.seq_rng(1, 3).random(4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ==========================================================================
+# N-gram drafter
+# ==========================================================================
+def test_drafter_prompt_lookup():
+    d = NGramDrafter()
+    h = np.array([1, 2, 3, 4, 1, 2, 3], np.int32)
+    assert d.draft(h, 4) == [4, 1, 2, 3]  # trigram [1,2,3] continues with 4...
+    assert d.draft(h, 2) == [4, 1]  # ...truncated to k
+
+
+def test_drafter_prefers_most_recent_match():
+    d = NGramDrafter()
+    h = np.array([1, 2, 9, 5, 1, 2, 7, 5, 1, 2], np.int32)
+    assert d.draft(h, 1) == [7]  # bigram [1,2] last seen at index 4, not 0
+
+
+def test_drafter_backs_off_to_shorter_ngrams():
+    h = np.array([9, 8, 7, 3, 6, 5, 3], np.int32)
+    # opt-in unigram backoff: no tri/bigram repeat; unigram 3 -> [6, 5]
+    assert NGramDrafter(min_n=1).draft(h, 2) == [6, 5]
+    # the default demands bigram evidence — a lone repeated token is noise
+    assert NGramDrafter().draft(h, 2) == []
+
+
+def test_drafter_no_match_returns_empty():
+    d = NGramDrafter()
+    assert d.draft(np.array([1, 2, 3, 4], np.int32), 3) == []
+    assert d.draft(np.array([5], np.int32), 3) == []
+    assert d.draft(np.array([1, 1, 2], np.int32), 0) == []
+
+
+# ==========================================================================
+# Anytime k_v adaptation (budget rule + reservation cap)
+# ==========================================================================
+def _mk_sched(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("n_blocks", 64)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("chunk_tokens", 8)
+    kw.setdefault("deadline_ms", 1e9)
+    kw.setdefault("spec", True)
+    return PagedScheduler(cfg, params, **kw)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(get_config("qwen2_0_5b").reduced(), dtype="float32")
+    return cfg, M.init(jax.random.PRNGKey(0), cfg)
+
+
+def test_k_budget_rule(qwen):
+    cfg, params = qwen
+    sch = _mk_sched(cfg, params)
+    assert sch._k_budget(1.0) == 0  # cold: no base-cost estimate yet
+    sch._t_base = 0.010
+    assert sch._k_budget(0.005) == 0  # budget below one base step
+    assert sch._k_budget(0.025) == 1  # no marginal estimate: probe one token
+    sch._t_tok = 0.002
+    # window cost = 7 * 2ms: all-or-nothing — 16ms budget leaves only 6ms
+    assert sch._k_budget(0.016) == 0
+    assert sch._k_budget(0.030) == sch.spec_max_k  # 0.9*20ms covers 14ms
+    assert sch._k_budget(1.0) == sch.spec_max_k
+    assert sch._k_budget(-0.001) == 0  # deadline already blown -> plain tick
+    sch.spec = False
+    assert sch._k_budget(1.0) == 0
+
+
+def test_draft_len_respects_reservation_and_ema(qwen):
+    cfg, params = qwen
+    sch = _mk_sched(cfg, params)
+    sb = sch.bm.admit_prompt(list(range(8)), max_new=4)
+    sq = _Seq(rid=0, prompt=np.arange(8, dtype=np.int32), max_new=4, sb=sb,
+              prefilled=8, out=[7, 5], last_tok=6, n_ctx=10)
+    sch._rngs[0] = S.seq_rng(0, 0)
+    # reservation cap: max_new - len(out) - 1 = 1, regardless of budget k
+    assert len(sch._draft_for(sq, 8)) <= 1
+    sq.out = [7, 5, 6]
+    assert sch._draft_for(sq, 8) == []  # last token: never draft past max_new-1
+    # a collapsed acceptance EMA shuts drafting off until the probe clock
+    sq.out = []
+    sq.n_ctx = 8
+    sq.accept_ema = 0.0
+    sq.since_spec = 0
+    assert sch._draft_for(sq, 8) == []
+    sq.since_spec = 32
+    sq.prompt = np.array([1, 2, 3, 1, 2], np.int32)  # drafter has material
+    sq.last_tok = 3
+    assert len(sch._draft_for(sq, 8)) == 1  # probe reopens speculation
+
+
+def test_zero_deadline_keeps_no_stall_pin(qwen):
+    """deadline 0 with speculation enabled == the PR 8 strict schedule:
+    decode + exactly one prefill chunk per tick, k_v pinned to 0."""
+    cfg, params = qwen
+    rng = np.random.default_rng(3)
+    sch = _mk_sched(cfg, params, deadline_ms=0.0)
+    sch.submit(Request(0, rng.integers(0, cfg.vocab, 5).astype(np.int32), 12))
+    for _ in range(3):
+        sch.tick()
+    n0 = len(sch.active[0].out)
+    assert n0 == 2
+    sch.submit(Request(1, rng.integers(0, cfg.vocab, 40).astype(np.int32), 3))
+    for k in range(1, 5):
+        sch.tick()
+        assert len(sch.active[0].out) == n0 + k  # one token every tick
+        assert not sch.active[1].decoding
+    sch.run_to_completion()
+    assert sch.spec_drafted == 0  # zero budget -> speculation never ran
+
+
+# ==========================================================================
+# Greedy pin: speculative == plain paged scheduler, token for token
+# ==========================================================================
+def _run_sched(cfg, params, spec, sampling=S.SamplingParams(), seed=0):
+    sch = _mk_sched(cfg, params, spec=spec, sampling=sampling, seed=seed)
+    rng = np.random.default_rng(0)
+    motif = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    for rid in range(3):
+        prompt = np.tile(motif, 8)[: 14 + 5 * rid]
+        sch.submit(Request(rid, prompt, 10))
+    got = sch.run_to_completion()
+    return got, sch
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "minicpm3_4b"])
+def test_greedy_speculation_matches_plain(arch):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    plain, _ = _run_sched(cfg, params, spec=False)
+    spec, sch = _run_sched(cfg, params, spec=True)
+    assert spec == plain
+    st = sch.stats()
+    assert st["spec_drafted"] > 0 and st["spec_accepted"] > 0
+    assert st["live"] == 0  # every block reclaimed after rewinds + retires
+    assert st["free"] + st["cached"] == sch.bm.n_blocks - 1
+
+
+def test_sampled_speculation_deterministic_and_complete(qwen):
+    """Non-greedy speculation: same seed -> identical outputs; every
+    sequence reaches exactly max_new tokens despite rewinds."""
+    cfg, params = qwen
+    sp = S.SamplingParams(temperature=1.0)
+    a, sa = _run_sched(cfg, params, spec=True, sampling=sp, seed=11)
+    b, _ = _run_sched(cfg, params, spec=True, sampling=sp, seed=11)
+    assert a == b
+    assert all(len(v) == 10 for v in a.values())
+    assert sa.stats()["live"] == 0
